@@ -1,0 +1,51 @@
+"""Shared helpers for the paper-artifact benchmarks."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.dataset import TuningDataset, build_model_dataset, harvest_problems
+
+OUT_DIR = Path(__file__).resolve().parent.parent / "experiments" / "paper"
+
+
+def out_path(name: str) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    return OUT_DIR / name
+
+
+def save_json(name: str, obj) -> Path:
+    p = out_path(name)
+    p.write_text(json.dumps(obj, indent=1, default=_np_default))
+    return p
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+_DATASET_CACHE: dict[tuple, TuningDataset] = {}
+
+
+def arch_dataset(device_name: str = "tpu_v5e", max_problems: int = 300) -> TuningDataset:
+    """Analytic benchmark table: GEMMs harvested from the 10 assigned archs,
+    topped up with the paper-flavoured synthetic mix to ``max_problems``
+    (the paper's dataset is 300 size-sets from 3 networks)."""
+    from repro.core.dataset import synthetic_problems
+
+    key = (device_name, max_problems)
+    if key not in _DATASET_CACHE:
+        problems = harvest_problems(max_problems=max_problems)
+        if len(problems) < max_problems:
+            extra = [p for p in synthetic_problems(2 * max_problems) if p not in set(problems)]
+            problems = sorted(problems + extra[: max_problems - len(problems)])
+        _DATASET_CACHE[key] = build_model_dataset(problems, device_name=device_name)
+    return _DATASET_CACHE[key]

@@ -1,0 +1,52 @@
+"""Paper Fig. 2: how often each kernel configuration is optimal.
+
+Reproduces the long-tail phenomenon: a few configs win often, but many
+distinct configs are best at least once — the reason naive Top-N pruning
+loses performance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import arch_dataset, save_json
+
+
+def run(device_name: str = "tpu_v5e", quick: bool = False) -> dict:
+    ds = arch_dataset(device_name, max_problems=120 if quick else 300)
+    winners = ds.perf.argmax(axis=1)
+    counts = np.bincount(winners, minlength=ds.perf.shape[1])
+    order = np.argsort(-counts)
+    top = [
+        {"config": ds.configs[i].name(), "best_count": int(counts[i])}
+        for i in order[:10]
+        if counts[i] > 0
+    ]
+    n_distinct = int((counts > 0).sum())
+    result = {
+        "device": device_name,
+        "n_problems": len(ds.problems),
+        "n_configs": len(ds.configs),
+        "n_distinct_winners": n_distinct,
+        "top10": top,
+    }
+    save_json(f"fig2_best_counts_{device_name}.json", result)
+    return result
+
+
+def main(quick: bool = False) -> list[tuple[str, float, str]]:
+    rows = []
+    for dev in ("tpu_v5e", "tpu_v4"):
+        r = run(dev, quick=quick)
+        rows.append(
+            (
+                f"fig2_distinct_winners_{dev}",
+                float(r["n_distinct_winners"]),
+                f"top1={r['top10'][0]['best_count']}x of {r['n_problems']} problems",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

@@ -1,0 +1,45 @@
+"""Paper Fig. 3: PCA variance concentration of the benchmark dataset.
+
+Determines how many deployed kernels may encapsulate the dataset's variance
+(the paper finds 80% in 4 components, 90% in 6-7, 95% in 11-14).
+"""
+from __future__ import annotations
+
+from repro.core.normalize import normalize
+from repro.core.pca import PCA
+
+from .common import arch_dataset, save_json
+
+
+def run(device_name: str = "tpu_v5e", quick: bool = False) -> dict:
+    ds = arch_dataset(device_name, max_problems=120 if quick else 300)
+    norm = normalize(ds.perf, "standard")
+    pca = PCA().fit(norm)
+    result = {
+        "device": device_name,
+        "ratio_head": [float(r) for r in pca._full_ratio[:15]],
+        "n_for_80": pca.n_components_for_variance(0.80),
+        "n_for_90": pca.n_components_for_variance(0.90),
+        "n_for_95": pca.n_components_for_variance(0.95),
+    }
+    save_json(f"fig3_pca_variance_{device_name}.json", result)
+    return result
+
+
+def main(quick: bool = False) -> list[tuple[str, float, str]]:
+    rows = []
+    for dev in ("tpu_v5e", "tpu_v4"):
+        r = run(dev, quick=quick)
+        rows.append(
+            (
+                f"fig3_pca_components_{dev}",
+                float(r["n_for_90"]),
+                f"80%:{r['n_for_80']} 90%:{r['n_for_90']} 95%:{r['n_for_95']} comps",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

@@ -1,0 +1,44 @@
+"""Paper Fig. 4: effect of the four normalization schemes on one problem row."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.normalize import NORMALIZATIONS, normalize
+
+from .common import arch_dataset, save_json
+
+
+def run(device_name: str = "tpu_v5e", quick: bool = False) -> dict:
+    ds = arch_dataset(device_name, max_problems=120 if quick else 300)
+    # the best-performing problem row (paper uses its best input set)
+    row = int(np.argmax(ds.perf.max(axis=1)))
+    raw = ds.perf[row]
+    out = {"device": device_name, "problem": list(ds.problems[row]), "schemes": {}}
+    for scheme in NORMALIZATIONS:
+        v = normalize(raw[None, :], scheme)[0]
+        out["schemes"][scheme] = {
+            "nonzero": int((v > 0).sum()),
+            "mean_nonzero": float(v[v > 0].mean()) if (v > 0).any() else 0.0,
+            "max": float(v.max()),
+        }
+    save_json(f"fig4_normalization_{device_name}.json", out)
+    return out
+
+
+def main(quick: bool = False) -> list[tuple[str, float, str]]:
+    r = run(quick=quick)
+    rows = []
+    for scheme, s in r["schemes"].items():
+        rows.append(
+            (
+                f"fig4_norm_{scheme}_nonzero",
+                float(s["nonzero"]),
+                f"mean_nz={s['mean_nonzero']:.3f}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

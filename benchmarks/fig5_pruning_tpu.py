@@ -1,0 +1,56 @@
+"""Paper Fig. 5: pruning methods x normalizations x n_kernels (TPU device).
+
+The 'AMD R9 Nano' analogue: the analytic TPU-v5e benchmark table over GEMMs
+harvested from the assigned architectures.  Reports the achievable (oracle)
+fraction of optimal performance on the held-out test split.
+"""
+from __future__ import annotations
+
+from repro.core.cluster import CLUSTER_METHODS
+from repro.core.normalize import NORMALIZATIONS
+from repro.core.selection import evaluate_methods
+
+from .common import arch_dataset, save_json
+
+N_RANGE = (4, 6, 8, 11, 15)
+
+
+def run(device_name: str = "tpu_v5e", quick: bool = False) -> dict:
+    ds = arch_dataset(device_name, max_problems=120 if quick else 300)
+    train, test = ds.split(0.25, seed=0)
+    methods = list(CLUSTER_METHODS)
+    norms = list(NORMALIZATIONS) if not quick else ["standard", "sigmoid"]
+    n_range = list(N_RANGE) if not quick else [4, 8]
+    table = evaluate_methods(train, test, n_range, methods, norms)
+    result = {
+        "device": device_name,
+        "fractions": {f"{m}|{nm}|{n}": float(v) for (m, nm, n), v in table.items()},
+    }
+    save_json(f"fig5_pruning_{device_name}.json", result)
+    return result
+
+
+def main(quick: bool = False) -> list[tuple[str, float, str]]:
+    r = run("tpu_v5e", quick=quick)
+    rows = []
+    # headline: best method at 4 kernels and at 8, vs the TopN baseline
+    fr = r["fractions"]
+    for n in (4, 8):
+        items = {k: v for k, v in fr.items() if k.endswith(f"|standard|{n}")}
+        if not items:
+            continue
+        best = max(items, key=items.get)
+        topn = items.get(f"topn|standard|{n}", 0.0)
+        rows.append(
+            (
+                f"fig5_best_at_{n}_kernels",
+                round(items[best] * 100, 2),
+                f"{best.split('|')[0]} vs topn={topn * 100:.1f}%",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

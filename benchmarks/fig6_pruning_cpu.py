@@ -1,0 +1,72 @@
+"""Paper Fig. 6: pruning methods x normalizations x n_kernels — MEASURED CPU.
+
+The i7-6700K analogue: real wall-clock timings of the cache-blocked GEMM on
+this container's host CPU (see repro.core.cpubench).  This is the measured
+counterpart to fig5's analytic-model dataset; the tuning pipeline is
+identical for both data sources.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.core.cpubench import build_cpu_dataset, cpu_problems
+from repro.core.cluster import CLUSTER_METHODS
+from repro.core.dataset import TuningDataset
+from repro.core.normalize import NORMALIZATIONS
+from repro.core.selection import evaluate_methods
+
+from .common import out_path, save_json
+
+_CACHE = out_path("cpu_dataset.npz")
+
+
+def measured_dataset(quick: bool = False, refresh: bool = False) -> TuningDataset:
+    n = 12 if quick else 24
+    if _CACHE.exists() and not refresh:
+        ds = TuningDataset.load(_CACHE)
+        if len(ds.problems) >= n:  # cached quick run must not satisfy a full run
+            return ds
+    ds = build_cpu_dataset(cpu_problems(n), verbose=True)
+    ds.save(_CACHE)
+    return ds
+
+
+def run(quick: bool = False) -> dict:
+    ds = measured_dataset(quick)
+    train, test = ds.split(0.25, seed=0)
+    norms = list(NORMALIZATIONS) if not quick else ["standard", "sigmoid"]
+    n_range = [4, 6, 8, 11, 15] if not quick else [4, 8]
+    table = evaluate_methods(train, test, n_range, list(CLUSTER_METHODS), norms)
+    result = {
+        "device": "host_cpu",
+        "source": "measured",
+        "n_problems": len(ds.problems),
+        "fractions": {f"{m}|{nm}|{n}": float(v) for (m, nm, n), v in table.items()},
+    }
+    save_json("fig6_pruning_cpu.json", result)
+    return result
+
+
+def main(quick: bool = False) -> list[tuple[str, float, str]]:
+    r = run(quick=quick)
+    fr = r["fractions"]
+    rows = []
+    for n in (4, 8):
+        items = {k: v for k, v in fr.items() if k.endswith(f"|standard|{n}")}
+        if not items:
+            continue
+        best = max(items, key=items.get)
+        topn = items.get(f"topn|standard|{n}", 0.0)
+        rows.append(
+            (
+                f"fig6_cpu_best_at_{n}_kernels",
+                round(items[best] * 100, 2),
+                f"{best.split('|')[0]} vs topn={topn * 100:.1f}% (measured)",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

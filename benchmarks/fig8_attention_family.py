@@ -1,0 +1,63 @@
+"""Beyond-paper: the pipeline applied to the flash-attention kernel family.
+
+The paper's §7 hopes the method extends "to more complicated kernels".  This
+benchmark quantifies that on the Pallas flash-attention space: oracle and
+classifier fractions when deploying k of the 12 (block_q, block_kv) configs
+for the attention shapes the 10 architectures actually launch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.attnmodel import (
+    attn_problem_features,
+    build_attn_matrix,
+    harvest_attn_problems,
+)
+from repro.core.classify import DecisionTreeClassifier
+from repro.core.cluster import select_configs
+from repro.core.normalize import normalize
+from repro.kernels.attention import attention_config_space
+
+from .common import save_json
+
+
+def run(quick: bool = False) -> dict:
+    space = list(attention_config_space())
+    problems = harvest_attn_problems()
+    perf = build_attn_matrix(problems)
+    feats = attn_problem_features(problems)
+    norm = normalize(perf, "standard")
+    out = {}
+    for k in (2, 3, 4, 6):
+        chosen = select_configs(norm, k, "pca_kmeans", features=feats)
+        best = perf.max(axis=1)
+        oracle = perf[:, chosen].max(axis=1)
+        labels = perf[:, chosen].argmax(axis=1)
+        tree = DecisionTreeClassifier(max_depth=6).fit(feats, labels)
+        pred = np.clip(tree.predict(feats), 0, len(chosen) - 1)
+        picked = perf[np.arange(len(problems)), [chosen[i] for i in pred]]
+        gm = lambda r: float(np.exp(np.mean(np.log(np.maximum(r / best, 1e-12)))))
+        out[str(k)] = {"oracle": gm(oracle), "classifier": gm(picked)}
+    result = {"n_problems": len(problems), "n_configs": len(space), "fractions": out}
+    save_json("fig8_attention_family.json", result)
+    return result
+
+
+def main(quick: bool = False) -> list[tuple[str, float, str]]:
+    r = run(quick=quick)
+    rows = []
+    for k, v in r["fractions"].items():
+        rows.append(
+            (
+                f"fig8_attn_{k}_kernels",
+                round(v["classifier"] * 100, 2),
+                f"oracle={v['oracle'] * 100:.1f}% over {r['n_problems']} attention shapes",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

@@ -1,0 +1,63 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig5]
+
+Prints ``name,value,derived`` CSV rows (one per headline number) and writes
+full JSON artifacts to experiments/paper/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (
+    fig2_best_counts,
+    fig3_pca_variance,
+    fig4_normalization,
+    fig5_pruning_tpu,
+    fig6_pruning_cpu,
+    fig7_end_to_end,
+    fig8_attention_family,
+    table12_classifiers,
+)
+
+MODULES = {
+    "fig2": fig2_best_counts,
+    "fig3": fig3_pca_variance,
+    "fig4": fig4_normalization,
+    "fig5": fig5_pruning_tpu,
+    "fig6": fig6_pruning_cpu,
+    "table12": table12_classifiers,
+    "fig7": fig7_end_to_end,
+    "fig8": fig8_attention_family,  # beyond-paper: attention kernel family
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced problem counts")
+    ap.add_argument("--only", default=None, choices=sorted(MODULES))
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(MODULES)
+    print("name,value,derived")
+    failures = []
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = MODULES[name].main(quick=args.quick)
+        except Exception as e:  # noqa: BLE001 — report all, fail at the end
+            failures.append((name, repr(e)))
+            print(f"{name},ERROR,{e!r}", flush=True)
+            continue
+        for row in rows:
+            print(",".join(str(x) for x in row), flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

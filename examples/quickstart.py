@@ -1,0 +1,46 @@
+"""Quickstart: the paper's full pipeline in ~40 lines.
+
+  benchmark table -> normalize -> cluster-select kernels -> train classifier
+  -> deploy -> ML-guided dispatch of every matmul in a model.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core.codegen import tree_to_python
+from repro.core.dataset import build_model_dataset, synthetic_problems
+from repro.core.tuner import tune
+from repro.kernels import ops
+
+# 1. A benchmark table: 150 GEMM problems x 210 kernel configs.
+#    (Analytic TPU-v5e model here; measured data plugs in identically —
+#     see repro.core.cpubench for the real host-CPU source.)
+dataset = build_model_dataset(synthetic_problems(150))
+print(f"dataset: {len(dataset.problems)} problems x {len(dataset.configs)} configs")
+
+# 2. The paper's pipeline: PCA+K-means selects 8 kernels to deploy,
+#    a decision tree learns to pick among them at runtime.
+result = tune(dataset, n_kernels=8, method="pca_kmeans", classifier="DecisionTreeA")
+print(f"deployed kernels ({len(result.deployment.configs)}):")
+for cfg in result.deployment.configs:
+    print(f"  {cfg.name()}")
+print(f"oracle fraction of optimal:     {result.oracle_fraction:.1%}")
+print(f"classifier fraction of optimal: {result.classifier_fraction:.1%}")
+
+# 3. The decision tree as launcher code (the paper embeds it as nested ifs):
+print("\n--- generated launcher (first lines) ---")
+print("\n".join(tree_to_python(result.deployment.classifier).splitlines()[:8]))
+
+# 4. Install the deployment: every repro matmul now dispatches through it.
+ops.set_kernel_policy(result.deployment)
+ops.clear_selection_log()
+a = jnp.ones((512, 784), jnp.bfloat16)
+b = jnp.ones((784, 512), jnp.bfloat16)
+ops.matmul(a, b)
+a2 = jnp.ones((1, 4096), jnp.bfloat16)  # decode-style GEMV picks differently
+b2 = jnp.ones((4096, 512), jnp.bfloat16)
+ops.matmul(a2, b2)
+print("\n--- trace-time kernel selections ---")
+for op, problem, cfg in ops.selection_log():
+    print(f"  {op}{problem} -> {cfg.name()}")
+ops.set_kernel_policy(None)

@@ -1,0 +1,51 @@
+"""Bring-up on new hardware with zero developer effort (the paper's pitch).
+
+Given ONLY a benchmark data source for a device, produce the shippable
+deployment artifact: measured host-CPU timings here (the paper's i7-6700K
+analogue), the analytic TPU model as the second device.  Compares all
+clustering methods x normalizations and ships the winner.
+
+Run:  PYTHONPATH=src python examples/tune_new_device.py [--full]
+"""
+import argparse
+
+from repro.core.cluster import CLUSTER_METHODS
+from repro.core.cpubench import build_cpu_dataset, cpu_problems
+from repro.core.normalize import NORMALIZATIONS
+from repro.core.selection import achievable_fraction, select_from_dataset
+from repro.core.tuner import save_result, tune
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="24 measured problems (slower)")
+    ap.add_argument("--out", default="/tmp/deployment_host_cpu.json")
+    args = ap.parse_args()
+
+    print("measuring blocked-GEMM timings on this host (the only 'developer input')...")
+    ds = build_cpu_dataset(cpu_problems(24 if args.full else 10), verbose=True)
+    train, test = ds.split(0.25, seed=0)
+
+    print("\nmethod x normalization sweep (oracle % of optimal, 8 kernels):")
+    best = (None, None, -1.0)
+    for norm in NORMALIZATIONS:
+        row = []
+        for method in CLUSTER_METHODS:
+            chosen = select_from_dataset(train, 8, method, norm)
+            frac = achievable_fraction(test.perf, chosen)
+            row.append(f"{method}={frac:.1%}")
+            if frac > best[2]:
+                best = (method, norm, frac)
+        print(f"  {norm:<11} " + "  ".join(row))
+
+    method, norm, frac = best
+    print(f"\nwinner: {method} + {norm} ({frac:.1%}); training the runtime classifier...")
+    result = tune(ds, n_kernels=8, method=method, normalization=norm)
+    save_result(result, args.out)
+    print(f"deployment artifact -> {args.out}")
+    print(f"  oracle {result.oracle_fraction:.1%} / classifier {result.classifier_fraction:.1%}")
+    print("install with: ops.set_kernel_policy(Deployment.load(path))")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from . import registry
+from .base import ArchConfig, MoESpec
+from .registry import ARCHS, SHAPES, all_cells, get, gemm_problems, input_specs, shapes_for, skipped_cells
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "ArchConfig",
+    "MoESpec",
+    "all_cells",
+    "gemm_problems",
+    "get",
+    "input_specs",
+    "registry",
+    "shapes_for",
+    "skipped_cells",
+]

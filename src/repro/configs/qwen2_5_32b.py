@@ -1,0 +1,15 @@
+"""qwen2.5-32b [hf:Qwen/Qwen2.5-0.5B; hf] — dense GQA, QKV bias."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=27648,
+    vocab=152064,
+    qkv_bias=True,
+    source="hf:Qwen/Qwen2.5-0.5B; hf",
+)

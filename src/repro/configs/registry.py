@@ -1,0 +1,174 @@
+"""Architecture registry: ``--arch`` lookup, input shapes, specs, GEMM harvest."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig
+from .dbrx_132b import CONFIG as _dbrx
+from .glm4_9b import CONFIG as _glm4
+from .granite_8b import CONFIG as _granite
+from .hymba_1_5b import CONFIG as _hymba
+from .llama3_2_vision_90b import CONFIG as _llama_vis
+from .phi4_mini_3_8b import CONFIG as _phi4
+from .qwen2_5_32b import CONFIG as _qwen25
+from .qwen3_moe_235b import CONFIG as _qwen3moe
+from .rwkv6_7b import CONFIG as _rwkv6
+from .seamless_m4t_v2 import CONFIG as _seamless
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        _phi4,
+        _qwen25,
+        _granite,
+        _glm4,
+        _llama_vis,
+        _qwen3moe,
+        _dbrx,
+        _hymba,
+        _seamless,
+        _rwkv6,
+    )
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: only SSM/hybrid run it; the 8 pure
+# full-attention archs skip it (documented in DESIGN.md §4).
+_SUBQUADRATIC = {"hymba-1.5b", "rwkv6-7b"}
+
+
+def get(arch: str) -> ArchConfig:
+    try:
+        return ARCHS[arch]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}") from None
+
+
+def shapes_for(arch: str) -> list[str]:
+    cfg = get(arch)
+    out = []
+    for name in SHAPES:
+        if name == "long_500k" and cfg.name not in _SUBQUADRATIC:
+            continue
+        out.append(name)
+    return out
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every runnable (arch, shape) dry-run cell."""
+    return [(a, s) for a in ARCHS for s in shapes_for(a)]
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for a in ARCHS:
+        cfg = get(a)
+        if cfg.name not in _SUBQUADRATIC:
+            out.append((a, "long_500k", "pure full-attention arch; 500k ctx needs sub-quadratic attention"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(arch: str, shape: str) -> dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one (arch x shape) cell, as ShapeDtypeStructs.
+
+    train/prefill: full-sequence tokens (+ stub modality embeddings).
+    decode: one new token per sequence (the KV/SSM cache is built separately
+    by the serving engine; see repro/serve/engine.py).
+    """
+    cfg = get(arch)
+    sp = SHAPES[shape]
+    b, s = sp.global_batch, sp.seq_len
+    i32 = jnp.int32
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if sp.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            # Stub frontend: precomputed frame embeddings for the encoder;
+            # decoder consumes text tokens of the same nominal length.
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            if cfg.family == "vlm":
+                specs["image_embs"] = jax.ShapeDtypeStruct((b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+        if sp.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct(specs["tokens"].shape, i32)
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        specs["positions"] = jax.ShapeDtypeStruct((b,), i32)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# GEMM harvesting (tuning-dataset problems; paper §3 'matrix sizes from
+# three popular neural networks' — here: from the assigned architectures)
+# ---------------------------------------------------------------------------
+def gemm_problems(arch: str, shape: str) -> list[tuple[int, int, int, int]]:
+    """The (m, k, n, batch) GEMMs this arch launches for this input shape."""
+    cfg = get(arch)
+    sp = SHAPES[shape]
+    b, s = sp.global_batch, sp.seq_len
+    tokens = b * (1 if sp.kind == "decode" else s)
+    d, ff = cfg.d_model, cfg.d_ff
+    probs: list[tuple[int, int, int, int]] = []
+
+    def gemm(m, k, n, batch=1):
+        probs.append((int(m), int(k), int(n), int(batch)))
+
+    # attention / time-mix projections
+    if cfg.family == "ssm":
+        for out in (cfg.q_dim, cfg.q_dim, cfg.q_dim, cfg.q_dim, d):  # r,k,v,g,o
+            gemm(tokens, d, out)
+    else:
+        gemm(tokens, d, cfg.q_dim)  # Q
+        gemm(tokens, d, cfg.kv_dim)  # K
+        gemm(tokens, d, cfg.kv_dim)  # V
+        gemm(tokens, cfg.q_dim, d)  # out proj
+        if sp.kind != "decode":
+            # score/context GEMMs per head (flash-attn internal shapes)
+            hd = cfg.head_dim
+            gemm(s, hd, s, b * cfg.n_heads)
+            gemm(s, s, hd, b * cfg.n_heads)
+    # FFN
+    if cfg.moe is not None:
+        e, k_ = cfg.moe.n_experts, cfg.moe.top_k
+        gemm(tokens, d, e)  # router
+        cap_tokens = max(1, (tokens * k_) // e)
+        for _ in range(2):
+            gemm(cap_tokens, d, ff, e)  # gate/up per expert
+        gemm(cap_tokens, ff, d, e)  # down per expert
+    else:
+        gemm(tokens, d, ff)
+        gemm(tokens, d, ff)
+        gemm(tokens, ff, d)
+    # vocab
+    if sp.kind != "prefill":
+        gemm(tokens if sp.kind == "train" else b, d, cfg.padded_vocab())
+    if cfg.family == "vlm":
+        gemm(tokens, d, cfg.q_dim)  # cross-q
+        gemm(b * cfg.n_image_tokens, d, cfg.kv_dim)
+        gemm(b * cfg.n_image_tokens, d, cfg.kv_dim)
+    if cfg.family == "hybrid":
+        gemm(tokens, d, 2 * d)  # mamba in-proj
+        gemm(tokens, d, d)  # mamba out-proj
+    return probs

@@ -1,0 +1,37 @@
+"""The paper's contribution: ML-guided kernel selection for deployment.
+
+Pipeline:  benchmark table -> normalize -> cluster-select deployable subset
+           -> train runtime classifier -> Deployment artifact (KernelPolicy).
+"""
+from .classify import CLASSIFIERS, make_classifier
+from .cluster import CLUSTER_METHODS, select_configs
+from .dataset import TuningDataset, build_model_dataset, harvest_problems, problem_features, synthetic_problems
+from .dispatch import Deployment, classifier_fraction, train_deployment
+from .normalize import NORMALIZATIONS, normalize
+from .pca import PCA
+from .selection import achievable_fraction, evaluate_methods, select_from_dataset
+from .tuner import TuneResult, tune, tune_for_archs
+
+__all__ = [
+    "CLASSIFIERS",
+    "CLUSTER_METHODS",
+    "NORMALIZATIONS",
+    "PCA",
+    "Deployment",
+    "TuneResult",
+    "TuningDataset",
+    "achievable_fraction",
+    "build_model_dataset",
+    "classifier_fraction",
+    "evaluate_methods",
+    "harvest_problems",
+    "make_classifier",
+    "normalize",
+    "problem_features",
+    "select_configs",
+    "select_from_dataset",
+    "synthetic_problems",
+    "train_deployment",
+    "tune",
+    "tune_for_archs",
+]

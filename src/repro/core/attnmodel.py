@@ -1,0 +1,125 @@
+"""Analytic performance model for the Pallas flash-attention family.
+
+Extends the paper's pipeline to a second, more complicated kernel family
+(its stated future-work direction): the attention problem space is
+``(sq, skv, d)`` and the config space is ``AttentionConfig(block_q,
+block_kv)``.  Same physics as core.perfmodel: overlapped compute/memory
+roofline over the exact Pallas tile-streaming pattern + deterministic
+microarchitectural texture, VMEM-overflow configs fail.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.attention import AttentionConfig, attention_config_space
+
+from .perfmodel import DeviceModel, TPU_V5E, _hash_unit
+
+AttnProblem = tuple[int, int, int]  # (sq, skv, head_dim)
+
+ATTN_FEATURE_NAMES = ("log2_sq", "log2_skv", "log2_d", "log2_sq_over_skv")
+
+
+def attn_problem_features(problems: list[AttnProblem]) -> np.ndarray:
+    rows = []
+    for sq, skv, d in problems:
+        rows.append([np.log2(sq), np.log2(skv), np.log2(d), np.log2(sq / skv)])
+    return np.asarray(rows, dtype=np.float64)
+
+
+def _vmem_bytes(cfg: AttentionConfig, d: int, dtype_bytes: int = 2) -> int:
+    # q tile + k tile + v tile (double-buffered) + f32 scratch (m, l, acc).
+    tiles = cfg.block_q * d + 2 * cfg.block_kv * d
+    scratch = cfg.block_q * (128 + 128 + d) * 4
+    return 2 * tiles * dtype_bytes + scratch
+
+
+def predict_attn_time(
+    problem: AttnProblem,
+    cfg: AttentionConfig,
+    device: DeviceModel = TPU_V5E,
+    *,
+    causal: bool = True,
+    dtype_bytes: int = 2,
+) -> float:
+    sq, skv, d = problem
+    if _vmem_bytes(cfg, d, dtype_bytes) > device.vmem_bytes:
+        return float("inf")
+    bq = min(cfg.block_q, _round_up(sq, 8))
+    bkv = min(cfg.block_kv, _round_up(skv, 128))
+    n_q = _ceil(sq, bq)
+    n_kv = _ceil(skv, bkv)
+    # Causal masking skips fully-masked kv blocks: ~half the tiles when
+    # sq == skv, none skipped for decode (sq=1 attends everything).
+    if causal and sq == skv:
+        live_tiles = n_q * (n_kv + 1) / 2.0
+    else:
+        live_tiles = float(n_q * n_kv)
+    flops = 4.0 * live_tiles * bq * bkv * d  # qk^T + pv
+    # Softmax/VPU work scales with logits tiles — penalize tiny bkv (lane
+    # under-fill) and tiny bq (sublane under-fill on the MXU).
+    util = (min(bq, device.mxu_dim) / device.mxu_dim) * (min(bkv, device.mxu_dim) / device.mxu_dim)
+    t_compute = flops / (device.peak_flops * util)
+    # Memory: q/out loaded+stored once per q row; k/v streamed once per q block.
+    traffic = (2.0 * sq * d + 2.0 * n_q * skv * d) * dtype_bytes
+    t_mem = traffic / device.hbm_bw
+    t = max(t_compute, t_mem) + live_tiles * device.grid_step_overhead + device.launch_overhead
+    return t / _texture(device, cfg, problem)
+
+
+def _texture(device: DeviceModel, cfg: AttentionConfig, problem: AttnProblem) -> float:
+    key = (cfg.block_q, cfg.block_kv)
+    e_cfg = 1.0 - 0.10 * _hash_unit(device.name, "attn_cfg", key)
+    bucket = tuple(int(np.log2(max(v, 1))) for v in problem)
+    e_int = 1.0 + 0.07 * (2.0 * _hash_unit(device.name, "attn_int", key, bucket) - 1.0)
+    return max(e_cfg * e_int, 1e-3)
+
+
+def predict_attn_gflops(problem: AttnProblem, cfg: AttentionConfig, device=TPU_V5E, **kw) -> float:
+    t = predict_attn_time(problem, cfg, device, **kw)
+    if not np.isfinite(t) or t <= 0:
+        return 0.0
+    sq, skv, d = problem
+    useful = 4.0 * sq * skv * d * (0.5 if kw.get("causal", True) and sq == skv else 1.0)
+    return useful / t / 1e9
+
+
+def harvest_attn_problems(arch_ids: list[str] | None = None) -> list[AttnProblem]:
+    """Attention shapes the assigned architectures actually launch."""
+    from repro.configs import registry
+
+    arch_ids = arch_ids or list(registry.ARCHS)
+    out: set[AttnProblem] = set()
+    for arch in arch_ids:
+        cfg = registry.get(arch)
+        if cfg.family == "ssm":
+            continue  # attention-free (DESIGN.md §4)
+        hd = cfg.head_dim
+        for shape in registry.shapes_for(arch):
+            sp = registry.SHAPES[shape]
+            if sp.kind == "decode":
+                out.add((1, sp.seq_len, hd))
+            else:
+                out.add((sp.seq_len, sp.seq_len, hd))
+                # chunked-prefill style sub-blocks
+                out.add((min(2048, sp.seq_len), sp.seq_len, hd))
+    return sorted(out)
+
+
+def build_attn_matrix(
+    problems: list[AttnProblem], configs=None, device: DeviceModel = TPU_V5E
+) -> np.ndarray:
+    configs = list(configs or attention_config_space())
+    perf = np.zeros((len(problems), len(configs)))
+    for i, p in enumerate(problems):
+        for j, c in enumerate(configs):
+            perf[i, j] = predict_attn_gflops(p, c, device)
+    return perf
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,381 @@
+"""Runtime kernel-selection classifiers (paper §5, Tables 1-2).
+
+Maps problem-size features -> index of the deployed kernel config to launch.
+All classifiers implement ``fit(x, y)`` / ``predict(x)`` and are numpy-only.
+
+The classifier zoo mirrors the paper: three decision trees with increasing
+regularization (A: unlimited; B: depth<=6, leaf>=3; C: depth<=3, leaf>=4),
+k-nearest-neighbours (k = 1, 3, 7), linear and RBF SVMs (Pegasos-style SGD on
+the hinge loss — primal for linear, kernelized dual for RBF), a random forest,
+and a small MLP.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "DecisionTreeClassifier",
+    "KNeighborsClassifier",
+    "LinearSVM",
+    "RadialSVM",
+    "RandomForestClassifier",
+    "MLPClassifier",
+    "make_classifier",
+    "CLASSIFIERS",
+]
+
+
+def _standardize_fit(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    mu = x.mean(0)
+    sd = x.std(0)
+    sd = np.where(sd > 1e-12, sd, 1.0)
+    return mu, sd
+
+
+# ---------------------------------------------------------------------------
+# Decision tree (CART, gini)
+# ---------------------------------------------------------------------------
+class _Node:
+    __slots__ = ("feature", "threshold", "left", "right", "label", "counts")
+
+    def __init__(self):
+        self.feature = -1
+        self.threshold = 0.0
+        self.left = None
+        self.right = None
+        self.label = 0
+        self.counts = None
+
+
+class DecisionTreeClassifier:
+    def __init__(self, max_depth: int | None = None, min_samples_leaf: int = 1, seed: int = 0):
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.seed = seed
+        self.root_: _Node | None = None
+        self.n_classes_ = 0
+        self.max_features: int | None = None  # set by RandomForest
+
+    # -- training ---------------------------------------------------------
+    def fit(self, x: np.ndarray, y: np.ndarray, sample_weight: np.ndarray | None = None):
+        x = np.asarray(x, dtype=np.float64)
+        y = np.asarray(y, dtype=int)
+        self.n_classes_ = int(y.max()) + 1 if y.size else 1
+        rng = np.random.default_rng(self.seed)
+        w = np.ones(len(y)) if sample_weight is None else np.asarray(sample_weight, float)
+        self.root_ = self._grow(x, y, w, depth=0, rng=rng)
+        return self
+
+    def _gini(self, counts: np.ndarray) -> float:
+        tot = counts.sum()
+        if tot <= 0:
+            return 0.0
+        p = counts / tot
+        return float(1.0 - (p**2).sum())
+
+    def _grow(self, x: np.ndarray, y: np.ndarray, w: np.ndarray, depth: int, rng) -> _Node:
+        node = _Node()
+        counts = np.bincount(y, weights=w, minlength=self.n_classes_)
+        node.counts = counts
+        node.label = int(counts.argmax())
+        if (
+            (self.max_depth is not None and depth >= self.max_depth)
+            or len(y) < 2 * self.min_samples_leaf
+            or counts.max() == counts.sum()
+        ):
+            return node
+        nf = x.shape[1]
+        feats = np.arange(nf)
+        if self.max_features is not None and self.max_features < nf:
+            feats = rng.choice(nf, size=self.max_features, replace=False)
+        best = None  # (gini, feature, threshold)
+        parent_gini = self._gini(counts)
+        for f in feats:
+            order = np.argsort(x[:, f], kind="stable")
+            xs, ys, ws = x[order, f], y[order], w[order]
+            onehot = np.zeros((len(ys), self.n_classes_))
+            onehot[np.arange(len(ys)), ys] = ws
+            left_csum = np.cumsum(onehot, axis=0)
+            total = left_csum[-1]
+            for i in range(self.min_samples_leaf, len(ys) - self.min_samples_leaf + 1):
+                if i < len(ys) and xs[i - 1] == xs[min(i, len(ys) - 1)]:
+                    continue
+                lc = left_csum[i - 1]
+                rc = total - lc
+                nl, nr = lc.sum(), rc.sum()
+                if nl <= 0 or nr <= 0:
+                    continue
+                g = (nl * self._gini(lc) + nr * self._gini(rc)) / (nl + nr)
+                if best is None or g < best[0]:
+                    thr = 0.5 * (xs[i - 1] + xs[min(i, len(ys) - 1)])
+                    best = (g, int(f), float(thr))
+        if best is None or best[0] >= parent_gini - 1e-12:
+            return node
+        _, f, thr = best
+        mask = x[:, f] <= thr
+        if mask.sum() < self.min_samples_leaf or (~mask).sum() < self.min_samples_leaf:
+            return node
+        node.feature, node.threshold = f, thr
+        node.left = self._grow(x[mask], y[mask], w[mask], depth + 1, rng)
+        node.right = self._grow(x[~mask], y[~mask], w[~mask], depth + 1, rng)
+        return node
+
+    # -- inference --------------------------------------------------------
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, dtype=np.float64)
+        out = np.empty(len(x), dtype=int)
+        for i, row in enumerate(x):
+            node = self.root_
+            while node.left is not None:
+                node = node.left if row[node.feature] <= node.threshold else node.right
+            out[i] = node.label
+        return out
+
+    def predict_counts(self, x: np.ndarray) -> np.ndarray:
+        """Per-sample class-count vectors at the reached leaf (for forests)."""
+        x = np.asarray(x, dtype=np.float64)
+        out = np.zeros((len(x), self.n_classes_))
+        for i, row in enumerate(x):
+            node = self.root_
+            while node.left is not None:
+                node = node.left if row[node.feature] <= node.threshold else node.right
+            c = node.counts
+            out[i, : len(c)] = c / max(c.sum(), 1e-12)
+        return out
+
+    # -- depth / size introspection (for codegen & tests) ------------------
+    def depth(self) -> int:
+        def d(n):
+            return 0 if n is None or n.left is None else 1 + max(d(n.left), d(n.right))
+
+        return d(self.root_)
+
+    def n_leaves(self) -> int:
+        def c(n):
+            return 1 if n.left is None else c(n.left) + c(n.right)
+
+        return c(self.root_)
+
+
+# ---------------------------------------------------------------------------
+# k nearest neighbours
+# ---------------------------------------------------------------------------
+class KNeighborsClassifier:
+    def __init__(self, k: int = 3):
+        self.k = k
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        x = np.asarray(x, dtype=np.float64)
+        self._mu, self._sd = _standardize_fit(x)
+        self._x = (x - self._mu) / self._sd
+        self._y = np.asarray(y, dtype=int)
+        self.n_classes_ = int(self._y.max()) + 1 if self._y.size else 1
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        x = (np.asarray(x, dtype=np.float64) - self._mu) / self._sd
+        d2 = ((x[:, None, :] - self._x[None, :, :]) ** 2).sum(-1)
+        k = min(self.k, len(self._y))
+        nn = np.argpartition(d2, k - 1, axis=1)[:, :k]
+        out = np.empty(len(x), dtype=int)
+        for i in range(len(x)):
+            out[i] = np.bincount(self._y[nn[i]], minlength=self.n_classes_).argmax()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# SVMs (Pegasos SGD on hinge loss, one-vs-rest)
+# ---------------------------------------------------------------------------
+class LinearSVM:
+    def __init__(self, lam: float = 1e-3, epochs: int = 60, seed: int = 0):
+        self.lam, self.epochs, self.seed = lam, epochs, seed
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        x = np.asarray(x, dtype=np.float64)
+        y = np.asarray(y, dtype=int)
+        self._mu, self._sd = _standardize_fit(x)
+        xs = (x - self._mu) / self._sd
+        xs = np.hstack([xs, np.ones((len(xs), 1))])  # bias feature
+        self.n_classes_ = int(y.max()) + 1
+        n, d = xs.shape
+        rng = np.random.default_rng(self.seed)
+        self._w = np.zeros((self.n_classes_, d))
+        for c in range(self.n_classes_):
+            t = 0
+            yc = np.where(y == c, 1.0, -1.0)
+            w = np.zeros(d)
+            for _ in range(self.epochs):
+                for i in rng.permutation(n):
+                    t += 1
+                    eta = 1.0 / (self.lam * t)
+                    margin = yc[i] * (w @ xs[i])
+                    w *= 1 - eta * self.lam
+                    if margin < 1:
+                        w += eta * yc[i] * xs[i]
+            self._w[c] = w
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        xs = (np.asarray(x, dtype=np.float64) - self._mu) / self._sd
+        xs = np.hstack([xs, np.ones((len(xs), 1))])
+        return (xs @ self._w.T).argmax(1)
+
+
+class RadialSVM:
+    """Kernelized Pegasos (RBF) one-vs-rest SVM."""
+
+    def __init__(self, lam: float = 1e-2, epochs: int = 40, gamma: float | None = None, seed: int = 0):
+        self.lam, self.epochs, self.gamma, self.seed = lam, epochs, gamma, seed
+
+    def _kernel(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        d2 = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+        return np.exp(-self._g * d2)
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        x = np.asarray(x, dtype=np.float64)
+        y = np.asarray(y, dtype=int)
+        self._mu, self._sd = _standardize_fit(x)
+        self._x = (x - self._mu) / self._sd
+        n = len(y)
+        if self.gamma is None:
+            d2 = ((self._x[:, None, :] - self._x[None, :, :]) ** 2).sum(-1)
+            nz = d2[d2 > 0]
+            self._g = 1.0 / max(np.median(nz), 1e-12) if nz.size else 1.0
+        else:
+            self._g = self.gamma
+        gram = self._kernel(self._x, self._x)
+        self.n_classes_ = int(y.max()) + 1
+        self._alpha = np.zeros((self.n_classes_, n))
+        rng = np.random.default_rng(self.seed)
+        for c in range(self.n_classes_):
+            yc = np.where(y == c, 1.0, -1.0)
+            a = np.zeros(n)
+            t = 0
+            for _ in range(self.epochs):
+                for i in rng.permutation(n):
+                    t += 1
+                    f = (a * yc) @ gram[:, i] / (self.lam * t)
+                    if yc[i] * f < 1:
+                        a[i] += 1
+            self._alpha[c] = a * yc / (self.lam * max(t, 1))
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        xs = (np.asarray(x, dtype=np.float64) - self._mu) / self._sd
+        k = self._kernel(xs, self._x)
+        return (k @ self._alpha.T).argmax(1)
+
+
+# ---------------------------------------------------------------------------
+# Random forest
+# ---------------------------------------------------------------------------
+class RandomForestClassifier:
+    def __init__(self, n_trees: int = 30, max_depth: int | None = None, seed: int = 0):
+        self.n_trees, self.max_depth, self.seed = n_trees, max_depth, seed
+        self.trees_: list[DecisionTreeClassifier] = []
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        x = np.asarray(x, dtype=np.float64)
+        y = np.asarray(y, dtype=int)
+        rng = np.random.default_rng(self.seed)
+        n, nf = x.shape
+        self.n_classes_ = int(y.max()) + 1
+        self.trees_ = []
+        mf = max(1, int(np.sqrt(nf)))
+        for t in range(self.n_trees):
+            idx = rng.integers(0, n, size=n)  # bootstrap
+            tree = DecisionTreeClassifier(max_depth=self.max_depth, seed=self.seed + t)
+            tree.max_features = mf
+            tree.n_classes_ = self.n_classes_
+            tree.fit(x[idx], y[idx])
+            tree.n_classes_ = self.n_classes_
+            self.trees_.append(tree)
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        votes = np.zeros((len(x), self.n_classes_))
+        for tree in self.trees_:
+            pc = tree.predict_counts(x)
+            votes[:, : pc.shape[1]] += pc
+        return votes.argmax(1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+class MLPClassifier:
+    def __init__(self, hidden: int = 32, epochs: int = 400, lr: float = 1e-2, seed: int = 0):
+        self.hidden, self.epochs, self.lr, self.seed = hidden, epochs, lr, seed
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        x = np.asarray(x, dtype=np.float64)
+        y = np.asarray(y, dtype=int)
+        self._mu, self._sd = _standardize_fit(x)
+        xs = (x - self._mu) / self._sd
+        n, d = xs.shape
+        c = int(y.max()) + 1
+        self.n_classes_ = c
+        rng = np.random.default_rng(self.seed)
+        w1 = rng.normal(0, np.sqrt(2.0 / d), (d, self.hidden))
+        b1 = np.zeros(self.hidden)
+        w2 = rng.normal(0, np.sqrt(2.0 / self.hidden), (self.hidden, c))
+        b2 = np.zeros(c)
+        onehot = np.zeros((n, c))
+        onehot[np.arange(n), y] = 1.0
+        # Adam
+        ms = [np.zeros_like(p) for p in (w1, b1, w2, b2)]
+        vs = [np.zeros_like(p) for p in (w1, b1, w2, b2)]
+        params = [w1, b1, w2, b2]
+        for t in range(1, self.epochs + 1):
+            h = np.maximum(xs @ params[0] + params[1], 0.0)
+            logits = h @ params[2] + params[3]
+            logits -= logits.max(1, keepdims=True)
+            p = np.exp(logits)
+            p /= p.sum(1, keepdims=True)
+            g_logits = (p - onehot) / n
+            gw2 = h.T @ g_logits
+            gb2 = g_logits.sum(0)
+            gh = g_logits @ params[2].T
+            gh[h <= 0] = 0.0
+            gw1 = xs.T @ gh
+            gb1 = gh.sum(0)
+            grads = [gw1, gb1, gw2, gb2]
+            b1m, b2m = 0.9, 0.999
+            for j, g in enumerate(grads):
+                ms[j] = b1m * ms[j] + (1 - b1m) * g
+                vs[j] = b2m * vs[j] + (1 - b2m) * g * g
+                mh = ms[j] / (1 - b1m**t)
+                vh = vs[j] / (1 - b2m**t)
+                params[j] -= self.lr * mh / (np.sqrt(vh) + 1e-8)
+        self._params = params
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        xs = (np.asarray(x, dtype=np.float64) - self._mu) / self._sd
+        w1, b1, w2, b2 = self._params
+        h = np.maximum(xs @ w1 + b1, 0.0)
+        return (h @ w2 + b2).argmax(1)
+
+
+# ---------------------------------------------------------------------------
+# registry (paper Tables 1-2 rows)
+# ---------------------------------------------------------------------------
+CLASSIFIERS: dict[str, callable] = {
+    "DecisionTreeA": lambda: DecisionTreeClassifier(max_depth=None, min_samples_leaf=1),
+    "DecisionTreeB": lambda: DecisionTreeClassifier(max_depth=6, min_samples_leaf=3),
+    "DecisionTreeC": lambda: DecisionTreeClassifier(max_depth=3, min_samples_leaf=4),
+    "1NearestNeighbor": lambda: KNeighborsClassifier(k=1),
+    "3NearestNeighbor": lambda: KNeighborsClassifier(k=3),
+    "7NearestNeighbor": lambda: KNeighborsClassifier(k=7),
+    "LinearSVM": lambda: LinearSVM(),
+    "RadialSVM": lambda: RadialSVM(),
+    "RandomForest": lambda: RandomForestClassifier(n_trees=30),
+    "MLP": lambda: MLPClassifier(),
+}
+
+
+def make_classifier(name: str):
+    try:
+        return CLASSIFIERS[name]()
+    except KeyError:
+        raise ValueError(f"unknown classifier {name!r}; expected one of {sorted(CLASSIFIERS)}") from None

@@ -1,0 +1,72 @@
+"""Decision-tree serialization + nested-if code generation.
+
+The paper integrates the trained decision tree into the SYCL launcher as a
+series of nested ``if`` statements (§5.1).  We do the same: a fitted
+``DecisionTreeClassifier`` can be (a) round-tripped through JSON (what the
+deployment artifact stores) and (b) emitted as standalone Python source with
+zero dependencies — the literal launcher embedding.
+"""
+from __future__ import annotations
+
+from .classify import DecisionTreeClassifier, _Node
+from .dataset import FEATURE_NAMES
+
+
+def tree_to_dict(tree: DecisionTreeClassifier) -> dict:
+    if not isinstance(tree, DecisionTreeClassifier):
+        raise TypeError(
+            f"only decision trees are shippable launcher classifiers, got {type(tree).__name__}"
+        )
+
+    def rec(node: _Node) -> dict:
+        if node.left is None:
+            return {"label": int(node.label)}
+        return {
+            "feature": int(node.feature),
+            "threshold": float(node.threshold),
+            "left": rec(node.left),
+            "right": rec(node.right),
+        }
+
+    return {"n_classes": tree.n_classes_, "root": rec(tree.root_)}
+
+
+def dict_to_tree(blob: dict) -> DecisionTreeClassifier:
+    tree = DecisionTreeClassifier()
+    tree.n_classes_ = int(blob["n_classes"])
+
+    def rec(d: dict) -> _Node:
+        node = _Node()
+        if "label" in d:
+            node.label = int(d["label"])
+            return node
+        node.feature = int(d["feature"])
+        node.threshold = float(d["threshold"])
+        node.left = rec(d["left"])
+        node.right = rec(d["right"])
+        node.label = 0
+        return node
+
+    tree.root_ = rec(blob["root"])
+    return tree
+
+
+def tree_to_python(tree: DecisionTreeClassifier, func_name: str = "select_kernel") -> str:
+    """Emit the tree as nested-if Python source (the launcher embedding)."""
+    lines = [
+        f"def {func_name}({', '.join(FEATURE_NAMES)}):",
+        '    """Auto-generated kernel-selection decision tree."""',
+    ]
+
+    def rec(node: _Node, indent: int) -> None:
+        pad = "    " * indent
+        if node.left is None:
+            lines.append(f"{pad}return {int(node.label)}")
+            return
+        lines.append(f"{pad}if {FEATURE_NAMES[node.feature]} <= {node.threshold!r}:")
+        rec(node.left, indent + 1)
+        lines.append(f"{pad}else:")
+        rec(node.right, indent + 1)
+
+    rec(tree.root_, 1)
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,131 @@
+"""Deployment artifact: selected kernels + trained runtime classifier (paper §5).
+
+A :class:`Deployment` is what actually ships in the library: the list of
+deployed kernel configs (the 'binary blobs') and a classifier mapping problem
+features -> deployed-config index.  It implements the ``KernelPolicy``
+protocol consumed by ``repro.kernels.ops``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.kernels.attention import DEFAULT_ATTN_CONFIG, AttentionConfig
+from repro.kernels.matmul import MatmulConfig
+
+from .classify import make_classifier
+from .dataset import TuningDataset, problem_features
+
+_EPS = 1e-12
+
+
+def build_labels(perf: np.ndarray, chosen: list[int]) -> np.ndarray:
+    """Per-problem index (into ``chosen``) of the best deployed kernel."""
+    perf = np.asarray(perf, dtype=np.float64)
+    return perf[:, chosen].argmax(axis=1)
+
+
+@dataclasses.dataclass
+class Deployment:
+    """The shippable tuning artifact (implements KernelPolicy)."""
+
+    device: str
+    configs: list[MatmulConfig]
+    classifier: object  # fit classifier: features -> index into configs
+    classifier_name: str = "DecisionTreeA"
+    attention_configs: list[AttentionConfig] = dataclasses.field(
+        default_factory=lambda: [DEFAULT_ATTN_CONFIG]
+    )
+    attention_tree: object | None = None  # features -> index into attention_configs
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    # -- KernelPolicy -------------------------------------------------------
+    def select_matmul(self, m: int, k: int, n: int, batch: int) -> MatmulConfig:
+        feats = problem_features([(m, k, n, batch)])
+        idx = int(self.classifier.predict(feats)[0])
+        idx = min(max(idx, 0), len(self.configs) - 1)
+        return self.configs[idx]
+
+    def select_attention(self, sq: int, skv: int, d: int) -> AttentionConfig:
+        if self.attention_tree is not None:
+            from .attnmodel import attn_problem_features
+
+            feats = attn_problem_features([(sq, skv, d)])
+            idx = int(self.attention_tree.predict(feats)[0])
+            idx = min(max(idx, 0), len(self.attention_configs) - 1)
+            return self.attention_configs[idx]
+        # Fallback: pick by KV-length bucket (untuned deployments).
+        best = self.attention_configs[0]
+        for cfg in self.attention_configs:
+            if cfg.block_kv <= max(skv, 128) and cfg.block_q <= max(sq, 128):
+                if cfg.block_kv * cfg.block_q > best.block_kv * best.block_q:
+                    best = cfg
+        return best
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str | Path) -> None:
+        """Serialize (decision-tree classifiers only, like the paper ships)."""
+        from .codegen import tree_to_dict
+
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        blob = {
+            "device": self.device,
+            "configs": [c.to_dict() for c in self.configs],
+            "attention_configs": [c.to_dict() for c in self.attention_configs],
+            "classifier_name": self.classifier_name,
+            "tree": tree_to_dict(self.classifier),
+            "attention_tree": (
+                tree_to_dict(self.attention_tree) if self.attention_tree is not None else None
+            ),
+            "meta": self.meta,
+        }
+        path.write_text(json.dumps(blob, indent=1))
+
+    @staticmethod
+    def load(path: str | Path) -> "Deployment":
+        from .codegen import dict_to_tree
+
+        blob = json.loads(Path(path).read_text())
+        atree = blob.get("attention_tree")
+        return Deployment(
+            device=blob["device"],
+            configs=[MatmulConfig.from_dict(d) for d in blob["configs"]],
+            classifier=dict_to_tree(blob["tree"]),
+            classifier_name=blob["classifier_name"],
+            attention_configs=[AttentionConfig.from_dict(d) for d in blob["attention_configs"]],
+            attention_tree=dict_to_tree(atree) if atree else None,
+            meta=blob.get("meta", {}),
+        )
+
+
+def train_deployment(
+    train: TuningDataset,
+    chosen: list[int],
+    classifier_name: str = "DecisionTreeA",
+    *,
+    meta: dict | None = None,
+) -> Deployment:
+    labels = build_labels(train.perf, chosen)
+    clf = make_classifier(classifier_name)
+    clf.fit(train.features, labels)
+    return Deployment(
+        device=train.device,
+        configs=[train.configs[i] for i in chosen],
+        classifier=clf,
+        classifier_name=classifier_name,
+        meta=meta or {},
+    )
+
+
+def classifier_fraction(test: TuningDataset, chosen: list[int], deployment: Deployment) -> float:
+    """Geomean of (perf of classifier-picked kernel) / optimal (Tables 1-2)."""
+    pred = deployment.classifier.predict(test.features)
+    pred = np.clip(pred, 0, len(chosen) - 1)
+    picked = test.perf[np.arange(len(test.problems)), [chosen[i] for i in pred]]
+    best = test.perf.max(axis=1)
+    ratio = np.where(best > 0, picked / np.maximum(best, _EPS), 1.0)
+    return float(np.exp(np.mean(np.log(np.maximum(ratio, _EPS)))))

@@ -1,0 +1,130 @@
+"""Online (dynamic) kernel selection — the paper's §2.2 comparison point.
+
+TensorFlow/MXNet-style cuDNN launcher autotuning: measure candidate kernels
+the first time a problem shape appears at runtime, then commit to the winner
+for the rest of the process lifetime.  The paper argues offline
+clustering+classifier tuning avoids this warm-up cost; this module makes the
+comparison concrete inside the same framework:
+
+  * :class:`OnlinePolicy` wraps any deployment (or the full config space) and
+    implements the same ``KernelPolicy`` protocol;
+  * first ``n_trials`` encounters of a shape bucket measure different
+    candidates (explore), after which the best-measured config is committed;
+  * a measurement hook makes it testable without hardware (and pluggable
+    with real timers on device).
+
+The hybrid mode — explore only among the *deployed* subset chosen by the
+offline pipeline — combines both papers' worlds: the classifier provides the
+prior, online measurement corrects residual mispredictions at the cost of a
+bounded warm-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Callable, Sequence
+
+from repro.kernels.matmul import MatmulConfig, config_space
+
+
+def _bucket(problem: tuple[int, int, int, int]) -> tuple[int, int, int, int]:
+    """log2 shape bucket: nearby shapes share measurements (paper's regimes)."""
+    return tuple(max(v, 1).bit_length() for v in problem)
+
+
+@dataclasses.dataclass
+class _Arm:
+    config: MatmulConfig
+    trials: int = 0
+    total_time: float = 0.0
+
+    @property
+    def mean(self) -> float:
+        return self.total_time / self.trials if self.trials else float("inf")
+
+
+class OnlinePolicy:
+    """Explore-then-commit online kernel selection (KernelPolicy protocol).
+
+    ``measure(problem, config) -> seconds`` supplies timings: a real timer on
+    hardware, the analytic model in tests/simulation.  ``candidates`` defaults
+    to the full config space (pure dynamic tuning); pass a deployment's
+    configs for the hybrid offline-prior + online-correction mode.
+    """
+
+    def __init__(
+        self,
+        measure: Callable[[tuple, MatmulConfig], float],
+        candidates: Sequence[MatmulConfig] | None = None,
+        *,
+        trials_per_arm: int = 1,
+        prior: object | None = None,  # optional Deployment for the first guess
+    ):
+        self.measure = measure
+        self.candidates = list(candidates if candidates is not None else config_space())
+        self.trials_per_arm = trials_per_arm
+        self.prior = prior
+        self._arms: dict[tuple, list[_Arm]] = {}
+        self._committed: dict[tuple, MatmulConfig] = {}
+        self.stats = defaultdict(int)  # 'explore' / 'commit' counters
+
+    # -- KernelPolicy ---------------------------------------------------------
+    def select_matmul(self, m: int, k: int, n: int, batch: int) -> MatmulConfig:
+        problem = (m, k, n, batch)
+        b = _bucket(problem)
+        if b in self._committed:
+            self.stats["commit"] += 1
+            return self._committed[b]
+        arms = self._arms.get(b)
+        if arms is None:
+            # Order candidates so the prior's pick is measured first: if the
+            # exploration budget is cut short, the offline prediction leads.
+            cands = list(self.candidates)
+            if self.prior is not None:
+                first = self.prior.select_matmul(*problem)
+                if first in cands:
+                    cands.remove(first)
+                    cands.insert(0, first)
+            arms = [_Arm(c) for c in cands]
+            self._arms[b] = arms
+        # explore the next under-measured arm
+        for arm in arms:
+            if arm.trials < self.trials_per_arm:
+                self.stats["explore"] += 1
+                arm.total_time += self.measure(problem, arm.config)
+                arm.trials += 1
+                if all(a.trials >= self.trials_per_arm for a in arms):
+                    best = min(arms, key=lambda a: a.mean)
+                    self._committed[b] = best.config
+                return arm.config
+        best = min(arms, key=lambda a: a.mean)
+        self._committed[b] = best.config
+        self.stats["commit"] += 1
+        return best.config
+
+    def select_attention(self, sq: int, skv: int, d: int):
+        if self.prior is not None:
+            return self.prior.select_attention(sq, skv, d)
+        from repro.kernels.attention import DEFAULT_ATTN_CONFIG
+
+        return DEFAULT_ATTN_CONFIG
+
+    # -- introspection ---------------------------------------------------------
+    def warmup_cost(self) -> float:
+        """Total seconds spent in exploration measurements so far."""
+        return sum(a.total_time for arms in self._arms.values() for a in arms)
+
+    def committed(self) -> dict[tuple, MatmulConfig]:
+        return dict(self._committed)
+
+
+def wall_clock_measure(run: Callable[[], None], reps: int = 3) -> float:
+    """Median wall time of ``run`` — the real-hardware measurement hook."""
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,140 @@
+"""End-to-end auto-tuning pipeline (the paper, as one function).
+
+``tune()`` = collect benchmark table -> normalize -> cluster-select the
+deployable kernel subset -> train the runtime classifier -> emit the
+:class:`Deployment` artifact that ``repro.kernels.ops`` consumes.
+
+Fully automated: given a benchmark data source for a new device, no developer
+effort or expertise is needed (paper abstract) — this is the function a
+framework operator runs when bringing up new hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+
+from repro.kernels.attention import attention_config_space
+
+from .dataset import TuningDataset, build_model_dataset, harvest_problems
+from .dispatch import Deployment, classifier_fraction, train_deployment
+from .selection import achievable_fraction, select_from_dataset
+
+
+@dataclasses.dataclass
+class TuneResult:
+    deployment: Deployment
+    chosen: list[int]
+    oracle_fraction: float  # best-achievable with the deployed subset
+    classifier_fraction: float  # what the shipped classifier actually attains
+    train: TuningDataset
+    test: TuningDataset
+
+
+def tune(
+    dataset: TuningDataset,
+    *,
+    n_kernels: int = 8,
+    method: str = "pca_kmeans",
+    normalization: str = "standard",
+    classifier: str = "DecisionTreeA",
+    test_fraction: float = 0.25,
+    seed: int = 0,
+    attn_arch_ids: list[str] | None = None,
+    n_attn_kernels: int = 4,
+) -> TuneResult:
+    """Run the full paper pipeline on a benchmark dataset."""
+    train, test = dataset.split(test_fraction=test_fraction, seed=seed)
+    chosen = select_from_dataset(train, n_kernels, method, normalization, seed=seed)
+    deployment = train_deployment(
+        train,
+        chosen,
+        classifier,
+        meta={
+            "method": method,
+            "normalization": normalization,
+            "n_kernels": n_kernels,
+            "seed": seed,
+            "source": dataset.source,
+        },
+    )
+    # Second kernel family (the paper's future-work direction): the same
+    # pipeline prunes + classifies the flash-attention config space.
+    configs, tree = tune_attention(
+        arch_ids=attn_arch_ids, n_kernels=n_attn_kernels, method=method,
+        normalization=normalization, seed=seed,
+    )
+    deployment.attention_configs = configs
+    deployment.attention_tree = tree
+    return TuneResult(
+        deployment=deployment,
+        chosen=chosen,
+        oracle_fraction=achievable_fraction(test.perf, chosen),
+        classifier_fraction=classifier_fraction(test, chosen, deployment),
+        train=train,
+        test=test,
+    )
+
+
+def tune_attention(
+    arch_ids: list[str] | None = None,
+    *,
+    n_kernels: int = 4,
+    method: str = "pca_kmeans",
+    normalization: str = "standard",
+    seed: int = 0,
+):
+    """Prune + classify the flash-attention family (same paper pipeline)."""
+    from .attnmodel import (
+        attn_problem_features,
+        build_attn_matrix,
+        harvest_attn_problems,
+    )
+    from .classify import DecisionTreeClassifier
+    from .cluster import select_configs
+    from .normalize import normalize
+
+    space = list(attention_config_space())
+    problems = harvest_attn_problems(arch_ids)
+    perf = build_attn_matrix(problems, space)
+    norm = normalize(perf, normalization)
+    feats = attn_problem_features(problems)
+    n_kernels = min(n_kernels, len(space))
+    chosen = select_configs(norm, n_kernels, method, features=feats, seed=seed)
+    labels = perf[:, chosen].argmax(axis=1)
+    tree = DecisionTreeClassifier(max_depth=6, min_samples_leaf=1).fit(feats, labels)
+    return [space[i] for i in chosen], tree
+
+
+def tune_for_archs(
+    arch_ids: list[str] | None = None,
+    *,
+    device_name: str = "tpu_v5e",
+    n_kernels: int = 8,
+    method: str = "pca_kmeans",
+    normalization: str = "standard",
+    classifier: str = "DecisionTreeA",
+    max_problems: int | None = 400,
+    seed: int = 0,
+) -> TuneResult:
+    """Tune against the GEMM shapes the assigned architectures will launch."""
+    problems = harvest_problems(arch_ids, max_problems=max_problems)
+    ds = build_model_dataset(problems, device_name=device_name)
+    return tune(
+        ds,
+        n_kernels=n_kernels,
+        method=method,
+        normalization=normalization,
+        classifier=classifier,
+        seed=seed,
+        attn_arch_ids=arch_ids,
+    )
+
+
+def save_result(result: TuneResult, path: str | Path) -> None:
+    result.deployment.meta.update(
+        oracle_fraction=result.oracle_fraction,
+        classifier_fraction=result.classifier_fraction,
+    )
+    result.deployment.save(path)

@@ -1,0 +1,117 @@
+"""Deterministic, step-indexed synthetic token pipeline.
+
+Design goals (1000+-node posture):
+
+  * **Stateless addressing** — batch ``i`` is a pure function of
+    ``(seed, step, shard)``; there is no iterator state to checkpoint.  Exact
+    resume after preemption = "continue from step N".  Elastic resize =
+    re-derive shards from the new topology; every host always computes only
+    its own shard.
+  * **Host-sharded** — each data-parallel host generates exactly its slice of
+    the global batch (``host_index / host_count``); no cross-host traffic.
+  * **Structured synthetic text** — a seeded Markov chain over the vocab (not
+    iid-uniform) so the LM loss actually decreases and overfit bugs are
+    visible in the examples; targets are next-token shifted.
+
+The same pipeline serves all 10 architectures: the registry's ``input_specs``
+decides which extra modality stubs (frames / image embeddings) are attached.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 128
+    host_index: int = 0
+    host_count: int = 1
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.host_count == 0, (self.global_batch, self.host_count)
+        return self.global_batch // self.host_count
+
+
+def _fold(*parts: int) -> np.random.Generator:
+    """Deterministic RNG from structural coordinates (no global state)."""
+    return np.random.default_rng(np.array(parts, dtype=np.uint64))
+
+
+class MarkovChain:
+    """Order-1 seeded Markov chain with a low-rank transition structure.
+
+    Sampling is vectorized: states map to one of ``n_groups`` regimes, each
+    regime has a peaked next-token distribution — cheap, deterministic, and
+    learnable (a trained LM reaches materially lower loss than uniform).
+    """
+
+    def __init__(self, vocab: int, seed: int, n_groups: int = 64, peak: int = 8):
+        self.vocab = vocab
+        rng = _fold(seed, 0xC0FFEE)
+        self.n_groups = min(n_groups, vocab)
+        self.group_of = rng.integers(0, self.n_groups, size=vocab)
+        # Each group strongly prefers `peak` particular successor tokens.
+        self.peaks = rng.integers(0, vocab, size=(self.n_groups, peak))
+
+    def sample(self, rng: np.random.Generator, batch: int, seq_len: int) -> np.ndarray:
+        out = np.empty((batch, seq_len), dtype=np.int32)
+        out[:, 0] = rng.integers(0, self.vocab, size=batch)
+        # 85%: one of the group's peak tokens; 15%: uniform exploration.
+        peak_choice = rng.integers(0, self.peaks.shape[1], size=(batch, seq_len))
+        uniform = rng.integers(0, self.vocab, size=(batch, seq_len))
+        explore = rng.random((batch, seq_len)) < 0.15
+        for t in range(1, seq_len):
+            g = self.group_of[out[:, t - 1]]
+            nxt = self.peaks[g, peak_choice[:, t]]
+            out[:, t] = np.where(explore[:, t], uniform[:, t], nxt)
+        return out
+
+
+class TokenPipeline:
+    """``batch(step)`` -> host-local training batch for one architecture."""
+
+    def __init__(self, cfg: ArchConfig, data: DataConfig):
+        self.cfg = cfg
+        self.data = data
+        self.chain = MarkovChain(cfg.vocab, data.seed)
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        d = self.data
+        rng = _fold(d.seed, step, d.host_index)
+        b, s = d.local_batch, d.seq_len
+        # +1 token then shift -> (tokens, targets).
+        toks = self.chain.sample(rng, b, s + 1)
+        out: dict[str, np.ndarray] = {
+            "tokens": toks[:, :-1],
+            "targets": toks[:, 1:],
+        }
+        if self.cfg.family == "vlm":
+            out["image_embs"] = rng.standard_normal(
+                (b, self.cfg.n_image_tokens, self.cfg.d_model), dtype=np.float32
+            ).astype(jnp.bfloat16)
+        elif self.cfg.family == "audio":
+            out["frames"] = rng.standard_normal((b, s, self.cfg.d_model), dtype=np.float32).astype(
+                jnp.bfloat16
+            )
+        return out
+
+    def device_batch(self, step: int, dtype=jnp.float32) -> dict[str, jax.Array]:
+        np_batch = self.batch(step)
+        return {
+            k: jnp.asarray(v if v.dtype != np.float32 else v.astype(dtype))
+            for k, v in np_batch.items()
+        }
+
+
+def reshard(data: DataConfig, host_index: int, host_count: int) -> DataConfig:
+    """Elastic resize: same stream, new topology (stateless => trivial)."""
+    return dataclasses.replace(data, host_index=host_index, host_count=host_count)

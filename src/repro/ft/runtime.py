@@ -1,0 +1,123 @@
+"""Fault-tolerance runtime: preemption, stragglers, elastic resize.
+
+On a real fleet each of these hooks binds to infrastructure signals (SIGTERM
+from the scheduler, per-host step heartbeats, topology-change events).  The
+*logic* is host-agnostic and fully exercised by tests on this single-host
+container:
+
+  * :class:`PreemptionGuard` — converts SIGTERM/SIGINT into a "checkpoint
+    now, then exit cleanly" request the training loop polls between steps.
+  * :class:`StragglerDetector` — rolling per-step wall-time percentiles; a
+    step slower than ``threshold`` x median flags a straggler (on a fleet:
+    per-host heartbeat times, same math).  The trainer's mitigation is to log
+    + (optionally) trigger an elastic checkpoint so the scheduler can swap
+    the slow host.
+  * :func:`elastic_plan` — given old/new host counts, returns the resume plan
+    (new DataConfig shards + whether the global batch stays divisible).
+    Checkpoints are sharding-agnostic (see repro.ckpt), so resize = restore
+    on the new mesh + re-derive data shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from collections import deque
+
+from repro.data.pipeline import DataConfig, reshard
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> graceful 'save and exit' request (poll per step)."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._requested = threading.Event()
+        self._signals = signals
+        self._prev = {}
+
+    def __enter__(self):
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+        return False
+
+    def _handler(self, signum, frame):
+        self._requested.set()
+
+    def request(self) -> None:  # for tests / in-process triggers
+        self._requested.set()
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested.is_set()
+
+
+class StragglerDetector:
+    """Rolling step-time stats; flags steps slower than threshold x median."""
+
+    def __init__(self, window: int = 50, threshold: float = 2.0, warmup: int = 5):
+        self.window = window
+        self.threshold = threshold
+        self.warmup = warmup
+        self.times: deque[float] = deque(maxlen=window)
+        self.flagged: list[tuple[int, float, float]] = []  # (step, t, median)
+        self._step = 0
+        self._t0: float | None = None
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self) -> bool:
+        """Record the step; returns True if it was a straggler step."""
+        assert self._t0 is not None, "stop() without start()"
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        self._step += 1
+        is_straggler = self.observe(dt)
+        return is_straggler
+
+    def observe(self, dt: float) -> bool:
+        med = self.median()
+        straggler = (
+            len(self.times) >= self.warmup and med > 0 and dt > self.threshold * med
+        )
+        if straggler:
+            self.flagged.append((self._step, dt, med))
+        self.times.append(dt)
+        return straggler
+
+    def median(self) -> float:
+        if not self.times:
+            return 0.0
+        s = sorted(self.times)
+        return s[len(s) // 2]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    ok: bool
+    reason: str
+    data: DataConfig | None = None
+
+
+def elastic_plan(data: DataConfig, new_host_index: int, new_host_count: int) -> ElasticPlan:
+    """Resume plan after the fleet grows/shrinks.
+
+    The checkpoint needs no conversion (sharding-agnostic). The only
+    constraint is global-batch divisibility across the new host count.
+    """
+    if new_host_count <= 0:
+        return ElasticPlan(False, "host count must be positive")
+    if data.global_batch % new_host_count != 0:
+        return ElasticPlan(
+            False,
+            f"global_batch={data.global_batch} not divisible by {new_host_count} hosts",
+        )
+    if not (0 <= new_host_index < new_host_count):
+        return ElasticPlan(False, f"host index {new_host_index} out of range")
+    return ElasticPlan(True, "ok", reshard(data, new_host_index, new_host_count))

@@ -1,0 +1,202 @@
+"""Jit'd kernel entry points + the runtime kernel-selection hook (paper §5).
+
+This is the "kernel launcher" of the paper: every matmul in the framework
+routes through :func:`matmul`, which consults the installed
+:class:`KernelPolicy` to pick one of the *deployed* kernel configurations for
+the problem size at trace time (JAX shapes are static, so trace time is the
+TPU-native "runtime" — see DESIGN.md §2).
+
+A policy is produced by ``repro.core.tuner`` from benchmark data.  With no
+policy installed (or on hosts without a TPU), the op falls back to XLA's
+``jnp.dot`` — numerically identical to the Pallas path (same f32
+accumulation), which the kernel tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+from .attention import DEFAULT_ATTN_CONFIG, AttentionConfig, flash_attention_pallas
+from .matmul import DEFAULT_CONFIG, MatmulConfig, matmul_pallas
+from .ref import flash_attention_ref
+from .ssm import DEFAULT_SSM_CONFIG, SsmConfig, ssm_scan_pallas
+from .wkv import DEFAULT_WKV_CONFIG, WkvConfig, wkv_pallas
+
+
+class KernelPolicy(Protocol):
+    """Maps a GEMM problem to the deployed config that should run it."""
+
+    def select_matmul(self, m: int, k: int, n: int, batch: int) -> MatmulConfig: ...
+
+    def select_attention(self, sq: int, skv: int, d: int) -> AttentionConfig: ...
+
+
+@dataclasses.dataclass
+class FixedPolicy:
+    """Single-kernel baseline (what an untuned library ships)."""
+
+    matmul_config: MatmulConfig = DEFAULT_CONFIG
+    attention_config: AttentionConfig = DEFAULT_ATTN_CONFIG
+
+    def select_matmul(self, m, k, n, batch):
+        return self.matmul_config
+
+    def select_attention(self, sq, skv, d):
+        return self.attention_config
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.policy: KernelPolicy | None = None
+        self.use_pallas: bool = False  # CPU host default: XLA dot
+        self.interpret: bool = False
+        self.selection_log: list[tuple] = []
+
+
+_state = _State()
+
+
+def set_kernel_policy(policy: KernelPolicy | None) -> None:
+    _state.policy = policy
+
+
+def get_kernel_policy() -> KernelPolicy | None:
+    return _state.policy
+
+
+def set_pallas_enabled(enabled: bool, *, interpret: bool = False) -> None:
+    """Route matmuls through the Pallas kernels (interpret=True on CPU)."""
+    _state.use_pallas = enabled
+    _state.interpret = interpret
+
+
+def selection_log() -> list[tuple]:
+    """Trace-time dispatch decisions (op, problem, chosen config)."""
+    return list(_state.selection_log)
+
+
+def clear_selection_log() -> None:
+    _state.selection_log.clear()
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+def matmul(lhs: jax.Array, rhs: jax.Array, *, out_dtype=None, config: MatmulConfig | None = None) -> jax.Array:
+    """``lhs @ rhs`` with ML-guided kernel selection.
+
+    ``lhs``: (..., k) — leading dims are flattened into the GEMM M dimension.
+    ``rhs``: (k, n).
+    """
+    if rhs.ndim != 2:
+        raise ValueError(f"rhs must be 2-D, got {rhs.shape}")
+    *lead, k = lhs.shape
+    n = rhs.shape[1]
+    m = 1
+    for d in lead:
+        m *= d
+    if config is None and _state.policy is not None:
+        config = _state.policy.select_matmul(m, k, n, 1)
+        _state.selection_log.append(("matmul", (m, k, n, 1), config))
+    if not _state.use_pallas:
+        out = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
+        return out.astype(out_dtype or lhs.dtype)
+    lhs2 = lhs.reshape(m, k)
+    out = matmul_pallas(lhs2, rhs, config or DEFAULT_CONFIG, out_dtype=out_dtype, interpret=_state.interpret)
+    return out.reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    config: AttentionConfig | None = None,
+) -> jax.Array:
+    """Multi-head attention: q (..., sq, d), k/v (..., skv, d).
+
+    Leading dims (batch, heads) are vmapped over the single-head kernel.
+    """
+    sq, d = q.shape[-2:]
+    skv = k.shape[-2]
+    if config is None and _state.policy is not None:
+        config = _state.policy.select_attention(sq, skv, d)
+        _state.selection_log.append(("attention", (sq, skv, d), config))
+    if not _state.use_pallas:
+        fn = lambda q_, k_, v_: flash_attention_ref(q_, k_, v_, causal=causal, scale=scale)
+    else:
+        cfg = config or DEFAULT_ATTN_CONFIG
+        fn = lambda q_, k_, v_: flash_attention_pallas(
+            q_, k_, v_, cfg, causal=causal, scale=scale, interpret=_state.interpret
+        )
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# wkv (RWKV6 recurrence)
+# ---------------------------------------------------------------------------
+def wkv(r, k, v, logw, u, state=None, *, config: WkvConfig | None = None):
+    """Chunked WKV: r/k/v/logw (B, S, H, hd); u (H, hd); state (B, H, hd, hd).
+
+    Returns (o (B, S, H, hd) f32, final_state).  Dispatches to the Pallas
+    kernel when enabled; otherwise the jnp reference (identical math).
+    """
+    b, s, h, hd = r.shape
+    if config is None and _state.policy is not None and hasattr(_state.policy, "select_wkv"):
+        config = _state.policy.select_wkv(s, hd)
+        _state.selection_log.append(("wkv", (s, hd), config))
+    if not _state.use_pallas:
+        from .ref import wkv_ref
+
+        return wkv_ref(r, k, v, logw, u, state)
+    if state is None:
+        import jax.numpy as _jnp
+
+        state = _jnp.zeros((b, h, hd, hd), _jnp.float32)
+    cfg = config or DEFAULT_WKV_CONFIG
+    one = lambda rr, kk, vv, ww, uu, ss: wkv_pallas(
+        rr, kk, vv, ww, uu, ss, cfg, interpret=_state.interpret
+    )
+    fn = jax.vmap(jax.vmap(one, in_axes=(1, 1, 1, 1, 0, 0)), in_axes=(0, 0, 0, 0, None, 0))
+    o, s_out = fn(r, k, v, logw, u, state)
+    return o.transpose(0, 2, 1, 3), s_out  # (B,H,S,hd) -> (B,S,H,hd)
+
+
+# ---------------------------------------------------------------------------
+# selective-SSM scan (Mamba / Hymba recurrence)
+# ---------------------------------------------------------------------------
+def ssm_scan(dtx, dta, b, v_c, state=None, *, config: SsmConfig | None = None):
+    """Fused selective-SSM scan: dtx (B,S,d); dta (B,S,d,N); b/v_c (B,S,N).
+
+    Returns (y (B,S,d) f32, final_state (B,d,N) f32).  Pallas path keeps the
+    (d, N) state in VMEM (no (B,S,d,N) HBM materialization); jnp path is the
+    associative-scan oracle.
+    """
+    if config is None and _state.policy is not None and hasattr(_state.policy, "select_ssm"):
+        config = _state.policy.select_ssm(dtx.shape[1], dtx.shape[2])
+        _state.selection_log.append(("ssm_scan", dtx.shape[1:3], config))
+    if not _state.use_pallas:
+        from .ref import ssm_scan_ref
+
+        return ssm_scan_ref(dtx, dta, b, v_c, state)
+    cfg = config or DEFAULT_SSM_CONFIG
+    one = lambda x_, a_, b_, c_, s_: ssm_scan_pallas(
+        x_, a_, b_, c_, s_, cfg, interpret=_state.interpret
+    )
+    if state is None:
+        import jax.numpy as _jnp
+
+        bsz, _, d = dtx.shape
+        state = _jnp.zeros((bsz, d, b.shape[-1]), _jnp.float32)
+    return jax.vmap(one)(dtx, dta, b, v_c, state)

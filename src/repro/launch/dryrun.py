@@ -1,0 +1,240 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+CPU devices stand in for 2 TPU-v5e pods.  For every cell we record
+``memory_analysis()`` (fits?), ``cost_analysis()`` (FLOPs/bytes) and the
+collective schedule parsed from the compiled HLO — the inputs to
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --all [--mesh both]
+  python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k --mesh single
+"""
+# The XLA device-count override MUST precede any jax-touching import.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import registry  # noqa: E402
+from repro.dist import sharding as shd  # noqa: E402
+from repro.launch.hloanalysis import collective_bytes  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.train.train_step import make_train_step  # noqa: E402
+
+
+def _specs_to_shardings(tree, mesh):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), tree)
+
+
+def build_cell(arch: str, shape: str, mesh, opts: frozenset = frozenset()):
+    """Build (fn, example_args, in_shardings, out_shardings, donate) for a cell.
+
+    ``opts`` — §Perf hillclimb variants, recorded per-artifact:
+      'grad_bf16'   — all-reduce gradients in bf16 (halves DP-reduction bytes)
+      'micro4'      — 4-way microbatch gradient accumulation
+      'cache_seq_model' — context-parallel decode: KV-cache time dim over 'model'
+      'seq_model'   — Megatron SP: activations shard S over 'model' (train/prefill)
+    """
+    cfg = registry.get(arch)
+    sp = registry.SHAPES[shape]
+    kv_quant = "kv_int8" in opts and cfg.family in ("dense", "moe", "vlm")
+    model = build_model(cfg, dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, kv_quant=kv_quant)
+    shard_seq = shape == "long_500k"
+    kv_seq_axis = "model" if "cache_seq_model" in opts else None
+
+    # Anchor activation sharding: DP on batch (SP on sequence for long ctx).
+    from repro.models import layers as _L
+
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if shard_seq:
+        _L.set_activation_sharding(batch_axes=None, seq_axes="data")
+    elif "seq_model" in opts and sp.kind in ("train", "prefill"):
+        # Megatron-style sequence parallelism: residual-stream activations
+        # shard S over 'model' between blocks, so TP output all-reduces
+        # become reduce-scatters (§Perf hillclimb option).
+        _L.set_activation_sharding(batch_axes=dp, seq_axes="model")
+    else:
+        _L.set_activation_sharding(batch_axes=dp, seq_axes=None)
+    _L.set_remat_policy("dots" if "remat_dots" in opts else "full")
+    if "moe_cap_data" in opts:
+        # EP buffers: experts over 'model', capacity over 'data' — expert-GEMM
+        # partial sums become reduce-scatters instead of all-reduces.
+        _L.set_moe_sharding(ep_axes="model", cap_axes="data")
+    else:
+        _L.set_moe_sharding(None, None)
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_spec = shd.param_pspecs(params_shape, mesh)
+    p_sh = _specs_to_shardings(p_spec, mesh)
+    inputs = registry.input_specs(arch, shape)
+
+    if sp.kind == "train":
+        opt_shape = jax.eval_shape(adamw.init, params_shape)
+        o_spec = shd.opt_pspecs(opt_shape, p_spec)
+        o_sh = _specs_to_shardings(o_spec, mesh)
+        batch_sh = _specs_to_shardings(shd.batch_pspecs(inputs, mesh), mesh)
+        opt_cfg = adamw.AdamWConfig(
+            grad_dtype="bfloat16" if "grad_bf16" in opts else "float32"
+        )
+        step = make_train_step(
+            model, opt_cfg, num_microbatches=4 if "micro4" in opts else 1
+        )
+        metrics_sh = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()),
+            jax.eval_shape(step, params_shape, opt_shape, inputs)[2],
+        )
+        return dict(
+            fn=step,
+            args=(params_shape, opt_shape, inputs),
+            in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(p_sh, o_sh, metrics_sh),
+            donate_argnums=(0, 1),
+        )
+
+    if sp.kind == "prefill":
+        cache_len = sp.seq_len
+        fn = lambda params, batch: model.prefill(params, batch, cache_len)
+        batch_sh = _specs_to_shardings(shd.batch_pspecs(inputs, mesh), mesh)
+        logits_shape, cache_shape = jax.eval_shape(fn, params_shape, inputs)
+        c_sh = _specs_to_shardings(
+            shd.cache_pspecs(cache_shape, mesh, shard_seq=shard_seq, kv_seq_axis=kv_seq_axis),
+            mesh,
+        )
+        l_sh = NamedSharding(mesh, shd.batch_pspecs(logits_shape, mesh))
+        return dict(
+            fn=fn,
+            args=(params_shape, inputs),
+            in_shardings=(p_sh, batch_sh),
+            out_shardings=(l_sh, c_sh),
+            donate_argnums=(),
+        )
+
+    # decode: one token against a full-length cache
+    b = sp.global_batch
+    cache_shape = jax.eval_shape(lambda: model.init_cache(b, sp.seq_len))
+    if cfg.family == "audio":  # decoder needs the encoder memory
+        cache_shape = dict(cache_shape)
+        cache_shape["memory"] = jax.ShapeDtypeStruct((b, sp.seq_len, cfg.d_model), jnp.bfloat16)
+    c_spec = shd.cache_pspecs(cache_shape, mesh, shard_seq=shard_seq, kv_seq_axis=kv_seq_axis)
+    c_sh = _specs_to_shardings(c_spec, mesh)
+    fn = lambda params, cache, tokens, positions: model.decode_step(params, cache, tokens, positions)
+    logits_shape, _ = jax.eval_shape(fn, params_shape, cache_shape, inputs["tokens"], inputs["positions"])
+    if shard_seq:
+        # batch=1 long-context: per-step inputs/outputs are tiny — replicate
+        # them (the resident state is what's sharded, over sequence/feature).
+        tok_sh = {
+            k: NamedSharding(mesh, P(*([None] * len(v.shape)))) for k, v in inputs.items()
+        }
+        l_sh = NamedSharding(mesh, P(*([None] * len(logits_shape.shape))))
+    else:
+        tok_sh = _specs_to_shardings(shd.batch_pspecs(
+            {k: v for k, v in inputs.items()}, mesh, shard_seq=False), mesh)
+        l_sh = NamedSharding(mesh, shd.batch_pspecs(logits_shape, mesh))
+    return dict(
+        fn=fn,
+        args=(params_shape, cache_shape, inputs["tokens"], inputs["positions"]),
+        in_shardings=(p_sh, c_sh, tok_sh["tokens"], tok_sh["positions"]),
+        out_shardings=(l_sh, c_sh),
+        donate_argnums=(1,),
+    )
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path, opts: frozenset = frozenset()) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    t0 = time.time()
+    with mesh:
+        cell = build_cell(arch, shape, mesh, opts)
+        jitted = jax.jit(
+            cell["fn"],
+            in_shardings=cell["in_shardings"],
+            out_shardings=cell["out_shardings"],
+            donate_argnums=cell["donate_argnums"],
+        )
+        lowered = jitted.lower(*cell["args"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        colls = collective_bytes(compiled.as_text())
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "opts": sorted(opts),
+        "devices": int(mesh.size),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "collectives": colls,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = ("@" + "+".join(sorted(opts))) if opts else ""
+    (out_dir / f"{arch}__{shape}__{mesh_kind}{suffix}.json").write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opt", default="", help="comma-separated §Perf options, e.g. grad_bf16,cache_seq_model")
+    ap.add_argument("--skip-existing", action="store_true", help="skip cells with a committed record")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    cells = registry.all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    opts = frozenset(o for o in args.opt.split(",") if o)
+    failures = []
+    suffix = ("@" + "+".join(sorted(opts))) if opts else ""
+    for arch, shape in cells:
+        for mk in meshes:
+            tag = f"{arch} x {shape} x {mk}"
+            if args.skip_existing and (out_dir / f"{arch}__{shape}__{mk}{suffix}.json").exists():
+                print(f"SKIP-EXISTING {tag}")
+                continue
+            try:
+                rec = run_cell(arch, shape, mk, out_dir, opts)
+                per_dev_gb = (rec["argument_bytes"] + rec["temp_bytes"]) / 2**30
+                print(
+                    f"PASS {tag}: compile={rec['compile_s']}s "
+                    f"flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
+                    f"arg+temp/dev={per_dev_gb:.2f}GiB "
+                    f"colls={ {k: v for k, v in rec['collectives'].items() if k.endswith('_count')} }",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001 — a failing cell is a bug we must surface
+                failures.append((tag, repr(e)))
+                print(f"FAIL {tag}: {e!r}", flush=True)
+    for skip in registry.skipped_cells():
+        print(f"SKIP {skip[0]} x {skip[1]}: {skip[2]}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: {[f[0] for f in failures]}")
+
+
+if __name__ == "__main__":
+    main()

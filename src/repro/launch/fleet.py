@@ -1,0 +1,81 @@
+"""Multi-host fleet bootstrap: jax.distributed + topology-derived configs.
+
+On a real TPU fleet every host runs the same binary:
+
+  python -m repro.launch.train --arch ... --fleet
+
+and this module turns scheduler-provided environment variables into the
+process-level jax.distributed initialization plus the host-sharded
+DataConfig.  Env contract (GKE/JobSet-style; SLURM variables are mapped):
+
+  REPRO_COORDINATOR   host:port of process 0   (or SLURM nodelist head)
+  REPRO_NUM_PROCESSES total host count         (or SLURM_NTASKS)
+  REPRO_PROCESS_ID    this host's index        (or SLURM_PROCID)
+
+Elastic restarts re-enter through the same path: after the scheduler
+replaces a host, every process re-initializes with the new topology and the
+trainer resumes from the latest committed checkpoint with a re-derived
+``DataConfig`` (see ft.elastic_plan) — the checkpoint format is
+sharding-agnostic, so no conversion step exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro.data.pipeline import DataConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetTopology:
+    coordinator: str
+    num_processes: int
+    process_id: int
+
+    @property
+    def is_multihost(self) -> bool:
+        return self.num_processes > 1
+
+
+def topology_from_env(env: dict | None = None) -> FleetTopology:
+    """Read the fleet topology from the scheduler environment."""
+    e = env if env is not None else os.environ
+    coord = e.get("REPRO_COORDINATOR") or e.get("SLURM_LAUNCH_NODE_IPADDR", "localhost:12355")
+    if ":" not in coord:
+        coord = f"{coord}:12355"
+    n = int(e.get("REPRO_NUM_PROCESSES") or e.get("SLURM_NTASKS") or 1)
+    pid = int(e.get("REPRO_PROCESS_ID") or e.get("SLURM_PROCID") or 0)
+    if not (0 <= pid < n):
+        raise ValueError(f"process id {pid} out of range for {n} processes")
+    return FleetTopology(coord, n, pid)
+
+
+def initialize(topology: FleetTopology | None = None) -> FleetTopology:
+    """Initialize jax.distributed for multi-host meshes (no-op single-host).
+
+    Must run before any other jax call on every host; after it,
+    ``jax.devices()`` spans the fleet and ``make_production_mesh`` builds the
+    global mesh exactly as in the dry-run.
+    """
+    topo = topology or topology_from_env()
+    if topo.is_multihost:
+        import jax
+
+        jax.distributed.initialize(
+            coordinator_address=topo.coordinator,
+            num_processes=topo.num_processes,
+            process_id=topo.process_id,
+        )
+    return topo
+
+
+def fleet_data_config(base: DataConfig, topo: FleetTopology) -> DataConfig:
+    """Host-shard the data pipeline to this process (stateless resume/elastic)."""
+    if base.global_batch % topo.num_processes != 0:
+        raise ValueError(
+            f"global_batch={base.global_batch} not divisible by "
+            f"{topo.num_processes} hosts (see ft.elastic_plan)"
+        )
+    return dataclasses.replace(
+        base, host_index=topo.process_id, host_count=topo.num_processes
+    )

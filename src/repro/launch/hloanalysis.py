@@ -1,0 +1,38 @@
+"""Compiled-HLO analysis helpers (no jax import — safe anywhere).
+
+Parses collective ops and their shard byte counts out of ``compiled.as_text()``
+for the §Roofline collective term.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_ARRAY_RE = re.compile(r"(pred|[sfu](?:8|16|32|64)|bf16)\[([0-9,]*)\]")
+_LINE_RE = re.compile(r"%?[\w.\-]+\s*=\s*(.+?)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-array bytes of every collective op in the compiled HLO."""
+    out: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.match(line.strip())
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        nbytes = 0.0
+        for dt, dims in _ARRAY_RE.findall(result_type):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+        counts[op] += 1
+    return {**{f"{k}_bytes": v for k, v in out.items()}, **{f"{k}_count": counts[k] for k in counts}}

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module does not
+touch JAX device state — the dry-run sets XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist on this host (smoke tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto))

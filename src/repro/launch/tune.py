@@ -1,0 +1,66 @@
+"""Tuning CLI: produce a shippable kernel deployment for a device.
+
+The operator tool for new-hardware bring-up (the paper's zero-developer-
+effort pitch):
+
+  python -m repro.launch.tune --device tpu_v5e --out deploy.json
+  python -m repro.launch.tune --device host_cpu --out deploy.json   # measured
+  python -m repro.launch.tune --device tpu_v5e --archs granite-8b,glm4-9b
+
+The artifact is consumed by trainers/servers via
+``ops.set_kernel_policy(Deployment.load(path))`` or ``--deployment`` on the
+train/serve launchers.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import registry
+from repro.core.cluster import CLUSTER_METHODS
+from repro.core.normalize import NORMALIZATIONS
+from repro.core.tuner import save_result, tune, tune_for_archs
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--device", default="tpu_v5e", choices=["tpu_v5e", "tpu_v4", "host_cpu"])
+    ap.add_argument("--archs", default=None, help="comma-separated arch ids (default: all)")
+    ap.add_argument("--n-kernels", type=int, default=8)
+    ap.add_argument("--method", default="pca_kmeans", choices=CLUSTER_METHODS)
+    ap.add_argument("--normalization", default="standard", choices=NORMALIZATIONS)
+    ap.add_argument("--classifier", default="DecisionTreeA")
+    ap.add_argument("--max-problems", type=int, default=300)
+    ap.add_argument("--cpu-problems", type=int, default=24)
+    ap.add_argument("--out", required=True)
+    args = ap.parse_args(argv)
+
+    archs = args.archs.split(",") if args.archs else None
+    if archs:
+        for a in archs:
+            registry.get(a)  # validate early
+
+    if args.device == "host_cpu":
+        from repro.core.cpubench import build_cpu_dataset, cpu_problems
+
+        print(f"measuring {args.cpu_problems} problems x 210 configs on this host...")
+        ds = build_cpu_dataset(cpu_problems(args.cpu_problems), verbose=True)
+        result = tune(
+            ds, n_kernels=args.n_kernels, method=args.method,
+            normalization=args.normalization, classifier=args.classifier,
+            attn_arch_ids=archs,
+        )
+    else:
+        result = tune_for_archs(
+            archs, device_name=args.device, n_kernels=args.n_kernels,
+            method=args.method, normalization=args.normalization,
+            classifier=args.classifier, max_problems=args.max_problems,
+        )
+    save_result(result, args.out)
+    print(f"deployment -> {args.out}")
+    print(f"  matmul kernels:    {[c.name() for c in result.deployment.configs]}")
+    print(f"  attention kernels: {[c.name() for c in result.deployment.attention_configs]}")
+    print(f"  oracle {result.oracle_fraction:.1%} / classifier {result.classifier_fraction:.1%}")
+
+
+if __name__ == "__main__":
+    main()

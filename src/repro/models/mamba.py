@@ -1,0 +1,68 @@
+"""Selective SSM (Mamba-style) head for the Hymba hybrid architecture.
+
+Parallel-scan training path (jax.lax.associative_scan over the sequence) and
+O(1)-state decode path.  The depthwise conv of full Mamba is omitted (noted
+in DESIGN.md); the selective state-space core (input-dependent dt/B/C,
+diagonal A) is faithful.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+_DT_RANK = 48
+
+
+def init_mamba(rng, cfg, dtype=jnp.float32, n_layers: int | None = None) -> dict:
+    n = n_layers if n_layers is not None else cfg.n_layers
+    d, ns = cfg.d_model, cfg.ssm_state
+    ks = jax.random.split(rng, 7)
+    scale = lambda a, b: (2.0 / (a + b)) ** 0.5
+    return {
+        "w_in": (jax.random.normal(ks[0], (n, d, 2 * d)) * scale(d, 2 * d)).astype(dtype),
+        "w_dt1": (jax.random.normal(ks[1], (n, d, _DT_RANK)) * scale(d, _DT_RANK)).astype(dtype),
+        "w_dt2": (jax.random.normal(ks[2], (n, _DT_RANK, d)) * scale(_DT_RANK, d)).astype(dtype),
+        "w_b": (jax.random.normal(ks[3], (n, d, ns)) * scale(d, ns)).astype(dtype),
+        "w_c": (jax.random.normal(ks[4], (n, d, ns)) * scale(d, ns)).astype(dtype),
+        "a_log": jnp.broadcast_to(jnp.log(jnp.arange(1, ns + 1, dtype=jnp.float32)), (n, d, ns)).astype(dtype)
+        * 0.5,
+        "d_skip": jnp.ones((n, d), dtype),
+        "w_out": (jax.random.normal(ks[6], (n, d, d)) * scale(d, d)).astype(dtype),
+    }
+
+
+def _ssm_inputs(p: dict, x: jax.Array, cfg):
+    """Common projections.  x: (B, S, d) -> (xin, z, dt, b, c, a)."""
+    xz = ops.matmul(x, p["w_in"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    dt = jax.nn.softplus(ops.matmul(ops.matmul(xin, p["w_dt1"]), p["w_dt2"]).astype(jnp.float32))
+    b = ops.matmul(xin, p["w_b"]).astype(jnp.float32)  # (B,S,N)
+    c = ops.matmul(xin, p["w_c"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (d, N), negative
+    return xin, z, dt, b, c, a
+
+
+def mamba_layer(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Training/prefill path: fused selective scan (ops.ssm_scan dispatches
+    to the Pallas kernel when enabled; jnp associative-scan oracle otherwise)."""
+    bsz, s, d = x.shape
+    xin, z, dt, b, c, a = _ssm_inputs(p, x, cfg)
+    dtx = dt * xin.astype(jnp.float32)  # (B,S,d)
+    dta = dt[..., None] * a  # (B,S,d,N)
+    y, h_last = ops.ssm_scan(dtx, dta, b, c)
+    y = y + p["d_skip"].astype(jnp.float32) * xin.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return ops.matmul(y.astype(x.dtype), p["w_out"]), h_last  # (B,S,d), (B,d,N)
+
+
+def mamba_decode_step(p: dict, x: jax.Array, state: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """Decode: x (B, 1, d), state (B, d, N) -> (out (B,1,d), new state)."""
+    xin, z, dt, b, c, a = _ssm_inputs(p, x, cfg)
+    abar = jnp.exp(dt[:, 0, :, None] * a)  # (B,d,N)
+    bx = (dt[:, 0] * xin[:, 0].astype(jnp.float32))[..., None] * b[:, 0, None, :]
+    new_state = abar * state + bx
+    y = (new_state * c[:, 0, None, :]).sum(-1) + p["d_skip"].astype(jnp.float32) * xin[:, 0].astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    return ops.matmul(y.astype(x.dtype), p["w_out"])[:, None], new_state

@@ -1,0 +1,175 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent decay.
+
+Training path uses the chunked linear-recurrence algorithm (intra-chunk
+factored matmuls + inter-chunk state scan), which is how RWKV6/GLA run on
+matmul hardware; decode is the O(1)-state recurrence.  The paper's GEMM
+selection technique is inapplicable to the WKV recurrence itself (noted in
+DESIGN.md §4); all projections still route through the tuned matmul.
+
+Numerics: per-channel log-decay is clamped to [-5, -1e-3] and the chunk
+length kept at 16 so the factored intra-chunk exponentials stay within f32
+range (|cum| <= 80 -> e^80 ~ 5.5e34 < f32 max).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .layers import stacked_dense_init
+
+_CHUNK = 16
+_LOGW_MIN, _LOGW_MAX = -5.0, -1e-3
+_DECAY_RANK = 64
+
+
+def init_rwkv(rng, cfg, dtype=jnp.float32, n_layers: int | None = None) -> dict:
+    n = n_layers if n_layers is not None else cfg.n_layers
+    d, ff = cfg.d_model, cfg.d_ff
+    h, hd = cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(rng, 10)
+    mk = lambda key, a, b: stacked_dense_init(key, n, a, b, dtype)
+    return {
+        # time-mix
+        "mu_r": jnp.full((n, d), 0.5, dtype),
+        "mu_k": jnp.full((n, d), 0.5, dtype),
+        "mu_v": jnp.full((n, d), 0.5, dtype),
+        "mu_w": jnp.full((n, d), 0.5, dtype),
+        "mu_g": jnp.full((n, d), 0.5, dtype),
+        "w_r": mk(ks[0], d, h * hd),
+        "w_k": mk(ks[1], d, h * hd),
+        "w_v": mk(ks[2], d, h * hd),
+        "w_g": mk(ks[3], d, h * hd),
+        "w_o": mk(ks[4], h * hd, d),
+        "w0": jnp.full((n, d), -1.0, dtype),  # base log-log decay
+        "wd1": mk(ks[5], d, _DECAY_RANK),
+        "wd2": mk(ks[6], _DECAY_RANK, d),
+        "u": jnp.zeros((n, h, hd), dtype),  # per-head bonus
+        "ln_w": jnp.ones((n, h, hd), dtype),  # per-head output norm
+        # channel-mix
+        "mu_cr": jnp.full((n, d), 0.5, dtype),
+        "mu_ck": jnp.full((n, d), 0.5, dtype),
+        "w_ck": mk(ks[7], d, ff),
+        "w_cv": mk(ks[8], ff, d),
+        "w_cr": mk(ks[9], d, d),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """Token shift: x_{t-1} along the sequence (prev fills t=0)."""
+    shifted = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def _time_mix_inputs(p, xn, x_prev, cfg):
+    """Projections for the WKV op. xn: (B,S,d) normalized input."""
+    b, s, d = xn.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xs = _shift(xn, x_prev)
+    mix = lambda mu: xn * mu + xs * (1.0 - mu)
+    r = ops.matmul(mix(p["mu_r"]), p["w_r"]).reshape(b, s, h, hd)
+    k = ops.matmul(mix(p["mu_k"]), p["w_k"]).reshape(b, s, h, hd)
+    v = ops.matmul(mix(p["mu_v"]), p["w_v"]).reshape(b, s, h, hd)
+    g = ops.matmul(mix(p["mu_g"]), p["w_g"])
+    # Data-dependent per-channel decay (Finch): logw = -exp(w0 + lora(xw)).
+    xw = mix(p["mu_w"])
+    lora = ops.matmul(jnp.tanh(ops.matmul(xw, p["wd1"])), p["wd2"])
+    logw = -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+    logw = jnp.clip(logw, _LOGW_MIN, _LOGW_MAX).reshape(b, s, h, hd)
+    return r, k, v, g, logw
+
+
+def _head_norm(o: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Per-head RMS norm of the WKV output. o: (B,S,H,hd)."""
+    of = o.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(of * of, axis=-1, keepdims=True) + eps)
+    return of * scale * w.astype(jnp.float32)
+
+
+def wkv_chunked(r, k, v, logw, u, state=None, chunk: int = _CHUNK):
+    """Chunked WKV recurrence.
+
+    r/k/v/logw: (B, S, H, hd) (f32 math); u: (H, hd).
+    state: (B, H, hd, hd) initial (keys x values); defaults to zeros.
+    Returns (o (B,S,H,hd) f32, final_state).
+    """
+    b, s, h, hd = r.shape
+    rf, kf, vf, lw = (t.astype(jnp.float32) for t in (r, k, v, logw))
+    pad = (-s) % chunk
+    if pad:
+        rf, kf, vf = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (rf, kf, vf))
+        # Pad with zero decay + zero k/v: padding then alters neither the
+        # outputs nor the carried state (exact for any pad length).
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=0.0)
+    n_chunks = (s + pad) // chunk
+    # (n, B, H, L, hd)
+    resh = lambda t: t.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, lwc = resh(rf), resh(kf), resh(vf), resh(lw)
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    uu = u.astype(jnp.float32)[None, :, None, :]  # (1,H,1,hd)
+
+    def step(S, inp):
+        rr, kk, vv, ww = inp  # (B,H,L,hd)
+        cum = jnp.cumsum(ww, axis=2)  # (B,H,L,hd), decreasing
+        r_t = rr * jnp.exp(cum - ww)  # r̃_t = r_t e^{cum_{t-1}}
+        k_t = kk * jnp.exp(-cum)  # k̃_τ = k_τ e^{-cum_τ}  (bounded by clamp)
+        scores = jnp.einsum("bhlc,bhmc->bhlm", r_t, k_t)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(tri, scores, 0.0)
+        diag = jnp.einsum("bhlc,bhlc->bhl", rr, uu * kk)
+        o = jnp.einsum("bhlm,bhmv->bhlv", scores, vv) + diag[..., None] * vv
+        o = o + jnp.einsum("bhlc,bhcv->bhlv", r_t, S)  # incoming-state term
+        # State update: S' = e^{cum_L} ⊙_k S + Σ_τ (k_τ e^{cum_L - cum_τ}) v_τ^T
+        decay_all = jnp.exp(cum[:, :, -1, :])  # (B,H,hd)
+        k_hat = kk * jnp.exp(cum[:, :, -1:, :] - cum)
+        S_new = decay_all[..., None] * S + jnp.einsum("bhlc,bhlv->bhcv", k_hat, vv)
+        return S_new, o
+
+    final_state, o_chunks = jax.lax.scan(step, state, (rc, kc, vc, lwc))
+    o = o_chunks.transpose(1, 0, 3, 2, 4).reshape(b, n_chunks * chunk, h, hd)
+    return o[:, :s], final_state
+
+
+def wkv_decode_step(r, k, v, logw, u, state):
+    """Single-token WKV. r/k/v/logw: (B,1,H,hd); state (B,H,hd,hd)."""
+    rf, kf, vf = (t.astype(jnp.float32)[:, 0] for t in (r, k, v))  # (B,H,hd)
+    lw = logw.astype(jnp.float32)[:, 0]
+    uu = u.astype(jnp.float32)[None]
+    kv = jnp.einsum("bhc,bhv->bhcv", kf, vf)
+    o = jnp.einsum("bhc,bhcv->bhv", rf, state + uu[..., None] * kv)
+    new_state = jnp.exp(lw)[..., None] * state + kv
+    return o[:, None], new_state  # (B,1,H,hd)
+
+
+def time_mix_layer(p, xn, cfg, *, state=None, x_prev=None):
+    """Full RWKV6 time-mix sublayer on normalized input xn.
+
+    Returns (out (B,S,d), (wkv_state, last_x)).
+    """
+    b, s, d = xn.shape
+    r, k, v, g, logw = _time_mix_inputs(p, xn, x_prev, cfg)
+    if s == 1 and state is not None:
+        o, new_state = wkv_decode_step(r, k, v, logw, p["u"], state)
+    else:
+        # Dispatches to the Pallas WKV kernel when enabled (ops.wkv), else
+        # the jnp reference below — identical math either way.
+        o, new_state = ops.wkv(r, k, v, logw, p["u"], state)
+    o = _head_norm(o, p["ln_w"])
+    o = (o.reshape(b, s, -1) * jax.nn.silu(g.astype(jnp.float32))).astype(xn.dtype)
+    return ops.matmul(o, p["w_o"]), (new_state, xn[:, -1])
+
+
+def channel_mix_layer(p, xn, cfg, *, x_prev=None):
+    """RWKV channel-mix sublayer. Returns (out, last_x)."""
+    xs = _shift(xn, x_prev)
+    xk = xn * p["mu_ck"] + xs * (1.0 - p["mu_ck"])
+    xr = xn * p["mu_cr"] + xs * (1.0 - p["mu_cr"])
+    k = ops.matmul(xk, p["w_ck"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(xn.dtype)
+    kv = ops.matmul(k, p["w_cv"])
+    return jax.nn.sigmoid(ops.matmul(xr, p["w_cr"]).astype(jnp.float32)).astype(xn.dtype) * kv, xn[:, -1]

@@ -1,0 +1,155 @@
+"""Batched serving engine: slot-based continuous batching over a KV cache.
+
+The engine owns a fixed pool of ``max_batch`` cache slots of ``cache_len``
+tokens (static shapes => one compiled prefill fn and one compiled decode fn,
+reused for the whole serving lifetime — the same "few deployed kernels"
+economics as the paper's library setting; the ML-guided matmul selection in
+``repro.kernels.ops`` runs once at trace time for each of the two programs).
+
+Scheduling loop (``run``):
+  1. admit queued requests into free slots (prefill, one request at a time —
+     prefill shapes bucket by padded length);
+  2. one batched decode step advances *all* active slots;
+  3. finished sequences (EOS or max_new_tokens) free their slot.
+
+Per-slot position/valid bookkeeping lives in numpy on the host; tokens and
+caches stay on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    # filled by the engine
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _bucket(n: int, buckets: tuple[int, ...]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        max_batch: int = 4,
+        cache_len: int = 256,
+        prefill_buckets: tuple[int, ...] = (32, 64, 128),
+        extra_inputs: dict | None = None,
+    ):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.prefill_buckets = prefill_buckets
+        self.extra_inputs = extra_inputs or {}
+
+        self.cache = model.init_cache(max_batch, cache_len)
+        self.positions = np.zeros(max_batch, dtype=np.int32)  # next position to write
+        self.slots: list[Request | None] = [None] * max_batch
+        self.steps = 0
+
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill_cache = {}
+
+    # -- slot admission -------------------------------------------------------
+    def _free_slot(self) -> int | None:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            fn = lambda params, batch: self.model.prefill(params, batch, self.cache_len)
+            self._prefill_cache[plen] = jax.jit(fn)
+        return self._prefill_cache[plen]
+
+    def _admit(self, req: Request, slot: int) -> None:
+        plen = _bucket(len(req.prompt), self.prefill_buckets)
+        prompt = np.zeros(plen, dtype=np.int32)
+        prompt[-len(req.prompt) :] = req.prompt  # left-pad (causal end-aligned)
+        batch = {"tokens": jnp.asarray(prompt[None, :])}
+        for k, v in self.extra_inputs.items():
+            batch[k] = v[None] if v.ndim == len(v.shape) and v.shape[0] != 1 else v
+        logits, cache1 = self._prefill_fn(plen)(self.params, batch)
+        # Scatter the single-sequence prefill cache into this slot.
+        self.cache = jax.tree.map(
+            lambda full, one: _scatter_slot(full, one, slot), self.cache, cache1
+        )
+        first = int(jnp.argmax(logits[0, -1]))
+        req.output.append(first)
+        self.slots[slot] = req
+        self.positions[slot] = plen
+
+    # -- decode ---------------------------------------------------------------
+    def _decode_all(self) -> None:
+        tokens = np.zeros((self.max_batch, 1), dtype=np.int32)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                tokens[i, 0] = r.output[-1]
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.positions)
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            self.positions[i] += 1
+            tok = int(nxt[i])
+            r.output.append(tok)
+            if (
+                len(r.output) >= r.max_new_tokens
+                or (r.eos_id is not None and tok == r.eos_id)
+                or self.positions[i] >= self.cache_len - 1
+            ):
+                r.done = True
+                self.slots[i] = None
+        self.steps += 1
+
+    # -- public ---------------------------------------------------------------
+    def run(self, requests: list[Request], *, max_steps: int = 10_000) -> list[Request]:
+        """Serve a request list to completion with continuous batching."""
+        queue = list(requests)
+        while (queue or any(s is not None for s in self.slots)) and self.steps < max_steps:
+            while queue:
+                slot = self._free_slot()
+                if slot is None:
+                    break
+                self._admit(queue.pop(0), slot)
+            if any(s is not None for s in self.slots):
+                self._decode_all()
+        return requests
+
+
+def _scatter_slot(full: jax.Array, one: jax.Array, slot: int) -> jax.Array:
+    """Write a batch-1 cache entry into batch slot ``slot`` of the pool.
+
+    Cache leaves carry batch either at axis 0 (B, ...) or axis 1 (L, B, ...);
+    disambiguate by matching the batch-1 axis of ``one``.
+    """
+    if one.ndim != full.ndim:
+        raise ValueError(f"cache rank mismatch {one.shape} vs {full.shape}")
+    for axis in (0, 1):
+        if one.ndim > axis and one.shape[axis] == 1 and full.shape[axis] != one.shape[axis]:
+            idx = [slice(None)] * full.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return full.at[tuple(idx)].set(one)
+    # replicated leaf (e.g. shared encoder memory with matching batch): keep.
+    return full

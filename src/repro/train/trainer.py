@@ -1,0 +1,107 @@
+"""Trainer: data + train_step + checkpointing + fault-tolerance, composed.
+
+The production loop (used by launch/train.py and the examples):
+
+  * auto-resume from the latest committed checkpoint;
+  * async checkpoint every ``ckpt_every`` steps (+ final), keep-k GC;
+  * preemption guard: SIGTERM => checkpoint + clean exit (resumable);
+  * straggler detector on per-step wall time;
+  * deterministic step-indexed data => exact resume, elastic re-shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.ft.runtime import PreemptionGuard, StragglerDetector
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    num_microbatches: int = 1
+    dtype: object = jnp.float32
+
+
+class Trainer:
+    def __init__(self, model, arch_cfg, data_cfg: DataConfig, opt_cfg=None, tcfg=None):
+        self.model = model
+        self.arch_cfg = arch_cfg
+        self.data_cfg = data_cfg
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig()
+        self.tcfg = tcfg or TrainerConfig()
+        self.pipeline = TokenPipeline(arch_cfg, data_cfg)
+        self.ckpt = CheckpointManager(self.tcfg.ckpt_dir, keep=self.tcfg.ckpt_keep)
+        self.straggler = StragglerDetector()
+        self.step_fn = jax.jit(
+            make_train_step(model, self.opt_cfg, num_microbatches=self.tcfg.num_microbatches),
+            donate_argnums=(0, 1),
+        )
+        self.history: list[dict] = []
+
+    # -- state init / resume --------------------------------------------------
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.PRNGKey(seed))
+        return params, adamw.init(params)
+
+    def _state_tree(self, params, opt_state):
+        return {"params": params, "opt": opt_state._asdict()}
+
+    def resume_or_init(self, seed: int = 0):
+        params, opt_state = self.init_state(seed)
+        like = self._state_tree(params, opt_state)
+        got = self.ckpt.restore_latest(like)
+        if got is None:
+            return 0, params, opt_state
+        step, tree, _extra = got
+        opt = adamw.AdamWState(**tree["opt"])
+        return step, tree["params"], opt
+
+    # -- loop -------------------------------------------------------------------
+    def train(self, *, seed: int = 0, stop_after: int | None = None):
+        """Run to total_steps (or stop_after more steps); returns final metrics."""
+        start, params, opt_state = self.resume_or_init(seed)
+        end = self.tcfg.total_steps if stop_after is None else min(
+            self.tcfg.total_steps, start + stop_after
+        )
+        metrics = {}
+        with PreemptionGuard() as guard:
+            for step in range(start, end):
+                self.straggler.start()
+                batch = self.pipeline.device_batch(step, dtype=self.tcfg.dtype)
+                params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+                if self.straggler.stop():
+                    print(f"[ft] straggler step {step}: {self.straggler.times[-1]:.2f}s")
+                if (step + 1) % self.tcfg.log_every == 0 or step + 1 == end:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = step + 1
+                    self.history.append(m)
+                    print(
+                        f"step {step + 1}/{self.tcfg.total_steps} "
+                        f"loss={m.get('loss', float('nan')):.4f} "
+                        f"gnorm={m.get('grad_norm', float('nan')):.2f}",
+                        flush=True,
+                    )
+                if (step + 1) % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save_async(step + 1, self._state_tree(params, opt_state))
+                if guard.preempted:
+                    print(f"[ft] preemption at step {step + 1}: checkpointing and exiting")
+                    self.ckpt.wait()
+                    self.ckpt.save(step + 1, self._state_tree(params, opt_state))
+                    return step + 1, params, opt_state, metrics
+        self.ckpt.wait()
+        self.ckpt.save(end, self._state_tree(params, opt_state))
+        t = time.strftime("%H:%M:%S")
+        print(f"[{t}] training done at step {end}")
+        return end, params, opt_state, metrics

@@ -1,0 +1,79 @@
+"""Attention-family tuning (the paper's pipeline on a second kernel space)."""
+import numpy as np
+import pytest
+
+from repro.core.attnmodel import (
+    attn_problem_features,
+    build_attn_matrix,
+    harvest_attn_problems,
+    predict_attn_gflops,
+    predict_attn_time,
+)
+from repro.core.dataset import build_model_dataset, synthetic_problems
+from repro.core.dispatch import Deployment
+from repro.core.tuner import tune, tune_attention
+from repro.kernels.attention import AttentionConfig, attention_config_space
+
+
+def test_attn_model_basics():
+    space = attention_config_space()
+    train_p = (4096, 4096, 128)
+    decode_p = (1, 32768, 128)
+    g_train = np.array([predict_attn_gflops(train_p, c) for c in space])
+    g_dec = np.array([predict_attn_gflops(decode_p, c) for c in space])
+    assert g_train.max() > 1000
+    assert np.all(g_train >= 0) and np.all(g_dec >= 0)
+    # decode attention is memory-bound: far below training throughput
+    assert g_dec.max() < 0.1 * g_train.max()
+    # VMEM overflow -> inf time
+    assert predict_attn_time((128, 128, 8192), AttentionConfig(512, 1024)) == float("inf")
+
+
+def test_attn_model_regimes_differ():
+    """Best config differs across shape regimes (the tuning premise)."""
+    space = attention_config_space()
+    best = {}
+    for p in [(1, 32768, 128), (4096, 4096, 128), (2048, 32768, 64)]:
+        best[p] = space[int(np.argmax([predict_attn_gflops(p, c) for c in space]))]
+    assert len(set(best.values())) >= 2
+
+
+def test_harvest_attn_problems():
+    probs = harvest_attn_problems()
+    assert len(probs) >= 5
+    assert all(len(p) == 3 for p in probs)
+    assert any(p[0] == 1 for p in probs)  # decode shapes present
+    feats = attn_problem_features(probs)
+    assert feats.shape == (len(probs), 4)
+    assert np.all(np.isfinite(feats))
+    # ssm-only arch contributes nothing
+    assert harvest_attn_problems(["rwkv6-7b"]) == []
+
+
+def test_tune_attention_selects_and_classifies():
+    configs, tree = tune_attention(n_kernels=4)
+    assert 1 <= len(configs) <= 4
+    assert len(set(configs)) == len(configs)
+    probs = harvest_attn_problems()
+    perf = build_attn_matrix(probs)
+    space = list(attention_config_space())
+    chosen_idx = [space.index(c) for c in configs]
+    # classifier picks achieve most of the achievable-with-subset performance
+    feats = attn_problem_features(probs)
+    pred = np.clip(tree.predict(feats), 0, len(configs) - 1)
+    picked = perf[np.arange(len(probs)), [chosen_idx[i] for i in pred]]
+    best = perf.max(axis=1)
+    frac = np.exp(np.mean(np.log(np.maximum(picked / best, 1e-12))))
+    assert frac > 0.8, frac
+
+
+def test_deployment_attention_tree_roundtrip(tmp_path):
+    ds = build_model_dataset(synthetic_problems(60))
+    res = tune(ds, n_kernels=5)
+    assert res.deployment.attention_tree is not None
+    path = tmp_path / "d.json"
+    res.deployment.save(path)
+    back = Deployment.load(path)
+    for p in [(1, 32768, 128), (4096, 4096, 128), (512, 2048, 64)]:
+        assert back.select_attention(*p) == res.deployment.select_attention(*p)
+        assert back.select_attention(*p) in back.attention_configs

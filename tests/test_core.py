@@ -1,0 +1,187 @@
+"""Unit tests for the paper pipeline: normalize, PCA, clustering, classifiers."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.classify import CLASSIFIERS, DecisionTreeClassifier, make_classifier
+from repro.core.cluster import (
+    CLUSTER_METHODS,
+    density_labels,
+    kmeans,
+    regression_tree_leaves,
+    select_configs,
+    spectral_labels,
+)
+from repro.core.normalize import NORMALIZATIONS, normalize
+from repro.core.pca import PCA
+
+
+# ---------------------------------------------------------------------------
+# normalization (paper §3.4)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", NORMALIZATIONS)
+def test_normalize_range_and_best(method, rng):
+    perf = rng.uniform(0, 3000, size=(40, 64))
+    out = normalize(perf, method)
+    assert out.shape == perf.shape
+    assert np.all(out >= 0) and np.all(out <= 1)
+    # The per-row best config survives near 1 in every scheme.
+    best = out[np.arange(40), perf.argmax(1)]
+    assert np.all(best >= 0.5)
+
+
+@pytest.mark.parametrize("method", NORMALIZATIONS)
+def test_normalize_zero_rows(method):
+    perf = np.zeros((3, 10))
+    assert np.all(normalize(perf, method) == 0)
+
+
+def test_normalize_cutoff_sparsity(rng):
+    perf = rng.uniform(0, 100, size=(30, 50))
+    raw = normalize(perf, "raw_cutoff")
+    std = normalize(perf, "standard")
+    # clamps exactly the sub-cutoff entries, preserves the rest
+    assert np.all(raw[std < 0.9] == 0)
+    np.testing.assert_allclose(raw[std >= 0.9], std[std >= 0.9])
+    # rescaled cutoff spans [0, 1]
+    cut = normalize(perf, "cutoff")
+    assert cut.max() <= 1.0 and np.isclose(cut.max(), 1.0)
+
+
+def test_normalize_sigmoid_midpoint():
+    perf = np.array([[0.85, 1.0, 0.79, 0.5]])
+    out = normalize(perf, "sigmoid")
+    assert np.isclose(out[0, 0], 0.5, atol=1e-6)  # 85% -> 0.5 (paper)
+    assert out[0, 2] < 0.1  # <80% -> <0.1
+    assert out[0, 3] < 1e-3
+
+
+def test_normalize_unknown():
+    with pytest.raises(ValueError):
+        normalize(np.ones((2, 2)), "nope")
+
+
+# ---------------------------------------------------------------------------
+# PCA (paper §3.3)
+# ---------------------------------------------------------------------------
+def test_pca_variance_and_reconstruction(rng):
+    # Low-rank data + noise: few components explain most variance.
+    base = rng.normal(size=(100, 3)) @ rng.normal(size=(3, 40))
+    x = base + 0.01 * rng.normal(size=(100, 40))
+    p = PCA().fit(x)
+    ratio = p._full_ratio
+    assert np.isclose(ratio.sum(), 1.0)
+    assert np.all(np.diff(ratio) <= 1e-12)  # sorted descending
+    assert ratio[:3].sum() > 0.95
+    assert p.n_components_for_variance(0.95) <= 3
+    p4 = PCA(n_components=3)
+    z = p4.fit_transform(x)
+    assert z.shape == (100, 3)
+    np.testing.assert_allclose(p4.inverse_transform(z), x, atol=0.5)
+
+
+def test_pca_transform_before_fit():
+    with pytest.raises(RuntimeError):
+        PCA().transform(np.ones((2, 2)))
+
+
+# ---------------------------------------------------------------------------
+# clustering (paper §4.1)
+# ---------------------------------------------------------------------------
+def _blobs(rng, k=4, n_per=20, d=8, spread=0.05):
+    centers = rng.normal(size=(k, d)) * 3
+    x = np.concatenate([c + spread * rng.normal(size=(n_per, d)) for c in centers])
+    y = np.repeat(np.arange(k), n_per)
+    return x, y
+
+
+def _label_agreement(a, b):
+    """Fraction of pairs on which two labelings agree (Rand index)."""
+    same_a = a[:, None] == a[None, :]
+    same_b = b[:, None] == b[None, :]
+    return (same_a == same_b).mean()
+
+
+@pytest.mark.parametrize(
+    "fn",
+    [
+        lambda x, k: kmeans(x, k)[0],
+        lambda x, k: spectral_labels(x, k),
+        lambda x, k: density_labels(x, k),
+    ],
+    ids=["kmeans", "spectral", "density"],
+)
+def test_clustering_recovers_blobs(fn, rng):
+    x, y = _blobs(rng)
+    labels = fn(x, 4)
+    assert labels.shape == y.shape
+    assert _label_agreement(labels, y) > 0.95
+
+
+def test_regression_tree_leaves(rng):
+    feats = rng.uniform(0, 10, size=(60, 3))
+    # perf vector depends on whether feature0 > 5 (two regimes)
+    perf = np.where(feats[:, :1] > 5, rng.uniform(0.8, 1.0, (60, 6)), rng.uniform(0, 0.2, (60, 6)))
+    labels = regression_tree_leaves(feats, perf, max_leaves=2)
+    assert labels.max() + 1 == 2
+    regime = (feats[:, 0] > 5).astype(int)
+    assert _label_agreement(labels, regime) > 0.95
+
+
+@pytest.mark.parametrize("method", CLUSTER_METHODS)
+def test_select_configs_all_methods(method, rng):
+    perf = normalize(rng.uniform(0, 100, size=(50, 30)), "standard")
+    feats = rng.uniform(0, 14, size=(50, 6))
+    chosen = select_configs(perf, 6, method, features=feats)
+    assert len(chosen) == 6
+    assert len(set(chosen)) == 6
+    assert all(0 <= c < 30 for c in chosen)
+
+
+def test_select_configs_unknown():
+    with pytest.raises(ValueError):
+        select_configs(np.ones((5, 5)), 2, "nope")
+
+
+def test_tree_selection_needs_features():
+    with pytest.raises(ValueError):
+        select_configs(np.ones((5, 5)), 2, "tree")
+
+
+# ---------------------------------------------------------------------------
+# classifiers (paper §5)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(CLASSIFIERS))
+def test_classifier_learns_separable(name, rng):
+    x, y = _blobs(rng, k=3, n_per=30, d=4, spread=0.2)
+    clf = make_classifier(name)
+    clf.fit(x, y)
+    acc = (clf.predict(x) == y).mean()
+    assert acc > 0.9, f"{name}: {acc}"
+
+
+def test_decision_tree_depth_limits(rng):
+    x = rng.normal(size=(200, 5))
+    y = rng.integers(0, 4, size=200)
+    a = DecisionTreeClassifier().fit(x, y)
+    b = DecisionTreeClassifier(max_depth=6, min_samples_leaf=3).fit(x, y)
+    c = DecisionTreeClassifier(max_depth=3, min_samples_leaf=4).fit(x, y)
+    assert b.depth() <= 6 and c.depth() <= 3
+    assert a.depth() >= b.depth() >= c.depth()
+
+
+def test_make_classifier_unknown():
+    with pytest.raises(ValueError):
+        make_classifier("nope")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(10, 40), st.integers(0, 1000))
+def test_tree_predict_is_total(k, n, seed):
+    """Property: a fitted tree classifies any input to a valid class."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 3))
+    y = rng.integers(0, k, size=n)
+    clf = DecisionTreeClassifier(max_depth=4).fit(x, y)
+    pred = clf.predict(rng.normal(size=(50, 3)) * 10)
+    assert np.all((pred >= 0) & (pred < k))

@@ -1,0 +1,75 @@
+"""Fleet bootstrap + extra property tests on pipeline invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.normalize import NORMALIZATIONS, normalize
+from repro.data.pipeline import DataConfig
+from repro.launch.fleet import FleetTopology, fleet_data_config, topology_from_env
+
+
+# ---------------------------------------------------------------------------
+# fleet topology
+# ---------------------------------------------------------------------------
+def test_topology_from_env_defaults():
+    t = topology_from_env({})
+    assert t.num_processes == 1 and t.process_id == 0 and not t.is_multihost
+
+
+def test_topology_from_env_explicit():
+    t = topology_from_env(
+        {"REPRO_COORDINATOR": "10.0.0.1:9999", "REPRO_NUM_PROCESSES": "64", "REPRO_PROCESS_ID": "7"}
+    )
+    assert t == FleetTopology("10.0.0.1:9999", 64, 7)
+    assert t.is_multihost
+
+
+def test_topology_from_slurm_env():
+    t = topology_from_env(
+        {"SLURM_LAUNCH_NODE_IPADDR": "10.0.0.2", "SLURM_NTASKS": "8", "SLURM_PROCID": "3"}
+    )
+    assert t.coordinator == "10.0.0.2:12355"
+    assert (t.num_processes, t.process_id) == (8, 3)
+
+
+def test_topology_bad_pid():
+    with pytest.raises(ValueError):
+        topology_from_env({"REPRO_NUM_PROCESSES": "4", "REPRO_PROCESS_ID": "4"})
+
+
+def test_fleet_data_config():
+    base = DataConfig(global_batch=256, seq_len=128)
+    t = FleetTopology("x:1", 32, 5)
+    d = fleet_data_config(base, t)
+    assert d.host_index == 5 and d.host_count == 32 and d.local_batch == 8
+    with pytest.raises(ValueError):
+        fleet_data_config(DataConfig(global_batch=10), FleetTopology("x:1", 3, 0))
+
+
+# ---------------------------------------------------------------------------
+# property tests: normalization invariants (paper §3.4)
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(0, 10_000),
+    st.floats(0.1, 1000.0),
+    st.sampled_from(NORMALIZATIONS),
+)
+def test_normalize_scale_invariance(seed, scale, method):
+    """Normalization depends only on *relative* performance: f(c·x) == f(x)."""
+    rng = np.random.default_rng(seed)
+    perf = rng.uniform(0, 100, size=(6, 20))
+    np.testing.assert_allclose(
+        normalize(perf * scale, method), normalize(perf, method), rtol=1e-9, atol=1e-12
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(NORMALIZATIONS))
+def test_normalize_argmax_preserved(seed, method):
+    """The best config per problem stays the argmax after normalization."""
+    rng = np.random.default_rng(seed)
+    perf = rng.uniform(0.1, 100, size=(5, 15))
+    out = normalize(perf, method)
+    for i in range(5):
+        assert out[i, perf[i].argmax()] == out[i].max()

@@ -1,0 +1,129 @@
+"""Per-kernel allclose vs the ref.py oracles, sweeping shapes/dtypes/configs.
+
+All Pallas kernels run in interpret=True (kernel body executed in Python on
+CPU) — the TPU path differs only in lowering, not semantics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.attention import (
+    AttentionConfig,
+    attention_config_space,
+    flash_attention_pallas,
+)
+from repro.kernels.matmul import DEFAULT_CONFIG, MatmulConfig, config_space, matmul_pallas
+from repro.kernels.ref import flash_attention_ref, matmul_ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _mm_case(m, k, n, dtype, cfg):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 7 + n * 3 + k))
+    a = jax.random.normal(k1, (m, k), jnp.float32).astype(dtype)
+    b = jax.random.normal(k2, (k, n), jnp.float32).astype(dtype)
+    got = matmul_pallas(a, b, cfg, interpret=True)
+    want = matmul_ref(a, b)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), **TOL[dtype]
+    )
+
+
+# -- shape sweep (block-aligned, ragged, tiny, tall-skinny, deep-k) ----------
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (128, 128, 128),
+        (256, 512, 128),
+        (100, 130, 260),  # ragged everywhere
+        (1, 512, 384),  # decode GEMV
+        (8, 4096, 128),  # tall-skinny deep-k
+        (130, 100, 70),  # n < 128 (lane padding)
+        (512, 128, 512),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes(m, k, n, dtype):
+    _mm_case(m, k, n, dtype, DEFAULT_CONFIG)
+
+
+# -- config sweep on a fixed ragged shape ------------------------------------
+@pytest.mark.parametrize("cfg_idx", range(0, len(config_space()), 23))
+def test_matmul_config_sweep(cfg_idx):
+    cfg = config_space()[cfg_idx]
+    _mm_case(120, 260, 200, jnp.float32, cfg)
+
+
+def test_matmul_orders_agree():
+    for order in ("mnk", "nmk"):
+        _mm_case(64, 256, 256, jnp.float32, MatmulConfig(32, 128, 128, order))
+
+
+def test_matmul_rejects_bad_shapes():
+    a = jnp.zeros((4, 8, 16))
+    with pytest.raises(ValueError):
+        matmul_pallas(a, jnp.zeros((16, 4)), DEFAULT_CONFIG, interpret=True)
+    with pytest.raises(ValueError):
+        matmul_pallas(jnp.zeros((4, 8)), jnp.zeros((16, 4)), DEFAULT_CONFIG, interpret=True)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 300),
+    n=st.integers(1, 300),
+    cfg_i=st.integers(0, len(config_space()) - 1),
+)
+def test_matmul_property(m, k, n, cfg_i):
+    """Property: every (shape, config) cell matches the oracle."""
+    _mm_case(m, k, n, jnp.float32, config_space()[cfg_i])
+
+
+def test_config_space_validity():
+    space = config_space()
+    assert len(space) > 100  # a real tuning space
+    for cfg in space:
+        assert cfg.is_valid()
+        assert cfg.block_n % 128 == 0 and cfg.block_k % 128 == 0
+    assert len(set(space)) == len(space)
+    rt = MatmulConfig.from_dict(space[5].to_dict())
+    assert rt == space[5]
+
+
+# -- attention ----------------------------------------------------------------
+def _attn_case(sq, skv, d, causal, cfg, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(sq * 5 + skv), 3)
+    q = jax.random.normal(ks[0], (sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (skv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (skv, d), jnp.float32).astype(dtype)
+    got = flash_attention_pallas(q, k, v, cfg, causal=causal, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=2e-3, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("sq,skv", [(128, 128), (70, 200), (256, 256), (1, 300), (33, 33)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention_shapes(sq, skv, causal):
+    _attn_case(sq, skv, 64, causal, AttentionConfig(128, 128))
+
+
+@pytest.mark.parametrize("cfg", attention_config_space()[::3])
+def test_attention_config_sweep(cfg):
+    _attn_case(200, 200, 64, True, cfg)
+
+
+def test_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (64, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (128, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (128, 64), jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, AttentionConfig(128, 128), causal=True, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=3e-2, atol=3e-2
+    )

@@ -1,0 +1,81 @@
+"""CLI launcher smoke tests: tune / train / serve mains end to end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dispatch import Deployment
+from repro.kernels import ops
+
+
+@pytest.fixture(autouse=True)
+def _clean_policy():
+    yield
+    ops.set_kernel_policy(None)
+    ops.clear_selection_log()
+
+
+def test_tune_cli_v5e(tmp_path):
+    from repro.launch.tune import main
+
+    out = tmp_path / "deploy.json"
+    main(["--device", "tpu_v5e", "--archs", "granite-8b", "--n-kernels", "6",
+          "--max-problems", "60", "--out", str(out)])
+    dep = Deployment.load(out)
+    assert len(dep.configs) == 6
+    assert dep.attention_tree is not None
+    assert dep.meta["oracle_fraction"] > 0.8
+
+
+def test_tune_cli_measured_cpu(tmp_path):
+    from repro.launch.tune import main
+
+    out = tmp_path / "deploy_cpu.json"
+    main(["--device", "host_cpu", "--cpu-problems", "6", "--n-kernels", "4",
+          "--out", str(out)])
+    dep = Deployment.load(out)
+    assert dep.device == "host_cpu"
+    assert len(dep.configs) == 4
+
+
+def test_train_cli_with_deployment(tmp_path):
+    from repro.launch.train import main as train_main
+    from repro.launch.tune import main as tune_main
+
+    dep = tmp_path / "d.json"
+    tune_main(["--device", "tpu_v5e", "--archs", "granite-8b", "--max-problems", "40",
+               "--out", str(dep)])
+    train_main([
+        "--arch", "granite-8b", "--reduced", "--steps", "4", "--batch", "2",
+        "--seq", "16", "--ckpt-dir", str(tmp_path / "ckpt"), "--ckpt-every", "2",
+        "--deployment", str(dep),
+    ])
+    # the deployment was installed and consulted at trace time
+    assert any(op == "matmul" for op, _, _ in ops.selection_log())
+
+
+def test_serve_cli(tmp_path, capsys):
+    from repro.launch.serve import main as serve_main
+
+    serve_main(["--arch", "granite-8b", "--requests", "3", "--max-new-tokens", "4",
+                "--max-batch", "2", "--cache-len", "64"])
+    out = capsys.readouterr().out
+    assert "served 3 requests" in out
+
+
+def test_serve_engine_with_kv_quant():
+    """Serving engine composes with the int8 KV cache."""
+    from repro.configs import registry
+    from repro.models.model import build_model
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = registry.get("granite-8b").reduced()
+    model = build_model(cfg, dtype=jnp.float32, param_dtype=jnp.float32, kv_quant=True)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_batch=2, cache_len=64)
+    assert eng.cache["k"].dtype == jnp.int8
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, size=5).astype(np.int32),
+                    max_new_tokens=4) for i in range(3)]
+    eng.run(reqs)
+    assert all(r.done and len(r.output) == 4 for r in reqs)

@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on CPU.
+
+Asserts output shapes and finiteness (no NaNs), plus prefill/decode cache
+consistency: decoding token t+1 after a prefill of t tokens must match the
+full forward pass logits at that position.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models.model import build_model
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+ARCHS = sorted(registry.ARCHS)
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    toks = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab)
+    batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+    if cfg.family == "vlm":
+        batch["image_embs"] = jax.random.normal(rng, (B, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(rng, (B, S, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for arch in ARCHS:
+        cfg = registry.get(arch).reduced()
+        model = build_model(cfg, dtype=jnp.float32, param_dtype=jnp.float32)
+        params = model.init(jax.random.PRNGKey(0))
+        out[arch] = (cfg, model, params)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite(arch, built):
+    cfg, model, params = built[arch]
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    step = jax.jit(make_train_step(model, adamw.AdamWConfig()))
+    params2, opt, metrics = step(params, adamw.init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"])) and float(metrics["grad_norm"]) > 0
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda acc, pq: acc or bool(jnp.any(pq)),
+        jax.tree.map(lambda a, b: jnp.any(a != b), params, params2),
+        False,
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_loss_shapes_and_vocab(arch, built):
+    cfg, model, params = built[arch]
+    batch = _batch(cfg, jax.random.PRNGKey(2))
+    loss, metrics = model.loss_fn(params, batch)
+    assert loss.shape == ()
+    assert float(loss) > 0
+    if cfg.moe is not None:
+        assert "aux_loss" in metrics
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, built):
+    """decode_step(t) after prefill(0..t-1) == last-position logits of prefill(0..t)."""
+    cfg, model, params = built[arch]
+    batch = _batch(cfg, jax.random.PRNGKey(3))
+    toks = batch["tokens"]
+    cache_len = S + 8
+
+    sub = dict(batch, tokens=toks[:, : S - 1])
+    sub.pop("targets", None)
+    _, cache = model.prefill(params, sub, cache_len)
+    positions = jnp.full((B,), S - 1, jnp.int32)
+    logits_dec, _ = model.decode_step(params, cache, toks[:, S - 1 :], positions)
+
+    full = dict(batch)
+    full.pop("targets", None)
+    logits_full, _ = model.prefill(params, full, cache_len)
+
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, -1]), np.asarray(logits_full[:, -1]), rtol=2e-3, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_is_position_aware(arch, built):
+    cfg, model, params = built[arch]
+    cache = model.init_cache(B, 16)
+    if cfg.family == "audio":
+        cache["memory"] = jnp.zeros((B, 8, cfg.d_model), jnp.float32)
+    toks = jnp.ones((B, 1), jnp.int32)
+    logits, new_cache = model.decode_step(params, cache, toks, jnp.zeros((B,), jnp.int32))
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.padded_vocab()
+    assert np.all(np.isfinite(np.asarray(logits)))
+    # cache was updated (some leaf changed)
+    changed = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(new_cache))
+    )
+    assert changed
+
+
+def test_arch_configs_match_assignment():
+    """Exact assigned architecture specs (the task's public-pool table)."""
+    t = {a: registry.get(a) for a in ARCHS}
+    def chk(name, L, d, H, kv, ff, vocab):
+        c = t[name]
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+            L, d, H, kv, ff, vocab), name
+
+    chk("phi4-mini-3.8b", 32, 3072, 24, 8, 8192, 200064)
+    chk("qwen2.5-32b", 64, 5120, 40, 8, 27648, 152064)
+    chk("granite-8b", 36, 4096, 32, 8, 14336, 49152)
+    chk("glm4-9b", 40, 4096, 32, 2, 13696, 151552)
+    chk("llama-3.2-vision-90b", 100, 8192, 64, 8, 28672, 128256)
+    chk("qwen3-moe-235b-a22b", 94, 4096, 64, 4, 1536, 151936)
+    chk("dbrx-132b", 40, 6144, 48, 8, 10752, 100352)
+    chk("hymba-1.5b", 32, 1600, 25, 5, 5504, 32001)
+    chk("seamless-m4t-large-v2", 24, 1024, 16, 16, 8192, 256206)
+    # rwkv6 is attention-free; n_heads are internal wkv heads (head_dim=64)
+    chk("rwkv6-7b", 32, 4096, 64, 64, 14336, 65536)
+    assert t["qwen3-moe-235b-a22b"].moe.n_experts == 128
+    assert t["qwen3-moe-235b-a22b"].moe.top_k == 8
+    assert t["dbrx-132b"].moe.n_experts == 16 and t["dbrx-132b"].moe.top_k == 4
+    assert t["hymba-1.5b"].ssm_state == 16
+    assert t["qwen2.5-32b"].qkv_bias
+
+
+def test_input_specs_shapes():
+    specs = registry.input_specs("phi4-mini-3.8b", "train_4k")
+    assert specs["tokens"].shape == (256, 4096)
+    assert specs["targets"].shape == (256, 4096)
+    specs = registry.input_specs("llama-3.2-vision-90b", "prefill_32k")
+    assert specs["tokens"].shape == (32, 32768)
+    assert "image_embs" in specs
+    specs = registry.input_specs("rwkv6-7b", "decode_32k")
+    assert specs["tokens"].shape == (128, 1)
+    specs = registry.input_specs("seamless-m4t-large-v2", "train_4k")
+    assert "frames" in specs
+
+
+def test_cells_and_skips():
+    cells = registry.all_cells()
+    # 10 archs x 4 shapes - 8 long_500k skips = 32 runnable cells
+    assert len(cells) == 32
+    skips = registry.skipped_cells()
+    assert len(skips) == 8
+    assert all(s[1] == "long_500k" for s in skips)
+    assert ("rwkv6-7b", "long_500k") in cells
+    assert ("hymba-1.5b", "long_500k") in cells

@@ -1,0 +1,72 @@
+"""Online (dynamic) kernel selection vs the offline pipeline (paper §2.2)."""
+import numpy as np
+import pytest
+
+from repro.core.dataset import build_model_dataset, synthetic_problems
+from repro.core.online import OnlinePolicy, _bucket
+from repro.core.perfmodel import TPU_V5E, predict_time
+from repro.core.tuner import tune
+from repro.kernels.matmul import MatmulConfig, config_space
+
+
+def _model_measure(problem, cfg):
+    t = predict_time(problem, cfg, TPU_V5E)
+    return t if np.isfinite(t) else 1e9
+
+
+def test_explore_then_commit():
+    cands = list(config_space())[:5]
+    pol = OnlinePolicy(_model_measure, cands, trials_per_arm=1)
+    p = (512, 784, 512, 16)
+    picks = [pol.select_matmul(*p) for _ in range(8)]
+    # first len(cands) picks explore each arm once, then commit
+    assert picks[:5] == cands
+    committed = pol.committed()[_bucket(p)]
+    assert all(c == committed for c in picks[5:])
+    # the committed arm is the measured-fastest candidate
+    best = min(cands, key=lambda c: _model_measure(p, c))
+    assert committed == best
+    assert pol.stats["explore"] == 5 and pol.stats["commit"] == 3
+    assert pol.warmup_cost() > 0
+
+
+def test_buckets_share_measurements():
+    cands = list(config_space())[:3]
+    pol = OnlinePolicy(_model_measure, cands)
+    for _ in range(3):
+        pol.select_matmul(512, 784, 512, 16)
+    # a nearby shape lands in the same log2 bucket: committed immediately
+    pol.select_matmul(513, 790, 520, 16)
+    assert pol.stats["explore"] == 3
+
+
+def test_prior_is_measured_first():
+    ds = build_model_dataset(synthetic_problems(60))
+    res = tune(ds, n_kernels=5)
+    pol = OnlinePolicy(_model_measure, res.deployment.configs, prior=res.deployment)
+    p = (64, 4096, 1024, 1)
+    first = pol.select_matmul(*p)
+    assert first == res.deployment.select_matmul(*p)
+
+
+def test_hybrid_beats_or_matches_offline_classifier():
+    """With the deployment as candidate set, online measurement can only
+    improve on the classifier's picks (at a bounded warm-up cost)."""
+    ds = build_model_dataset(synthetic_problems(80))
+    res = tune(ds, n_kernels=6)
+    dep = res.deployment
+    problems = [(512, 784, 512, 16), (1, 4096, 1024, 1), (2048, 2048, 256, 4), (32, 12288, 512, 1)]
+    total_online, total_offline = 0.0, 0.0
+    pol = OnlinePolicy(_model_measure, dep.configs, prior=dep)
+    for p in problems:
+        for _ in range(len(dep.configs) + 1):
+            cfg = pol.select_matmul(*p)
+        total_online += _model_measure(p, cfg)  # committed pick
+        total_offline += _model_measure(p, dep.select_matmul(*p))
+    assert total_online <= total_offline + 1e-12
+
+
+def test_select_attention_falls_back():
+    pol = OnlinePolicy(_model_measure, list(config_space())[:2])
+    cfg = pol.select_attention(128, 2048, 128)
+    assert cfg is not None

@@ -1,0 +1,96 @@
+"""Sharding-rule unit tests (no 512-device mesh needed — pspecs are pure)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.dist import sharding as shd
+from repro.models.model import build_model
+from repro.optim import adamw
+
+
+class _FakeMesh:
+    axis_names = ("pod", "data", "model")
+
+
+class _FakeMeshSingle:
+    axis_names = ("data", "model")
+
+
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "qwen3-moe-235b-a22b", "rwkv6-7b", "hymba-1.5b", "seamless-m4t-large-v2", "llama-3.2-vision-90b"])
+def test_param_pspecs_cover_all_leaves(arch):
+    cfg = registry.get(arch).reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = shd.param_pspecs(params, _FakeMeshSingle())
+    leaves_p = jax.tree_util.tree_leaves_with_path(params)
+    leaves_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_p) == len(leaves_s)
+    for (path, leaf), spec in zip(leaves_p, leaves_s):
+        assert isinstance(spec, P)
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        # sharded dims must name mesh axes that exist
+        for ax in spec:
+            if ax is not None:
+                axes = (ax,) if isinstance(ax, str) else ax
+                for a in axes:
+                    assert a in ("data", "model", "pod")
+
+
+def test_big_gemm_weights_are_tp_sharded():
+    cfg = registry.get("phi4-mini-3.8b").reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = shd.param_pspecs(params, _FakeMeshSingle())
+    attn = specs["blocks"]["attn"]
+    assert attn["wq"] == P(None, "data", "model")  # col-parallel + fsdp
+    assert attn["wo"] == P(None, "model", "data")  # row-parallel
+    emb = specs["emb"]
+    assert emb["embed"] == P("model", "data")
+
+
+def test_moe_experts_ep_sharded():
+    cfg = registry.get("qwen3-moe-235b-a22b").reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = shd.param_pspecs(params, _FakeMeshSingle())
+    moe = specs["blocks"]["moe"]
+    w_up = moe["w_up"]
+    assert w_up[1] == "model"  # experts over the model axis (EP)
+
+
+def test_batch_pspecs_dp_and_sp():
+    mesh = _FakeMesh()
+    tree = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    dp = shd.batch_pspecs(tree, mesh)
+    assert dp["tokens"] == P(("pod", "data"), None)
+    sp = shd.batch_pspecs(tree, mesh, shard_seq=True)
+    assert sp["tokens"] == P(None, "data")
+
+
+def test_cache_pspecs():
+    mesh = _FakeMeshSingle()
+    cache = {
+        "k": jax.ShapeDtypeStruct((4, 2, 64, 2, 16), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((4, 2, 64, 2, 16), jnp.bfloat16),
+        "wkv": jax.ShapeDtypeStruct((4, 2, 8, 16, 16), jnp.float32),
+    }
+    spec = shd.cache_pspecs(cache, mesh)
+    assert spec["k"] == P(None, ("data",), None, None, None)
+    sp = shd.cache_pspecs(cache, mesh, shard_seq=True)
+    assert sp["k"] == P(None, None, "data", None, None)  # context-parallel
+    assert sp["wkv"] == P(None, None, "model", None, None)
+
+
+def test_opt_pspecs_match_params():
+    cfg = registry.get("granite-8b").reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspec = shd.param_pspecs(params, _FakeMeshSingle())
+    opt = jax.eval_shape(adamw.init, params)
+    ospec = shd.opt_pspecs(opt, pspec)
+    assert ospec.step == P()
+    assert jax.tree.structure(ospec.m, is_leaf=lambda x: isinstance(x, P)) == jax.tree.structure(
+        pspec, is_leaf=lambda x: isinstance(x, P)
+    )
