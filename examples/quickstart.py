@@ -33,6 +33,7 @@ print("\n".join(tree_to_python(result.deployment.classifier).splitlines()[:8]))
 
 # 4. Install the deployment: every repro matmul now dispatches through it.
 ops.set_kernel_policy(result.deployment)
+ops.set_selection_logging(True)  # opt-in: dispatch decisions are not recorded by default
 ops.clear_selection_log()
 a = jnp.ones((512, 784), jnp.bfloat16)
 b = jnp.ones((784, 512), jnp.bfloat16)

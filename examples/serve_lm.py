@@ -25,6 +25,7 @@ def main() -> None:
 
     result = tune_for_archs([arch], n_kernels=8, max_problems=100)
     ops.set_kernel_policy(result.deployment)
+    ops.set_selection_logging(True)
     ops.clear_selection_log()
 
     model = build_model(cfg, dtype=jnp.float32, param_dtype=jnp.float32)

@@ -61,8 +61,9 @@ def main() -> None:
         ),
     )
     step, _, _, metrics = trainer.train()
+    stats = ops.shape_cache_stats()
     print(f"done at step {step}: loss {float(metrics['loss']):.4f} "
-          f"(selections made: {len(ops.selection_log())})")
+          f"(selections made: {stats['hits'] + stats['misses']})")
 
 
 if __name__ == "__main__":

@@ -4,6 +4,7 @@ Pipeline:  benchmark table -> normalize -> cluster-select deployable subset
            -> train runtime classifier -> Deployment artifact (KernelPolicy).
 """
 from .classify import CLASSIFIERS, make_classifier
+from .flattree import FlatTree
 from .cluster import CLUSTER_METHODS, select_configs
 from .dataset import TuningDataset, build_model_dataset, harvest_problems, problem_features, synthetic_problems
 from .dispatch import Deployment, classifier_fraction, train_deployment
@@ -18,6 +19,7 @@ __all__ = [
     "NORMALIZATIONS",
     "PCA",
     "Deployment",
+    "FlatTree",
     "TuneResult",
     "TuningDataset",
     "achievable_fraction",

@@ -21,10 +21,11 @@ ATTN_FEATURE_NAMES = ("log2_sq", "log2_skv", "log2_d", "log2_sq_over_skv")
 
 
 def attn_problem_features(problems: list[AttnProblem]) -> np.ndarray:
-    rows = []
-    for sq, skv, d in problems:
-        rows.append([np.log2(sq), np.log2(skv), np.log2(d), np.log2(sq / skv)])
-    return np.asarray(rows, dtype=np.float64)
+    p = np.asarray(problems, dtype=np.float64).reshape(-1, 3)
+    if p.size == 0:
+        return np.zeros((0, len(ATTN_FEATURE_NAMES)))
+    sq, skv, d = p.T
+    return np.column_stack([np.log2(sq), np.log2(skv), np.log2(d), np.log2(sq / skv)])
 
 
 def _vmem_bytes(cfg: AttentionConfig, d: int, dtype_bytes: int = 2) -> int:

@@ -13,7 +13,10 @@ from __future__ import annotations
 
 import numpy as np
 
+from .flattree import FlatTree
+
 __all__ = [
+    "FlatTree",
     "DecisionTreeClassifier",
     "KNeighborsClassifier",
     "LinearSVM",
@@ -53,6 +56,7 @@ class DecisionTreeClassifier:
         self.min_samples_leaf = min_samples_leaf
         self.seed = seed
         self.root_: _Node | None = None
+        self.flat_: FlatTree | None = None  # compiled after fit (fast path)
         self.n_classes_ = 0
         self.max_features: int | None = None  # set by RandomForest
 
@@ -63,7 +67,11 @@ class DecisionTreeClassifier:
         self.n_classes_ = int(y.max()) + 1 if y.size else 1
         rng = np.random.default_rng(self.seed)
         w = np.ones(len(y)) if sample_weight is None else np.asarray(sample_weight, float)
-        self.root_ = self._grow(x, y, w, depth=0, rng=rng)
+        n = len(y)
+        onehot = np.zeros((n, self.n_classes_))
+        if n:
+            onehot[np.arange(n), y] = w
+        self.root_, self.flat_ = self._grow_levels(x, onehot, rng)
         return self
 
     def _gini(self, counts: np.ndarray) -> float:
@@ -73,55 +81,180 @@ class DecisionTreeClassifier:
         p = counts / tot
         return float(1.0 - (p**2).sum())
 
-    def _grow(self, x: np.ndarray, y: np.ndarray, w: np.ndarray, depth: int, rng) -> _Node:
-        node = _Node()
-        counts = np.bincount(y, weights=w, minlength=self.n_classes_)
-        node.counts = counts
-        node.label = int(counts.argmax())
-        if (
-            (self.max_depth is not None and depth >= self.max_depth)
-            or len(y) < 2 * self.min_samples_leaf
-            or counts.max() == counts.sum()
-        ):
-            return node
-        nf = x.shape[1]
-        feats = np.arange(nf)
-        if self.max_features is not None and self.max_features < nf:
-            feats = rng.choice(nf, size=self.max_features, replace=False)
-        best = None  # (gini, feature, threshold)
-        parent_gini = self._gini(counts)
-        for f in feats:
-            order = np.argsort(x[:, f], kind="stable")
-            xs, ys, ws = x[order, f], y[order], w[order]
-            onehot = np.zeros((len(ys), self.n_classes_))
-            onehot[np.arange(len(ys)), ys] = ws
-            left_csum = np.cumsum(onehot, axis=0)
-            total = left_csum[-1]
-            for i in range(self.min_samples_leaf, len(ys) - self.min_samples_leaf + 1):
-                if i < len(ys) and xs[i - 1] == xs[min(i, len(ys) - 1)]:
+    def _grow_levels(self, x: np.ndarray, onehot: np.ndarray, rng) -> tuple[_Node, FlatTree]:
+        """Level-synchronous CART growth — the vectorized training fast path.
+
+        Features are sorted once; every deeper level re-groups the sorted row
+        orders by node with a stable partition.  The split search for ALL
+        nodes of a level runs as one segmented cumulative-class-count sweep:
+        prefix sums (reset at node boundaries) give left/right Gini impurity
+        at every candidate threshold of every node in closed form, so the
+        Python/numpy call count scales with tree *depth*, not node count.
+        The compiled :class:`FlatTree` is assembled in the same pass (BFS
+        layout — children always follow parents, as ``validate`` requires).
+        """
+        n, nf = x.shape
+        c = onehot.shape[1]
+        ml = max(self.min_samples_leaf, 1)
+        root = _Node()
+        root.counts = onehot.sum(0)
+        root.label = int(root.counts.argmax())
+        # flat arrays, filled alongside the node graph (index 0 = root)
+        f_feature = [-1]
+        f_thr = [0.0]
+        f_left = [-1]
+        f_right = [-1]
+        f_label = [root.label]
+        f_counts = [root.counts]
+
+        def finish() -> tuple[_Node, FlatTree]:
+            flat = FlatTree(f_feature, f_thr, f_left, f_right, f_label,
+                            self.n_classes_, np.stack(f_counts))
+            return root, flat
+
+        if n == 0:
+            return finish()
+        sub_features = self.max_features is not None and self.max_features < nf
+        # Sort once per feature; stable partitions preserve this order below.
+        order = np.argsort(x, axis=0, kind="stable")  # (n_rows, nf), row ids
+        cols = np.arange(nf)[None, :]
+        nodes = [root]  # active (still-splittable-candidate) nodes, in row order
+        flat_idx = [0]  # flat-array index of each active node
+        sizes = np.array([n])
+        node_counts = root.counts[None, :]
+        depth = 0
+        while nodes:
+            # -- per-node stopping rules (bulk, then a cheap python filter) --
+            w_tot = node_counts.sum(1)
+            can_split = ~(
+                (node_counts.max(1) == w_tot)
+                | (sizes < 2 * ml)
+                | (np.zeros(len(nodes), bool) if self.max_depth is None else np.full(len(nodes), depth >= self.max_depth))
+            )
+            if not can_split.any():
+                break
+            if not can_split.all():
+                row_keep = np.repeat(can_split, sizes)
+                order = order[row_keep]
+                nodes = [nd for nd, ok_ in zip(nodes, can_split) if ok_]
+                flat_idx = [fi for fi, ok_ in zip(flat_idx, can_split) if ok_]
+                node_counts = node_counts[can_split]
+                sizes = sizes[can_split]
+                w_tot = w_tot[can_split]
+            k = len(nodes)
+            na = order.shape[0]
+            starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+            seg_rep = np.repeat(np.arange(k), sizes)
+
+            # -- segmented prefix class counts ------------------------------
+            csum = np.cumsum(onehot[order], axis=0)  # (na, nf, c)
+            base = csum[starts - 1]  # prefix just before each segment...
+            base[0] = 0.0  # ...with segment 0's base (wrapped index) zeroed
+            lc = csum - base[seg_rep]  # left counts at split index i = pos+1
+            rc = np.repeat(node_counts, sizes, 0)[:, None, :] - lc
+            nl = lc.sum(-1)  # (na, nf) left weight (per feature: weighted rows differ)
+            nr = w_tot[seg_rep, None] - nl
+            pos1 = np.arange(na) - starts[seg_rep] + 1  # split index within segment
+            valid = (pos1 >= ml) & (pos1 <= np.repeat(sizes, sizes) - ml)
+            xs = x[order, cols]  # (na, nf) presorted feature values
+            xnext = np.empty_like(xs)
+            xnext[:-1] = xs[1:]
+            xnext[-1] = np.inf  # last row is never a valid split anyway
+            ok = valid[:, None] & (xs != xnext) & (nl > 0) & (nr > 0)
+            # Total node weight is constant across a segment's positions, so
+            # minimizing weighted Gini (nl*gl + nr*gr)/W is maximizing
+            # h = sum(lc^2)/nl + sum(rc^2)/nr.
+            with np.errstate(divide="ignore", invalid="ignore"):
+                h = (lc * lc).sum(-1) / nl + (rc * rc).sum(-1) / nr
+            h[~ok] = -np.inf
+            if sub_features:  # random forest: per-node feature subsets
+                allow = np.zeros((k, nf), dtype=bool)
+                for j in range(k):
+                    allow[j, rng.choice(nf, size=self.max_features, replace=False)] = True
+                h[~allow[seg_rep]] = -np.inf
+
+            # -- best split per segment -------------------------------------
+            hrow = h.max(1)
+            frow = h.argmax(1)
+            seg_max = np.maximum.reduceat(hrow, starts)
+            hit = np.where(hrow == seg_max[seg_rep], np.arange(na), na)
+            br = np.minimum(np.minimum.reduceat(hit, starts), na - 1)  # first best row
+            parent_h = (node_counts * node_counts).sum(1) / w_tot
+            do_split = np.isfinite(seg_max) & (seg_max > parent_h + 1e-12 * w_tot)
+            if not do_split.any():
+                break
+            f_k = frow[br]
+            thr = 0.5 * (xs[br, f_k] + xs[np.minimum(br + 1, na - 1), f_k])
+            hi = xs[np.minimum(br + 1, na - 1), f_k]
+            thr = np.where(thr < hi, thr, xs[br, f_k])  # fp midpoint collapse
+            lcounts = lc[br, f_k]  # (k, c)
+            rcounts = node_counts - lcounts
+            nl_k = pos1[br]
+            nr_k = sizes - nl_k
+
+            # -- wire child nodes (python bookkeeping on bulk scalars) -------
+            llab = lcounts.argmax(1).tolist()
+            rlab = rcounts.argmax(1).tolist()
+            f_l = f_k.tolist()
+            thr_l = thr.tolist()
+            split_l = do_split.tolist()
+            new_nodes: list[_Node] = []
+            new_flat_idx: list[int] = []
+            for j, nd in enumerate(nodes):
+                if not split_l[j]:
                     continue
-                lc = left_csum[i - 1]
-                rc = total - lc
-                nl, nr = lc.sum(), rc.sum()
-                if nl <= 0 or nr <= 0:
-                    continue
-                g = (nl * self._gini(lc) + nr * self._gini(rc)) / (nl + nr)
-                if best is None or g < best[0]:
-                    thr = 0.5 * (xs[i - 1] + xs[min(i, len(ys) - 1)])
-                    best = (g, int(f), float(thr))
-        if best is None or best[0] >= parent_gini - 1e-12:
-            return node
-        _, f, thr = best
-        mask = x[:, f] <= thr
-        if mask.sum() < self.min_samples_leaf or (~mask).sum() < self.min_samples_leaf:
-            return node
-        node.feature, node.threshold = f, thr
-        node.left = self._grow(x[mask], y[mask], w[mask], depth + 1, rng)
-        node.right = self._grow(x[~mask], y[~mask], w[~mask], depth + 1, rng)
-        return node
+                nd.feature, nd.threshold = int(f_l[j]), float(thr_l[j])
+                left, right = _Node(), _Node()
+                left.counts, left.label = lcounts[j], llab[j]
+                right.counts, right.label = rcounts[j], rlab[j]
+                nd.left, nd.right = left, right
+                new_nodes.extend((left, right))
+                # mirror into the flat arrays: leaves now, patched if split later
+                fi = flat_idx[j]
+                li = len(f_feature)
+                f_feature[fi] = nd.feature
+                f_thr[fi] = nd.threshold
+                f_left[fi] = li
+                f_right[fi] = li + 1
+                f_feature.extend((-1, -1))
+                f_thr.extend((0.0, 0.0))
+                f_left.extend((-1, -1))
+                f_right.extend((-1, -1))
+                f_label.extend((left.label, right.label))
+                f_counts.extend((left.counts, right.counts))
+                new_flat_idx.extend((li, li + 1))
+
+            # -- stable partition of every feature's order for the next level
+            is_left = np.zeros(n, dtype=bool)
+            ids0 = order[:, 0]
+            split_rep = do_split[seg_rep]
+            is_left[ids0] = (x[ids0, f_k[seg_rep]] <= thr[seg_rep]) & split_rep
+            order = order[split_rep]
+            seg_next = seg_rep[split_rep]
+            for f in range(nf):
+                cid = order[:, f]
+                key = 2 * seg_next + (~is_left[cid])
+                order[:, f] = cid[np.argsort(key, kind="stable")]
+            nodes = new_nodes
+            flat_idx = new_flat_idx
+            sizes = np.stack([nl_k[do_split], nr_k[do_split]], 1).ravel()
+            node_counts = np.stack([lcounts[do_split], rcounts[do_split]], 1).reshape(-1, c)
+            depth += 1
+        return finish()
 
     # -- inference --------------------------------------------------------
+    def _ensure_flat(self) -> FlatTree:
+        if self.flat_ is None:
+            self.flat_ = FlatTree.from_node(self.root_, self.n_classes_)
+        return self.flat_
+
     def predict(self, x: np.ndarray) -> np.ndarray:
+        """Vectorized batch predict via the compiled :class:`FlatTree`."""
+        x = np.asarray(x, dtype=np.float64)
+        return self._ensure_flat().predict(x)
+
+    def predict_nested(self, x: np.ndarray) -> np.ndarray:
+        """Reference per-row nested walk (equivalence oracle for the flat path)."""
         x = np.asarray(x, dtype=np.float64)
         out = np.empty(len(x), dtype=int)
         for i, row in enumerate(x):
@@ -134,6 +267,15 @@ class DecisionTreeClassifier:
     def predict_counts(self, x: np.ndarray) -> np.ndarray:
         """Per-sample class-count vectors at the reached leaf (for forests)."""
         x = np.asarray(x, dtype=np.float64)
+        flat = self._ensure_flat()
+        if flat.counts is not None:
+            c = flat.predict_counts(x)
+            if c.shape[1] == self.n_classes_:
+                return c
+            # forest bootstrap samples can miss the top classes: pad out
+            out = np.zeros((len(x), self.n_classes_))
+            out[:, : c.shape[1]] = c
+            return out
         out = np.zeros((len(x), self.n_classes_))
         for i, row in enumerate(x):
             node = self.root_

@@ -227,27 +227,38 @@ class _TreeNode:
 
 
 def _best_split(x: np.ndarray, y: np.ndarray, min_leaf: int) -> tuple[int, float, float] | None:
-    """Best (feature, threshold) minimizing summed variance of y halves."""
+    """Best (feature, threshold) minimizing summed variance of y halves.
+
+    One vectorized sum-of-squared-error sweep per feature: prefix sums of y
+    and y^2 give both halves' SSE at every candidate split position at once.
+    """
     n, nf = x.shape
     best = None
     base = ((y - y.mean(0)) ** 2).sum()
+    pos = np.arange(min_leaf, n - min_leaf + 1)
+    pos = pos[(pos >= 1) & (pos <= n - 1)]
+    if pos.size == 0:
+        return None
     for f in range(nf):
         order = np.argsort(x[:, f], kind="stable")
         xs, ys = x[order, f], y[order]
         csum = np.cumsum(ys, axis=0)
         csum2 = np.cumsum(ys**2, axis=0)
         tot, tot2 = csum[-1], csum2[-1]
-        for i in range(min_leaf, n - min_leaf + 1):
-            if i < n and xs[i - 1] == xs[min(i, n - 1)]:
-                continue
-            nl, nr = i, n - i
-            sl, sl2 = csum[i - 1], csum2[i - 1]
-            sr, sr2 = tot - sl, tot2 - sl2
-            sse = (sl2 - sl**2 / nl).sum() + (sr2 - sr**2 / nr).sum()
-            gain = base - sse
-            if best is None or gain > best[2]:
-                thr = 0.5 * (xs[i - 1] + xs[min(i, n - 1)])
-                best = (f, float(thr), float(gain))
+        valid = xs[pos - 1] != xs[pos]
+        if not valid.any():
+            continue
+        nl = pos.astype(np.float64)
+        nr = (n - pos).astype(np.float64)
+        sl, sl2 = csum[pos - 1], csum2[pos - 1]
+        sr, sr2 = tot[None, :] - sl, tot2[None, :] - sl2
+        sse = (sl2 - sl**2 / nl[:, None]).sum(1) + (sr2 - sr**2 / nr[:, None]).sum(1)
+        gain = np.where(valid, base - sse, -np.inf)
+        j = int(gain.argmax())
+        if best is None or gain[j] > best[2]:
+            i = int(pos[j])
+            thr = 0.5 * (xs[i - 1] + xs[i])
+            best = (f, float(thr), float(gain[j]))
     if best is None or best[2] <= 1e-12:
         return None
     return best

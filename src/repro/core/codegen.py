@@ -5,14 +5,23 @@ series of nested ``if`` statements (§5.1).  We do the same: a fitted
 ``DecisionTreeClassifier`` can be (a) round-tripped through JSON (what the
 deployment artifact stores) and (b) emitted as standalone Python source with
 zero dependencies — the literal launcher embedding.
+
+Two interchangeable JSON tree formats (DESIGN.md §5):
+  v1 ``{"n_classes", "root": {...nested...}}`` — recursive dicts, what seed
+     deployments shipped; still read forever.
+  v2 ``{"n_classes", "format": "flat", "feature": [...], ...}`` — the
+     :class:`FlatTree` structure-of-arrays, what ``Deployment.save`` now
+     emits (compact, loads straight into the vectorized predict path).
 """
 from __future__ import annotations
 
 from .classify import DecisionTreeClassifier, _Node
 from .dataset import FEATURE_NAMES
+from .flattree import FlatTree
 
 
 def tree_to_dict(tree: DecisionTreeClassifier) -> dict:
+    """v1 nested-dict serialization (kept for back-compat round-trips)."""
     if not isinstance(tree, DecisionTreeClassifier):
         raise TypeError(
             f"only decision trees are shippable launcher classifiers, got {type(tree).__name__}"
@@ -31,9 +40,31 @@ def tree_to_dict(tree: DecisionTreeClassifier) -> dict:
     return {"n_classes": tree.n_classes_, "root": rec(tree.root_)}
 
 
+def tree_to_flat_dict(tree: DecisionTreeClassifier) -> dict:
+    """v2 flat-array serialization — ships arrays, not recursive dicts."""
+    if not isinstance(tree, DecisionTreeClassifier):
+        raise TypeError(
+            f"only decision trees are shippable launcher classifiers, got {type(tree).__name__}"
+        )
+    blob = tree._ensure_flat().to_dict()
+    blob.pop("counts", None)  # launcher blobs ship labels only
+    return blob
+
+
 def dict_to_tree(blob: dict) -> DecisionTreeClassifier:
+    """Parse either tree format back into a classifier.
+
+    v2 blobs load directly into the flat fast path; the nested node graph is
+    reconstructed too so codegen (``tree_to_python``) keeps working.
+    """
     tree = DecisionTreeClassifier()
     tree.n_classes_ = int(blob["n_classes"])
+    if blob.get("format") == "flat":
+        tree.flat_ = FlatTree.from_dict(blob)
+        tree.root_ = tree.flat_.to_node(_Node)
+        return tree
+    if "root" not in blob:
+        raise ValueError(f"unrecognized tree blob (keys: {sorted(blob)})")
 
     def rec(d: dict) -> _Node:
         node = _Node()
@@ -48,6 +79,7 @@ def dict_to_tree(blob: dict) -> DecisionTreeClassifier:
         return node
 
     tree.root_ = rec(blob["root"])
+    tree.flat_ = FlatTree.from_node(tree.root_, tree.n_classes_)
     return tree
 
 

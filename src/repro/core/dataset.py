@@ -26,22 +26,27 @@ FEATURE_NAMES = ("log2_m", "log2_k", "log2_n", "log2_batch", "log2_mn_over_k", "
 
 
 def problem_features(problems: list[Problem]) -> np.ndarray:
-    """(n_problems, n_features) feature matrix for classifier/tree inputs."""
-    rows = []
-    for m, k, n, batch in problems:
-        flops = 2.0 * m * k * n * batch
-        bytes_min = 2.0 * (m * k + k * n + m * n) * batch
-        rows.append(
-            [
-                np.log2(m),
-                np.log2(k),
-                np.log2(n),
-                np.log2(batch),
-                np.log2((m * n) / k),
-                np.log2(flops / bytes_min),
-            ]
-        )
-    return np.asarray(rows, dtype=np.float64)
+    """(n_problems, n_features) feature matrix for classifier/tree inputs.
+
+    Fully batched — one numpy expression over the whole problem list, so the
+    dispatch/tuning paths never featurize row-by-row in Python.
+    """
+    p = np.asarray(problems, dtype=np.float64).reshape(-1, 4)
+    if p.size == 0:
+        return np.zeros((0, len(FEATURE_NAMES)))
+    m, k, n, batch = p.T
+    flops = 2.0 * m * k * n * batch
+    bytes_min = 2.0 * (m * k + k * n + m * n) * batch
+    return np.column_stack(
+        [
+            np.log2(m),
+            np.log2(k),
+            np.log2(n),
+            np.log2(batch),
+            np.log2((m * n) / k),
+            np.log2(flops / bytes_min),
+        ]
+    )
 
 
 @dataclasses.dataclass

@@ -22,6 +22,22 @@ from .dataset import TuningDataset, problem_features
 _EPS = 1e-12
 
 
+def _validate_tree_labels(tree, n_configs: int, field: str) -> None:
+    """Reject blobs whose leaves point past the deployed config list.
+
+    A corrupt / truncated artifact used to be clamped silently at dispatch
+    time; failing at ``load`` surfaces it where it can actually be fixed.
+    """
+    flat = tree._ensure_flat()
+    hi = flat.max_leaf_label()
+    lo = int(flat.label.min())
+    if lo < 0 or hi >= n_configs:
+        raise ValueError(
+            f"deployment blob {field!r} selects config {hi if hi >= n_configs else lo} "
+            f"but only {n_configs} configs are deployed"
+        )
+
+
 def build_labels(perf: np.ndarray, chosen: list[int]) -> np.ndarray:
     """Per-problem index (into ``chosen``) of the best deployed kernel."""
     perf = np.asarray(perf, dtype=np.float64)
@@ -31,6 +47,10 @@ def build_labels(perf: np.ndarray, chosen: list[int]) -> np.ndarray:
 @dataclasses.dataclass
 class Deployment:
     """The shippable tuning artifact (implements KernelPolicy)."""
+
+    # Selections are a pure function of the problem shape, so the ops-layer
+    # shape cache may memoize them (DESIGN.md §6).
+    cacheable = True
 
     device: str
     configs: list[MatmulConfig]
@@ -66,20 +86,29 @@ class Deployment:
         return best
 
     # -- persistence ---------------------------------------------------------
-    def save(self, path: str | Path) -> None:
-        """Serialize (decision-tree classifiers only, like the paper ships)."""
-        from .codegen import tree_to_dict
+    def save(self, path: str | Path, *, tree_format: str = "flat") -> None:
+        """Serialize (decision-tree classifiers only, like the paper ships).
 
+        ``tree_format="flat"`` (default) emits v2 structure-of-arrays tree
+        blobs; ``"nested"`` emits the v1 recursive-dict form for tooling that
+        still expects it.  Both load identically.
+        """
+        from .codegen import tree_to_dict, tree_to_flat_dict
+
+        if tree_format not in ("flat", "nested"):
+            raise ValueError(f"unknown tree_format {tree_format!r}")
+        to_blob = tree_to_flat_dict if tree_format == "flat" else tree_to_dict
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
         blob = {
+            "version": 2 if tree_format == "flat" else 1,
             "device": self.device,
             "configs": [c.to_dict() for c in self.configs],
             "attention_configs": [c.to_dict() for c in self.attention_configs],
             "classifier_name": self.classifier_name,
-            "tree": tree_to_dict(self.classifier),
+            "tree": to_blob(self.classifier),
             "attention_tree": (
-                tree_to_dict(self.attention_tree) if self.attention_tree is not None else None
+                to_blob(self.attention_tree) if self.attention_tree is not None else None
             ),
             "meta": self.meta,
         }
@@ -91,7 +120,7 @@ class Deployment:
 
         blob = json.loads(Path(path).read_text())
         atree = blob.get("attention_tree")
-        return Deployment(
+        dep = Deployment(
             device=blob["device"],
             configs=[MatmulConfig.from_dict(d) for d in blob["configs"]],
             classifier=dict_to_tree(blob["tree"]),
@@ -100,6 +129,12 @@ class Deployment:
             attention_tree=dict_to_tree(atree) if atree else None,
             meta=blob.get("meta", {}),
         )
+        _validate_tree_labels(dep.classifier, len(dep.configs), "tree")
+        if dep.attention_tree is not None:
+            _validate_tree_labels(
+                dep.attention_tree, len(dep.attention_configs), "attention_tree"
+            )
+        return dep
 
 
 def train_deployment(

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
+from collections import OrderedDict, defaultdict
 from typing import Callable, Sequence
 
 from repro.kernels.matmul import MatmulConfig, config_space
@@ -53,6 +53,11 @@ class OnlinePolicy:
     configs for the hybrid offline-prior + online-correction mode.
     """
 
+    # Exploration is stateful (repeated calls for the same shape must reach
+    # different arms), so the ops-layer shape cache must not memoize us; the
+    # per-bucket ``_committed`` dict below is this policy's own fast path.
+    cacheable = False
+
     def __init__(
         self,
         measure: Callable[[tuple, MatmulConfig], float],
@@ -67,6 +72,8 @@ class OnlinePolicy:
         self.prior = prior
         self._arms: dict[tuple, list[_Arm]] = {}
         self._committed: dict[tuple, MatmulConfig] = {}
+        self._attn_cache: OrderedDict[tuple, object] = OrderedDict()  # LRU, bounded
+        self._attn_cache_cap = 1024
         self.stats = defaultdict(int)  # 'explore' / 'commit' counters
 
     # -- KernelPolicy ---------------------------------------------------------
@@ -104,11 +111,21 @@ class OnlinePolicy:
         return best.config
 
     def select_attention(self, sq: int, skv: int, d: int):
+        key = (sq, skv, d)
+        got = self._attn_cache.get(key)
+        if got is not None:
+            self._attn_cache.move_to_end(key)
+            return got
         if self.prior is not None:
-            return self.prior.select_attention(sq, skv, d)
-        from repro.kernels.attention import DEFAULT_ATTN_CONFIG
+            cfg = self.prior.select_attention(sq, skv, d)
+        else:
+            from repro.kernels.attention import DEFAULT_ATTN_CONFIG
 
-        return DEFAULT_ATTN_CONFIG
+            cfg = DEFAULT_ATTN_CONFIG
+        self._attn_cache[key] = cfg
+        if len(self._attn_cache) > self._attn_cache_cap:
+            self._attn_cache.popitem(last=False)
+        return cfg
 
     # -- introspection ---------------------------------------------------------
     def warmup_cost(self) -> float:

@@ -1,0 +1,1 @@
+"""Distributed-execution support: sharding rules for params, batches, caches."""

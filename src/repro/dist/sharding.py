@@ -1,0 +1,139 @@
+"""Pure PartitionSpec rules for every pytree the launchers shard.
+
+All functions are shape/name-driven and mesh-agnostic beyond ``axis_names``,
+so they are unit-testable without devices (the specs are pure data; only
+``NamedSharding`` construction needs a real mesh).
+
+Mesh axis conventions (see ``repro.launch.mesh``):
+  ``pod``   — outermost data-parallel axis across pods/slices (optional);
+  ``data``  — data parallel / FSDP axis;
+  ``model`` — tensor/expert parallel axis.
+
+Parameter rules (name = innermost dict key, rank includes the scan-stacked
+layer axis that all per-block params carry at axis 0):
+  * rank-1/2 vectors and per-layer norms/gates — replicated;
+  * ``embed`` (V, d) — vocab over ``model``, features over ``data``;
+  * ``unembed`` (d, V) — column-parallel;
+  * rank-3 GEMM weights — column-parallel ``P(None, data, model)`` by
+    default; known output projections row-parallel ``P(None, model, data)``;
+    tiny-state SSM/router matrices FSDP-only; per-head decay/bonus tables
+    replicated;
+  * rank-4 MoE expert stacks (L, E, d, ff) — experts over ``model`` (EP),
+    FSDP over the next dim.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Output projections: input dim is the sharded (model) dim — row-parallel.
+_ROW_PARALLEL = {"wo", "w_o", "w_out", "w_down", "w_cv", "wd2", "w_dt2"}
+# Tiny trailing state dims (SSM B/C/A, router logits): FSDP the d dim only.
+_FSDP_ONLY = {"w_b", "w_c", "a_log", "router"}
+# Per-head tables too small to shard at all.
+_REPLICATED = {"ln_w", "u"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+    return ""
+
+
+def _axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def param_pspecs(params, mesh):
+    """PartitionSpec tree mirroring ``params`` (one P per leaf)."""
+    axes = _axes(mesh)
+    tp = "model" if "model" in axes else None
+    fsdp = "data" if "data" in axes else None
+
+    def spec(path, leaf) -> P:
+        name = _leaf_name(path)
+        rank = len(leaf.shape)
+        if rank <= 1:
+            return P()
+        if rank == 2:
+            if name == "embed":
+                return P(tp, fsdp)
+            if name == "unembed":
+                return P(fsdp, tp)
+            return P()  # per-layer (L, d) norms / mixing vectors
+        if rank == 3:
+            if name in _REPLICATED:
+                return P()
+            if name in _FSDP_ONLY:
+                return P(None, fsdp, None)
+            if name in _ROW_PARALLEL:
+                return P(None, tp, fsdp)
+            return P(None, fsdp, tp)  # column-parallel default
+        if rank == 4:  # MoE expert stacks (L, E, d, ff) / (L, E, ff, d)
+            return P(None, tp, fsdp, None)
+        return P(*([None] * rank))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_pspecs(tree, mesh, *, shard_seq: bool = False):
+    """Input batches: DP over the leading batch dim (SP over sequence)."""
+    axes = _axes(mesh)
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec(leaf) -> P:
+        rank = len(leaf.shape)
+        if rank == 0:
+            return P()
+        if shard_seq:
+            # batch=1 long-context: shard the sequence dim instead.
+            if rank == 1:
+                return P(None)
+            seq = "data" if "data" in axes else None
+            return P(None, seq, *([None] * (rank - 2)))
+        return P(dp_spec, *([None] * (rank - 1)))
+
+    return jax.tree.map(spec, tree)
+
+
+def cache_pspecs(cache, mesh, *, shard_seq: bool = False, kv_seq_axis: str | None = None):
+    """KV/state caches: DP over batch; context-parallel over seq when asked.
+
+    Layer-stacked leaves (rank >= 4: (L, B, T, H, hd) KV, (L, B, H, hd, hd)
+    WKV/SSM state) carry batch at axis 1; flat leaves (e.g. encoder
+    ``memory`` (B, S, d)) at axis 0.  With ``shard_seq`` the KV sequence dim
+    is sharded over ``data`` (or ``kv_seq_axis``); sequence-free state leaves
+    shard their head dim over ``model`` instead.
+    """
+    axes = _axes(mesh)
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    tp = "model" if "model" in axes else None
+
+    def spec(path, leaf) -> P:
+        name = _leaf_name(path)
+        rank = len(leaf.shape)
+        if rank == 0:
+            return P()
+        batch_axis = 1 if rank >= 4 else 0
+        out = [None] * rank
+        if not shard_seq:
+            out[batch_axis] = dp if dp else None
+            return P(*out)
+        seq_axis = batch_axis + 1
+        if seq_axis < rank:
+            if name.startswith(("k", "v", "memory")):
+                out[seq_axis] = kv_seq_axis or ("data" if "data" in axes else None)
+            else:  # sequence-free resident state: split heads instead
+                out[seq_axis] = tp
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def opt_pspecs(opt, param_spec):
+    """Optimizer-state specs: moments mirror the params, step is replicated."""
+    return type(opt)(step=P(), m=param_spec, v=param_spec)

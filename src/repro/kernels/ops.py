@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+from collections import OrderedDict, deque
 from typing import Protocol
 
 import jax
@@ -49,19 +50,30 @@ class FixedPolicy:
         return self.attention_config
 
 
+DEFAULT_LOG_CAP = 4096
+DEFAULT_SHAPE_CACHE_CAP = 1024
+
+
 class _State(threading.local):
     def __init__(self):
         self.policy: KernelPolicy | None = None
         self.use_pallas: bool = False  # CPU host default: XLA dot
         self.interpret: bool = False
-        self.selection_log: list[tuple] = []
+        self.log_enabled: bool = False
+        self.selection_log: deque[tuple] = deque(maxlen=DEFAULT_LOG_CAP)
+        self.shape_cache: OrderedDict[tuple, object] = OrderedDict()
+        self.shape_cache_cap: int = DEFAULT_SHAPE_CACHE_CAP
+        self.cache_hits: int = 0
+        self.cache_misses: int = 0
 
 
 _state = _State()
+_MISS = object()
 
 
 def set_kernel_policy(policy: KernelPolicy | None) -> None:
     _state.policy = policy
+    clear_shape_cache()
 
 
 def get_kernel_policy() -> KernelPolicy | None:
@@ -74,13 +86,95 @@ def set_pallas_enabled(enabled: bool, *, interpret: bool = False) -> None:
     _state.interpret = interpret
 
 
+# ---------------------------------------------------------------------------
+# selection log (opt-in, ring buffer — long serving runs must not leak host
+# memory recording every trace-time decision)
+# ---------------------------------------------------------------------------
+def set_selection_logging(enabled: bool, *, cap: int | None = None) -> None:
+    """Opt in/out of recording dispatch decisions; ``cap`` bounds the buffer."""
+    _state.log_enabled = enabled
+    if cap is not None:
+        _state.selection_log = deque(_state.selection_log, maxlen=max(int(cap), 1))
+
+
+def selection_logging_enabled() -> bool:
+    return _state.log_enabled
+
+
 def selection_log() -> list[tuple]:
-    """Trace-time dispatch decisions (op, problem, chosen config)."""
+    """Trace-time dispatch decisions (op, problem, chosen config).
+
+    Empty unless ``set_selection_logging(True)`` was called; at most the
+    newest ``cap`` entries are retained.
+    """
     return list(_state.selection_log)
 
 
 def clear_selection_log() -> None:
     _state.selection_log.clear()
+
+
+# ---------------------------------------------------------------------------
+# shape-memoized dispatch (the serving fast path)
+# ---------------------------------------------------------------------------
+def clear_shape_cache() -> None:
+    _state.shape_cache.clear()
+    _state.cache_hits = 0
+    _state.cache_misses = 0
+
+
+def set_shape_cache_cap(cap: int) -> None:
+    """Bound the dispatch cache; oldest (LRU) shape keys are evicted."""
+    _state.shape_cache_cap = max(int(cap), 1)
+    while len(_state.shape_cache) > _state.shape_cache_cap:
+        _state.shape_cache.popitem(last=False)
+
+
+def shape_cache_stats() -> dict:
+    """Hit/miss counters for the dispatch shape cache (reset on policy swap)."""
+    return {
+        "hits": _state.cache_hits,
+        "misses": _state.cache_misses,
+        "size": len(_state.shape_cache),
+        "cap": _state.shape_cache_cap,
+    }
+
+
+def _select(op: str, problem: tuple, select_fn):
+    """Policy consultation with LRU shape memoization.
+
+    Repeated traces of the same problem shape (the serving engine's
+    prefill/decode retraces) hit a dict lookup instead of featurize+predict.
+    Policies whose selections are not a pure function of the shape (e.g. the
+    exploring ``OnlinePolicy``) opt out via ``cacheable = False``.
+    """
+    cacheable = bool(getattr(_state.policy, "cacheable", True))
+    key = (op, *problem)
+    if cacheable:
+        cfg = _state.shape_cache.get(key, _MISS)
+        if cfg is not _MISS:
+            _state.cache_hits += 1
+            _state.shape_cache.move_to_end(key)
+            if _state.log_enabled:
+                _state.selection_log.append((op, problem, cfg))
+            return cfg
+    cfg = select_fn()
+    if cacheable:
+        _state.cache_misses += 1
+        _state.shape_cache[key] = cfg
+        if len(_state.shape_cache) > _state.shape_cache_cap:
+            _state.shape_cache.popitem(last=False)
+    if _state.log_enabled:
+        _state.selection_log.append((op, problem, cfg))
+    return cfg
+
+
+def select_matmul_config(m: int, k: int, n: int, batch: int = 1) -> MatmulConfig | None:
+    """The launcher-side selection path on its own (what ``matmul`` runs at
+    trace time); ``None`` when no policy is installed."""
+    if _state.policy is None:
+        return None
+    return _select("matmul", (m, k, n, batch), lambda: _state.policy.select_matmul(m, k, n, batch))
 
 
 # ---------------------------------------------------------------------------
@@ -99,9 +193,8 @@ def matmul(lhs: jax.Array, rhs: jax.Array, *, out_dtype=None, config: MatmulConf
     m = 1
     for d in lead:
         m *= d
-    if config is None and _state.policy is not None:
-        config = _state.policy.select_matmul(m, k, n, 1)
-        _state.selection_log.append(("matmul", (m, k, n, 1), config))
+    if config is None:
+        config = select_matmul_config(m, k, n, 1)
     if not _state.use_pallas:
         out = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
         return out.astype(out_dtype or lhs.dtype)
@@ -129,8 +222,7 @@ def attention(
     sq, d = q.shape[-2:]
     skv = k.shape[-2]
     if config is None and _state.policy is not None:
-        config = _state.policy.select_attention(sq, skv, d)
-        _state.selection_log.append(("attention", (sq, skv, d), config))
+        config = _select("attention", (sq, skv, d), lambda: _state.policy.select_attention(sq, skv, d))
     if not _state.use_pallas:
         fn = lambda q_, k_, v_: flash_attention_ref(q_, k_, v_, causal=causal, scale=scale)
     else:
@@ -154,8 +246,7 @@ def wkv(r, k, v, logw, u, state=None, *, config: WkvConfig | None = None):
     """
     b, s, h, hd = r.shape
     if config is None and _state.policy is not None and hasattr(_state.policy, "select_wkv"):
-        config = _state.policy.select_wkv(s, hd)
-        _state.selection_log.append(("wkv", (s, hd), config))
+        config = _select("wkv", (s, hd), lambda: _state.policy.select_wkv(s, hd))
     if not _state.use_pallas:
         from .ref import wkv_ref
 
@@ -184,8 +275,8 @@ def ssm_scan(dtx, dta, b, v_c, state=None, *, config: SsmConfig | None = None):
     associative-scan oracle.
     """
     if config is None and _state.policy is not None and hasattr(_state.policy, "select_ssm"):
-        config = _state.policy.select_ssm(dtx.shape[1], dtx.shape[2])
-        _state.selection_log.append(("ssm_scan", dtx.shape[1:3], config))
+        s_len, d_in = dtx.shape[1], dtx.shape[2]
+        config = _select("ssm_scan", (s_len, d_in), lambda: _state.policy.select_ssm(s_len, d_in))
     if not _state.use_pallas:
         from .ref import ssm_scan_ref
 

@@ -68,6 +68,20 @@ class ServingEngine:
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self._prefill_cache = {}
 
+    def dispatch_stats(self) -> dict:
+        """Kernel-selection shape-cache counters (convenience passthrough).
+
+        Each prefill bucket and the decode program retrace the model, so
+        repeated admissions re-run trace-time kernel selection; the ops-layer
+        shape cache (DESIGN.md §6) turns those repeats into dict hits.  Note
+        the counters are per *thread* (ops state is thread-local), not per
+        engine: call from the thread that drives this engine, and expect
+        other engines on the same thread to contribute to the same numbers.
+        """
+        from repro.kernels import ops
+
+        return ops.shape_cache_stats()
+
     # -- slot admission -------------------------------------------------------
     def _free_slot(self) -> int | None:
         for i, r in enumerate(self.slots):

@@ -1,7 +1,7 @@
 """Unit tests for the paper pipeline: normalize, PCA, clustering, classifiers."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.classify import CLASSIFIERS, DecisionTreeClassifier, make_classifier
 from repro.core.cluster import (

@@ -1,0 +1,222 @@
+"""Compiled selection fast path: flat trees, dispatch cache, blob formats."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.classify import DecisionTreeClassifier, RandomForestClassifier
+from repro.core.codegen import dict_to_tree, tree_to_dict, tree_to_flat_dict, tree_to_python
+from repro.core.dataset import FEATURE_NAMES, build_model_dataset, synthetic_problems
+from repro.core.dispatch import Deployment
+from repro.core.flattree import FlatTree
+from repro.core.online import OnlinePolicy
+from repro.core.tuner import tune
+from repro.kernels import ops
+from repro.kernels.matmul import config_space
+
+
+@pytest.fixture(autouse=True)
+def _clean_ops_state():
+    yield
+    ops.set_kernel_policy(None)
+    ops.set_selection_logging(False)
+    ops.clear_selection_log()
+
+
+def _fit_random_tree(seed, n=120, d=4, k=5, **kw):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d))
+    y = rng.integers(0, k, size=n)
+    return DecisionTreeClassifier(**kw).fit(x, y), rng
+
+
+# ---------------------------------------------------------------------------
+# flat-tree <-> nested-walk <-> generated-source equivalence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(8))
+def test_flat_predict_matches_nested_walk(seed):
+    clf, rng = _fit_random_tree(seed, n=80 + 17 * seed, k=2 + seed % 4)
+    xt = rng.normal(size=(500, 4)) * 3
+    np.testing.assert_array_equal(clf.predict(xt), clf.predict_nested(xt))
+    # the compiled form is a real flat tree with valid structure
+    flat = clf.flat_
+    assert isinstance(flat, FlatTree)
+    flat.validate()
+    assert flat.n_leaves() == clf.n_leaves()
+
+
+def test_flat_predict_matches_generated_source():
+    clf, rng = _fit_random_tree(3, d=len(FEATURE_NAMES))
+    src = tree_to_python(clf)
+    ns = {}
+    exec(src, ns)  # noqa: S102 — generated launcher code, the paper's embedding
+    xt = rng.normal(size=(300, len(FEATURE_NAMES))) * 3
+    want = [ns["select_kernel"](*row) for row in xt]
+    np.testing.assert_array_equal(clf.predict(xt), want)
+    np.testing.assert_array_equal(clf.predict_nested(xt), want)
+
+
+def test_flat_predict_no_python_recursion_on_large_batches():
+    """10k-row predict iterates the tree depth, not the row count."""
+    clf, rng = _fit_random_tree(0, n=400)
+    xt = rng.normal(size=(10_000, 4)) * 2
+    calls = {"n": 0}
+    orig = FlatTree.apply
+
+    def counting_apply(self, x):
+        calls["n"] += 1
+        return orig(self, x)
+
+    FlatTree.apply = counting_apply
+    try:
+        out = clf.predict(xt)
+    finally:
+        FlatTree.apply = orig
+    assert out.shape == (10_000,)
+    assert calls["n"] == 1  # one vectorized descent for the whole batch
+
+
+def test_forest_counts_match_nested(rng):
+    x = rng.normal(size=(150, 5))
+    y = (x[:, 0] > 0).astype(int) + 2 * (x[:, 1] > 0)
+    rf = RandomForestClassifier(n_trees=8).fit(x, y)
+    xt = rng.normal(size=(200, 5))
+    for tree in rf.trees_:
+        flat_counts = tree.predict_counts(xt)
+        # nested oracle: strip the counts matrix to force the per-row fallback
+        flat = tree.flat_
+        tree.flat_ = FlatTree(flat.feature, flat.threshold, flat.left, flat.right,
+                              flat.label, flat.n_classes, None)
+        nested_counts = tree.predict_counts(xt)
+        tree.flat_ = flat
+        np.testing.assert_allclose(flat_counts, nested_counts)
+    assert ((rf.predict(xt) >= 0) & (rf.predict(xt) < 4)).all()
+
+
+# ---------------------------------------------------------------------------
+# serialization: v1 (nested) and v2 (flat) round trips + back-compat
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(4))
+def test_tree_blob_roundtrips_both_formats(seed):
+    clf, rng = _fit_random_tree(seed)
+    xt = rng.normal(size=(300, 4)) * 3
+    want = clf.predict(xt)
+    for blob in (tree_to_dict(clf), tree_to_flat_dict(clf)):
+        back = dict_to_tree(json.loads(json.dumps(blob)))  # through real JSON
+        np.testing.assert_array_equal(back.predict(xt), want)
+        np.testing.assert_array_equal(back.predict_nested(xt), want)
+        # codegen still works on either parse
+        assert tree_to_python(back).startswith("def select_kernel(")
+
+
+def test_deployment_v1_and_v2_load_identically(tmp_path):
+    ds = build_model_dataset(synthetic_problems(60))
+    res = tune(ds, n_kernels=5)
+    p_flat = tmp_path / "v2.json"
+    p_nested = tmp_path / "v1.json"
+    res.deployment.save(p_flat)
+    res.deployment.save(p_nested, tree_format="nested")
+    assert json.loads(p_flat.read_text())["tree"]["format"] == "flat"
+    assert "root" in json.loads(p_nested.read_text())["tree"]
+    a = Deployment.load(p_flat)
+    b = Deployment.load(p_nested)
+    assert a.configs == b.configs == res.deployment.configs
+    for prob in [(64, 256, 512, 1), (1, 4096, 1024, 1), (2048, 2048, 2048, 8), (512, 784, 512, 16)]:
+        assert a.select_matmul(*prob) == b.select_matmul(*prob) == res.deployment.select_matmul(*prob)
+    for ap in [(128, 128, 64), (1, 2048, 128)]:
+        assert a.select_attention(*ap) == b.select_attention(*ap)
+
+
+def test_deployment_load_rejects_out_of_range_labels(tmp_path):
+    ds = build_model_dataset(synthetic_problems(60))
+    res = tune(ds, n_kernels=5)
+    path = tmp_path / "d.json"
+    res.deployment.save(path)
+    blob = json.loads(path.read_text())
+    blob["configs"] = blob["configs"][:2]  # truncate: tree labels now dangle
+    path.write_text(json.dumps(blob))
+    with pytest.raises(ValueError, match="configs are deployed"):
+        Deployment.load(path)
+
+
+def test_flat_blob_structural_validation():
+    with pytest.raises(ValueError):  # child index out of range
+        FlatTree.from_dict(
+            {"format": "flat", "n_classes": 2, "feature": [0], "threshold": [0.0],
+             "left": [5], "right": [1], "label": [0]}
+        )
+    with pytest.raises(ValueError):  # self-referential node: predict would hang
+        FlatTree.from_dict(
+            {"format": "flat", "n_classes": 2, "feature": [0], "threshold": [0.5],
+             "left": [0], "right": [0], "label": [0]}
+        )
+    with pytest.raises(ValueError):  # back-edge cycle between two nodes
+        FlatTree.from_dict(
+            {"format": "flat", "n_classes": 2, "feature": [0, 0, -1], "threshold": [0.5, 0.5, 0.0],
+             "left": [1, 0, -1], "right": [2, 2, -1], "label": [0, 0, 1]}
+        )
+
+
+# ---------------------------------------------------------------------------
+# dispatch shape cache + bounded opt-in selection log
+# ---------------------------------------------------------------------------
+def test_shape_cache_hits_on_repeated_dispatch():
+    ds = build_model_dataset(synthetic_problems(60))
+    res = tune(ds, n_kernels=5)
+    ops.set_kernel_policy(res.deployment)
+    cfg0 = ops.select_matmul_config(512, 784, 512, 16)
+    stats = ops.shape_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 0
+    for _ in range(5):
+        assert ops.select_matmul_config(512, 784, 512, 16) == cfg0
+    stats = ops.shape_cache_stats()
+    assert stats["hits"] == 5 and stats["misses"] == 1
+    # a different shape misses, and a policy swap clears the cache
+    ops.select_matmul_config(1, 4096, 1024, 1)
+    assert ops.shape_cache_stats()["misses"] == 2
+    ops.set_kernel_policy(res.deployment)
+    assert ops.shape_cache_stats() == {"hits": 0, "misses": 0, "size": 0,
+                                       "cap": ops.DEFAULT_SHAPE_CACHE_CAP}
+
+
+def test_shape_cache_lru_eviction():
+    ds = build_model_dataset(synthetic_problems(40))
+    res = tune(ds, n_kernels=4)
+    ops.set_kernel_policy(res.deployment)
+    ops.set_shape_cache_cap(4)
+    try:
+        for m in (8, 16, 32, 64, 128, 256):
+            ops.select_matmul_config(m, 512, 512, 1)
+        stats = ops.shape_cache_stats()
+        assert stats["size"] == 4 and stats["cap"] == 4
+        # oldest key evicted -> re-selecting it is a miss again
+        ops.select_matmul_config(8, 512, 512, 1)
+        assert ops.shape_cache_stats()["misses"] == 7
+    finally:
+        ops.set_shape_cache_cap(ops.DEFAULT_SHAPE_CACHE_CAP)
+
+
+def test_online_policy_is_not_shape_cached():
+    cands = list(config_space())[:4]
+    times = iter(np.linspace(1.0, 0.1, 100))
+    pol = OnlinePolicy(lambda p, c: next(times), cands, trials_per_arm=1)
+    ops.set_kernel_policy(pol)
+    picks = [ops.select_matmul_config(512, 784, 512, 16) for _ in range(4)]
+    assert picks == cands  # every call explored a fresh arm — no memoization
+    assert ops.shape_cache_stats()["size"] == 0
+
+
+def test_selection_log_opt_in_and_bounded():
+    ds = build_model_dataset(synthetic_problems(40))
+    res = tune(ds, n_kernels=4)
+    ops.set_kernel_policy(res.deployment)
+    ops.select_matmul_config(64, 64, 64, 1)
+    assert ops.selection_log() == []  # off by default
+    ops.set_selection_logging(True, cap=8)
+    for m in range(1, 21):
+        ops.select_matmul_config(m, 64, 64, 1)
+    log = ops.selection_log()
+    assert len(log) == 8  # ring buffer keeps only the newest cap entries
+    assert log[-1][1] == (20, 64, 64, 1)
+    assert all(op == "matmul" for op, _, _ in log)
+    ops.set_selection_logging(False, cap=ops.DEFAULT_LOG_CAP)

@@ -1,7 +1,7 @@
 """Fleet bootstrap + extra property tests on pipeline invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.normalize import NORMALIZATIONS, normalize
 from repro.data.pipeline import DataConfig

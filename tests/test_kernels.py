@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.attention import (
     AttentionConfig,
@@ -27,8 +27,13 @@ def _mm_case(m, k, n, dtype, cfg):
     got = matmul_pallas(a, b, cfg, interpret=True)
     want = matmul_ref(a, b)
     assert got.shape == want.shape and got.dtype == want.dtype
+    tol = dict(TOL[dtype])
+    if dtype == jnp.float32:
+        # deep k spans multiple block_k tiles: the per-tile accumulation
+        # order differs from one fused dot, so abs error grows with k
+        tol["atol"] = max(tol["atol"], 3e-8 * k)
     np.testing.assert_allclose(
-        got.astype(jnp.float32), want.astype(jnp.float32), **TOL[dtype]
+        got.astype(jnp.float32), want.astype(jnp.float32), **tol
     )
 
 

@@ -10,8 +10,10 @@ from repro.kernels import ops
 
 @pytest.fixture(autouse=True)
 def _clean_policy():
+    ops.set_selection_logging(True)
     yield
     ops.set_kernel_policy(None)
+    ops.set_selection_logging(False)
     ops.clear_selection_log()
 
 

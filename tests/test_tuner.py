@@ -168,6 +168,7 @@ def test_ops_matmul_uses_policy():
     ds = build_model_dataset(synthetic_problems(60))
     res = tune(ds, n_kernels=5)
     ops.set_kernel_policy(res.deployment)
+    ops.set_selection_logging(True)
     ops.clear_selection_log()
     try:
         a = jnp.ones((4, 64, 128))
@@ -179,8 +180,15 @@ def test_ops_matmul_uses_policy():
         assert log[0][1] == (256, 128, 256, 1)
         assert isinstance(log[0][2], MatmulConfig)
         assert log[0][2] in res.deployment.configs
+        # the second identical-shape dispatch is a shape-cache hit
+        stats0 = ops.shape_cache_stats()
+        ops.matmul(a, b)
+        stats1 = ops.shape_cache_stats()
+        assert stats1["hits"] == stats0["hits"] + 1
+        assert stats1["misses"] == stats0["misses"]
     finally:
         ops.set_kernel_policy(None)
+        ops.set_selection_logging(False)
         ops.clear_selection_log()
 
 
