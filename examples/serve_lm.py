@@ -1,10 +1,14 @@
-"""Batched serving example: continuous batching with tuned kernel dispatch.
+"""Batched serving example: continuous batching with a multi-device bundle.
 
-Brings up the slot-based serving engine on a small LM, serves a burst of
-requests with mixed lengths, and prints throughput + the trace-time kernel
-selections the deployment made for prefill vs decode GEMMs.
+Tunes a two-device DeploymentBundle in one run (``tune_fleet``), lets the
+serving engine auto-install the deployment for the *detected* host device
+(``REPRO_DEVICE`` overrides detection; an untuned host falls back to the
+nearest tuned sibling), serves a burst of requests with mixed lengths, and
+prints throughput + the trace-time kernel selections made for prefill vs
+decode GEMMs.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
+      PYTHONPATH=src REPRO_DEVICE=tpu_v4 python examples/serve_lm.py
 """
 import time
 
@@ -13,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
-from repro.core.tuner import tune_for_archs
+from repro.core.tuner import tune_fleet
 from repro.kernels import ops
 from repro.models.model import build_model
 from repro.serve.engine import Request, ServingEngine
@@ -23,14 +27,19 @@ def main() -> None:
     arch = "granite-8b"
     cfg = registry.get(arch).reduced()
 
-    result = tune_for_archs([arch], n_kernels=8, max_problems=100)
-    ops.set_kernel_policy(result.deployment)
+    fleet = tune_fleet([arch], device_names=("tpu_v5e", "tpu_v4"),
+                       n_kernels=8, max_problems=100)
+    bundle = fleet.bundle
+    print(f"bundle tuned for {bundle.devices}")
     ops.set_selection_logging(True)
     ops.clear_selection_log()
 
     model = build_model(cfg, dtype=jnp.float32, param_dtype=jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, max_batch=4, cache_len=128)
+    # The engine installs the right per-device Deployment from the bundle.
+    engine = ServingEngine(model, params, max_batch=4, cache_len=128, bundle=bundle)
+    print(f"host resolved to device {engine.device!r} "
+          f"(detected or REPRO_DEVICE; nearest tuned sibling when untuned)")
 
     rng = np.random.default_rng(0)
     requests = [
@@ -42,16 +51,17 @@ def main() -> None:
         for i in range(12)
     ]
     t0 = time.time()
-    engine.run(requests)
+    status = engine.run(requests)
     dt = time.time() - t0
     tokens = sum(len(r.output) for r in requests)
-    print(f"served {len(requests)} requests / {tokens} tokens in {dt:.2f}s "
-          f"({tokens / dt:.1f} tok/s, {engine.steps} batched decode steps)")
+    print(f"served {status.completed}/{len(requests)} requests / {tokens} tokens "
+          f"in {dt:.2f}s ({tokens / dt:.1f} tok/s, {engine.steps} batched decode steps)")
 
     decode_sel = {c.name() for op, p, c in ops.selection_log() if p[0] <= 4}
     prefill_sel = {c.name() for op, p, c in ops.selection_log() if p[0] > 4}
     print(f"decode-GEMM kernels selected:  {sorted(decode_sel)}")
     print(f"prefill-GEMM kernels selected: {sorted(prefill_sel)}")
+    ops.clear_device_policies()
     ops.set_kernel_policy(None)
 
 

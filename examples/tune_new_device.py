@@ -3,17 +3,20 @@
 Given ONLY a benchmark data source for a device, produce the shippable
 deployment artifact: measured host-CPU timings here (the paper's i7-6700K
 analogue), the analytic TPU model as the second device.  Compares all
-clustering methods x normalizations and ships the winner.
+clustering methods x normalizations, ships the winner, and packs it together
+with a TPU deployment into a multi-device bundle that any host auto-installs
+for its detected hardware.
 
 Run:  PYTHONPATH=src python examples/tune_new_device.py [--full]
 """
 import argparse
 
+from repro.core.bundle import DeploymentBundle, install_bundle
 from repro.core.cluster import CLUSTER_METHODS
 from repro.core.cpubench import build_cpu_dataset, cpu_problems
 from repro.core.normalize import NORMALIZATIONS
 from repro.core.selection import achievable_fraction, select_from_dataset
-from repro.core.tuner import save_result, tune
+from repro.core.tuner import save_result, tune, tune_for_archs
 
 
 def main() -> None:
@@ -44,7 +47,21 @@ def main() -> None:
     save_result(result, args.out)
     print(f"deployment artifact -> {args.out}")
     print(f"  oracle {result.oracle_fraction:.1%} / classifier {result.classifier_fraction:.1%}")
-    print("install with: ops.set_kernel_policy(Deployment.load(path))")
+
+    # Pack the measured host deployment with an analytic TPU one: the
+    # deploy-anywhere bundle (this CPU host resolves to host_cpu; a TPU host
+    # would pick its own entry; anything else degrades to the nearest sibling).
+    tpu = tune_for_archs(None, device_name="tpu_v5e", n_kernels=8, max_problems=120)
+    bundle = DeploymentBundle({
+        "host_cpu": result.deployment,
+        "tpu_v5e": tpu.deployment,
+    })
+    bundle_path = args.out.replace(".json", "") + ".bundle.json"
+    bundle.save(bundle_path)
+    installed = install_bundle(bundle)
+    print(f"bundle ({bundle.devices}) -> {bundle_path}")
+    print(f"auto-installed deployment for this host: {installed.device!r}")
+    print("serving hosts install with: repro.core.bundle.install_bundle(path)")
 
 
 if __name__ == "__main__":

@@ -124,26 +124,35 @@ def input_specs(arch: str, shape: str) -> dict[str, jax.ShapeDtypeStruct]:
 # three popular neural networks' — here: from the assigned architectures)
 # ---------------------------------------------------------------------------
 def gemm_problems(arch: str, shape: str) -> list[tuple[int, int, int, int]]:
-    """The (m, k, n, batch) GEMMs this arch launches for this input shape."""
+    """The (m, k, n, batch) GEMMs this arch launches for this input shape.
+
+    The convention matches what ``repro.kernels.ops.matmul`` featurizes at
+    trace time: projections run on un-flattened ``(B, S, D)`` activations, so
+    they are recorded as ``(m=S, k, n, batch=B)`` (``m=1`` for decode) — NOT
+    flattened to ``(B*S, k, n, 1)``.  Only GEMMs whose call sites genuinely
+    flatten (the MoE router on ``(T, d)`` tokens) keep ``batch=1``; per-head
+    attention internals and per-expert FFNs keep their own batch counts.
+    """
     cfg = get(arch)
     sp = SHAPES[shape]
     b, s = sp.global_batch, sp.seq_len
-    tokens = b * (1 if sp.kind == "decode" else s)
+    m_tok = 1 if sp.kind == "decode" else s  # per-sequence GEMM M at runtime
+    tokens = b * m_tok  # flattened token count (router and capacity math)
     d, ff = cfg.d_model, cfg.d_ff
     probs: list[tuple[int, int, int, int]] = []
 
     def gemm(m, k, n, batch=1):
         probs.append((int(m), int(k), int(n), int(batch)))
 
-    # attention / time-mix projections
+    # attention / time-mix projections — launched on (B, S, D) activations
     if cfg.family == "ssm":
         for out in (cfg.q_dim, cfg.q_dim, cfg.q_dim, cfg.q_dim, d):  # r,k,v,g,o
-            gemm(tokens, d, out)
+            gemm(m_tok, d, out, b)
     else:
-        gemm(tokens, d, cfg.q_dim)  # Q
-        gemm(tokens, d, cfg.kv_dim)  # K
-        gemm(tokens, d, cfg.kv_dim)  # V
-        gemm(tokens, cfg.q_dim, d)  # out proj
+        gemm(m_tok, d, cfg.q_dim, b)  # Q
+        gemm(m_tok, d, cfg.kv_dim, b)  # K
+        gemm(m_tok, d, cfg.kv_dim, b)  # V
+        gemm(m_tok, cfg.q_dim, d, b)  # out proj
         if sp.kind != "decode":
             # score/context GEMMs per head (flash-attn internal shapes)
             hd = cfg.head_dim
@@ -152,23 +161,23 @@ def gemm_problems(arch: str, shape: str) -> list[tuple[int, int, int, int]]:
     # FFN
     if cfg.moe is not None:
         e, k_ = cfg.moe.n_experts, cfg.moe.top_k
-        gemm(tokens, d, e)  # router
+        gemm(tokens, d, e)  # router (moe_ffn flattens to (T, d) before matmul)
         cap_tokens = max(1, (tokens * k_) // e)
         for _ in range(2):
             gemm(cap_tokens, d, ff, e)  # gate/up per expert
         gemm(cap_tokens, ff, d, e)  # down per expert
     else:
-        gemm(tokens, d, ff)
-        gemm(tokens, d, ff)
-        gemm(tokens, ff, d)
-    # vocab
+        gemm(m_tok, d, ff, b)
+        gemm(m_tok, d, ff, b)
+        gemm(m_tok, ff, d, b)
+    # vocab head — (B, S, D) in train, (B, 1, D) in decode
     if sp.kind != "prefill":
-        gemm(tokens if sp.kind == "train" else b, d, cfg.padded_vocab())
+        gemm(m_tok, d, cfg.padded_vocab(), b)
     if cfg.family == "vlm":
-        gemm(tokens, d, cfg.q_dim)  # cross-q
-        gemm(b * cfg.n_image_tokens, d, cfg.kv_dim)
-        gemm(b * cfg.n_image_tokens, d, cfg.kv_dim)
+        gemm(m_tok, d, cfg.q_dim, b)  # cross-q
+        gemm(cfg.n_image_tokens, d, cfg.kv_dim, b)
+        gemm(cfg.n_image_tokens, d, cfg.kv_dim, b)
     if cfg.family == "hybrid":
-        gemm(tokens, d, 2 * d)  # mamba in-proj
-        gemm(tokens, d, d)  # mamba out-proj
+        gemm(m_tok, d, 2 * d, b)  # mamba in-proj
+        gemm(m_tok, d, d, b)  # mamba out-proj
     return probs

@@ -3,7 +3,9 @@
 Pipeline:  benchmark table -> normalize -> cluster-select deployable subset
            -> train runtime classifier -> Deployment artifact (KernelPolicy).
 """
+from .bundle import DeploymentBundle, install_bundle
 from .classify import CLASSIFIERS, make_classifier
+from .devices import canonical_device_name, detect_device, resolve_device
 from .flattree import FlatTree
 from .cluster import CLUSTER_METHODS, select_configs
 from .dataset import TuningDataset, build_model_dataset, harvest_problems, problem_features, synthetic_problems
@@ -11,7 +13,7 @@ from .dispatch import Deployment, classifier_fraction, train_deployment
 from .normalize import NORMALIZATIONS, normalize
 from .pca import PCA
 from .selection import achievable_fraction, evaluate_methods, select_from_dataset
-from .tuner import TuneResult, tune, tune_for_archs
+from .tuner import FleetTuneResult, TuneResult, save_fleet, tune, tune_fleet, tune_for_archs
 
 __all__ = [
     "CLASSIFIERS",
@@ -19,21 +21,29 @@ __all__ = [
     "NORMALIZATIONS",
     "PCA",
     "Deployment",
+    "DeploymentBundle",
     "FlatTree",
+    "FleetTuneResult",
     "TuneResult",
     "TuningDataset",
     "achievable_fraction",
     "build_model_dataset",
+    "canonical_device_name",
     "classifier_fraction",
+    "detect_device",
     "evaluate_methods",
     "harvest_problems",
+    "install_bundle",
     "make_classifier",
     "normalize",
     "problem_features",
+    "resolve_device",
+    "save_fleet",
     "select_configs",
     "select_from_dataset",
     "synthetic_problems",
     "train_deployment",
     "tune",
+    "tune_fleet",
     "tune_for_archs",
 ]

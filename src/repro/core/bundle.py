@@ -1,0 +1,142 @@
+"""Multi-device deployment bundle: one artifact, one Deployment per device.
+
+A single :class:`~repro.core.dispatch.Deployment` is what ships for ONE
+device.  The portability story of the paper needs the library to carry the
+tuned artifacts for *every* target it may land on and route by detected
+hardware — the per-target tuned subsets of the companion study
+(arXiv:2003.06795).  :class:`DeploymentBundle` is that carrier:
+
+  * keyed by canonical device name (``repro.core.devices``);
+  * serialized as a **v3** blob that embeds the existing v2 (or v1)
+    per-device ``Deployment`` blobs verbatim, so single-device tooling keeps
+    understanding the payloads;
+  * :meth:`DeploymentBundle.load` also accepts a plain v1/v2 single-device
+    file and wraps it into a one-entry bundle — every old artifact remains a
+    valid (degenerate) bundle;
+  * :func:`install_bundle` registers each per-device policy with
+    ``repro.kernels.ops`` and activates the one resolved for the detected
+    (or requested) device, degrading to the nearest tuned sibling via
+    :func:`repro.core.devices.resolve_device`.
+
+Format (DESIGN.md §7)::
+
+    {"version": 3, "format": "bundle",
+     "deployments": {"tpu_v5e": {<v2 blob>}, "tpu_v4": {<v2 blob>}, ...},
+     "meta": {...}}
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from .devices import canonical_device_name, detect_device, resolve_device
+from .dispatch import Deployment
+
+BUNDLE_VERSION = 3
+
+
+@dataclasses.dataclass
+class DeploymentBundle:
+    """Versioned pack of per-device deployments (the deploy-anywhere artifact)."""
+
+    deployments: dict[str, Deployment]
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.deployments:
+            raise ValueError("a DeploymentBundle needs at least one deployment")
+        # Keys are canonical device slugs; normalize so lookup and tuning-time
+        # naming can't drift apart ("TPU v4" and "tpu_v4" are the same entry).
+        self.deployments = {
+            canonical_device_name(name): dep for name, dep in self.deployments.items()
+        }
+
+    # -- access --------------------------------------------------------------
+    @property
+    def devices(self) -> list[str]:
+        return sorted(self.deployments)
+
+    def add(self, deployment: Deployment, device: str | None = None) -> None:
+        self.deployments[canonical_device_name(device or deployment.device)] = deployment
+
+    def deployment_for(self, device: str, *, strict: bool = False) -> tuple[Deployment, str]:
+        """(deployment, resolved device name) serving ``device``.
+
+        Exact match first, then the nearest-device fallback order of
+        ``repro.core.devices.resolve_device``; ``strict=True`` raises
+        ``KeyError`` instead of degrading across platform families.
+        """
+        resolved = resolve_device(device, self.devices, strict=strict)
+        if resolved is None:
+            raise KeyError(f"no deployment for device {device!r} in bundle {self.devices}")
+        return self.deployments[resolved], resolved
+
+    # -- persistence ---------------------------------------------------------
+    def to_blob(self, *, tree_format: str = "flat") -> dict:
+        return {
+            "version": BUNDLE_VERSION,
+            "format": "bundle",
+            "deployments": {
+                name: dep.to_blob(tree_format=tree_format)
+                for name, dep in sorted(self.deployments.items())
+            },
+            "meta": self.meta,
+        }
+
+    def save(self, path: str | Path, *, tree_format: str = "flat") -> None:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_blob(tree_format=tree_format), indent=1))
+
+    @staticmethod
+    def from_blob(blob: dict) -> "DeploymentBundle":
+        """Parse a v3 bundle blob — or wrap a v1/v2 single-device blob."""
+        if blob.get("format") == "bundle" or "deployments" in blob:
+            version = int(blob.get("version", BUNDLE_VERSION))
+            if version > BUNDLE_VERSION:
+                raise ValueError(f"bundle version {version} is newer than supported v{BUNDLE_VERSION}")
+            deps = {
+                name: Deployment.from_blob(sub)
+                for name, sub in blob["deployments"].items()
+            }
+            return DeploymentBundle(deployments=deps, meta=blob.get("meta", {}))
+        # v1/v2 single-device file: a degenerate one-entry bundle.
+        dep = Deployment.from_blob(blob)
+        return DeploymentBundle(deployments={dep.device: dep}, meta=dict(dep.meta))
+
+    @staticmethod
+    def load(path: str | Path) -> "DeploymentBundle":
+        return DeploymentBundle.from_blob(json.loads(Path(path).read_text()))
+
+
+def install_bundle(
+    bundle: "DeploymentBundle | str | Path",
+    device: str | None = None,
+    *,
+    strict: bool = False,
+) -> Deployment:
+    """Install the bundle: its policies become the registry, one activates.
+
+    Any previously registered per-device policies are replaced (installing a
+    bundle is authoritative — resolution must agree between the bundle and
+    the registry, so stale entries from an earlier install cannot shadow this
+    bundle's fallback choice).  ``device=None`` detects the host
+    (``REPRO_DEVICE`` override first); an untuned host degrades to the
+    nearest tuned sibling rather than the untuned ``FixedPolicy`` baseline.
+    Returns the activated ``Deployment``; whether a fallback happened is
+    readable from ``ops.device_resolution()`` (the shared ``Deployment``
+    objects are never mutated).
+    """
+    from repro.kernels import ops
+
+    if not isinstance(bundle, DeploymentBundle):
+        bundle = DeploymentBundle.load(bundle)
+    requested = canonical_device_name(device) if device else detect_device()
+    # Resolve (and raise under strict) before touching the live registry.
+    bundle.deployment_for(requested, strict=strict)
+    ops.clear_device_policies()
+    for name, d in bundle.deployments.items():
+        ops.set_kernel_policy_for_device(name, d)
+    resolved = ops.activate_device(requested, strict=strict)
+    return bundle.deployments[resolved]

@@ -83,6 +83,81 @@ def dict_to_tree(blob: dict) -> DecisionTreeClassifier:
     return tree
 
 
+def bundle_to_python(bundle, func_name: str = "select_kernel") -> str:
+    """Emit a whole :class:`DeploymentBundle` as standalone launcher source.
+
+    One nested-if selector per device (``select_kernel_tpu_v5e``, ...), a
+    ``DEVICE_SELECTORS`` table keyed by canonical device name, a ``FALLBACKS``
+    copy of the nearest-device chains, and a dispatching ``select_kernel``
+    that routes by device with the same fallback-order semantics as
+    ``repro.core.devices.resolve_device`` — the multi-target analogue of the
+    paper's launcher embedding, with zero repro imports at use time.
+    """
+    import re
+
+    from .devices import FALLBACKS
+
+    sections: list[str] = []
+    names: dict[str, str] = {}
+    for device in sorted(bundle.deployments):
+        slug = re.sub(r"[^0-9a-zA-Z_]", "_", device)
+        fn = f"{func_name}_{slug}"
+        names[device] = fn
+        sections.append(tree_to_python(bundle.deployments[device].classifier, fn))
+    table = ",\n".join(f"    {d!r}: {fn}" for d, fn in sorted(names.items()))
+    chains = ",\n".join(
+        f"    {d!r}: {tuple(c for c in chain if c in names)!r}"
+        for d, chain in sorted(FALLBACKS.items())
+    )
+    args = ", ".join(FEATURE_NAMES)
+    sections.append(
+        "\n".join(
+            [
+                "import re as _re",
+                "",
+                "DEVICE_SELECTORS = {",
+                table,
+                "}",
+                "",
+                "FALLBACKS = {",
+                chains,
+                "}",
+                "",
+                "def _canon_device(device):",
+                '    """Normalize a raw device_kind string to the canonical slug keys above."""',
+                "    low = str(device).strip().lower()",
+                "    if low in ('cpu', 'host_cpu'):",
+                "        return 'host_cpu'",
+                r"    m = _re.search(r'tpu[\s_-]*v(\d+)[\s_-]*(lite|e|p|i)?', low)",
+                "    if m:",
+                "        variant = {'lite': 'e', 'i': ''}.get(m.group(2) or '', m.group(2) or '')",
+                "        return 'tpu_v' + m.group(1) + variant",
+                r"    return _re.sub(r'[^a-z0-9]+', '_', low).strip('_') or 'unknown'",
+                "",
+                f"def {func_name}(device, {args}):",
+                '    """Route to the deployed selector for this device (nearest-sibling fallback)."""',
+                "    device = _canon_device(device)",
+                "    fn = DEVICE_SELECTORS.get(device)",
+                "    if fn is None:",
+                "        for cand in FALLBACKS.get(device, ()):",
+                "            if cand in DEVICE_SELECTORS:",
+                "                fn = DEVICE_SELECTORS[cand]",
+                "                break",
+                "    if fn is None:",
+                "        fam = device.split('_', 1)[0]",
+                "        for cand in sorted(DEVICE_SELECTORS):",
+                "            if cand.split('_', 1)[0] == fam:",
+                "                fn = DEVICE_SELECTORS[cand]",
+                "                break",
+                "    if fn is None:",
+                "        fn = DEVICE_SELECTORS[sorted(DEVICE_SELECTORS)[0]]",
+                f"    return fn({args})",
+            ]
+        )
+    )
+    return "\n\n".join(sections) + "\n"
+
+
 def tree_to_python(tree: DecisionTreeClassifier, func_name: str = "select_kernel") -> str:
     """Emit the tree as nested-if Python source (the launcher embedding)."""
     lines = [

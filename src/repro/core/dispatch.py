@@ -86,8 +86,8 @@ class Deployment:
         return best
 
     # -- persistence ---------------------------------------------------------
-    def save(self, path: str | Path, *, tree_format: str = "flat") -> None:
-        """Serialize (decision-tree classifiers only, like the paper ships).
+    def to_blob(self, *, tree_format: str = "flat") -> dict:
+        """JSON-ready blob (the per-device payload a bundle embeds verbatim).
 
         ``tree_format="flat"`` (default) emits v2 structure-of-arrays tree
         blobs; ``"nested"`` emits the v1 recursive-dict form for tooling that
@@ -98,9 +98,7 @@ class Deployment:
         if tree_format not in ("flat", "nested"):
             raise ValueError(f"unknown tree_format {tree_format!r}")
         to_blob = tree_to_flat_dict if tree_format == "flat" else tree_to_dict
-        path = Path(path)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        blob = {
+        return {
             "version": 2 if tree_format == "flat" else 1,
             "device": self.device,
             "configs": [c.to_dict() for c in self.configs],
@@ -112,13 +110,18 @@ class Deployment:
             ),
             "meta": self.meta,
         }
-        path.write_text(json.dumps(blob, indent=1))
+
+    def save(self, path: str | Path, *, tree_format: str = "flat") -> None:
+        """Serialize (decision-tree classifiers only, like the paper ships)."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_blob(tree_format=tree_format), indent=1))
 
     @staticmethod
-    def load(path: str | Path) -> "Deployment":
+    def from_blob(blob: dict) -> "Deployment":
+        """Parse a v1/v2 single-device blob (label-validated on the way in)."""
         from .codegen import dict_to_tree
 
-        blob = json.loads(Path(path).read_text())
         atree = blob.get("attention_tree")
         dep = Deployment(
             device=blob["device"],
@@ -135,6 +138,10 @@ class Deployment:
                 dep.attention_tree, len(dep.attention_configs), "attention_tree"
             )
         return dep
+
+    @staticmethod
+    def load(path: str | Path) -> "Deployment":
+        return Deployment.from_blob(json.loads(Path(path).read_text()))
 
 
 def train_deployment(

@@ -43,8 +43,14 @@ def tune(
     seed: int = 0,
     attn_arch_ids: list[str] | None = None,
     n_attn_kernels: int = 4,
+    attn_tuning: tuple | None = None,
 ) -> TuneResult:
-    """Run the full paper pipeline on a benchmark dataset."""
+    """Run the full paper pipeline on a benchmark dataset.
+
+    ``attn_tuning`` optionally supplies a precomputed ``(configs, tree)``
+    attention tuning (``tune_fleet`` shares one across devices instead of
+    recomputing an identical result per device).
+    """
     train, test = dataset.split(test_fraction=test_fraction, seed=seed)
     chosen = select_from_dataset(train, n_kernels, method, normalization, seed=seed)
     deployment = train_deployment(
@@ -61,10 +67,12 @@ def tune(
     )
     # Second kernel family (the paper's future-work direction): the same
     # pipeline prunes + classifies the flash-attention config space.
-    configs, tree = tune_attention(
-        arch_ids=attn_arch_ids, n_kernels=n_attn_kernels, method=method,
-        normalization=normalization, seed=seed,
-    )
+    if attn_tuning is None:
+        attn_tuning = tune_attention(
+            arch_ids=attn_arch_ids, n_kernels=n_attn_kernels, method=method,
+            normalization=normalization, seed=seed,
+        )
+    configs, tree = attn_tuning
     deployment.attention_configs = configs
     deployment.attention_tree = tree
     return TuneResult(
@@ -117,6 +125,7 @@ def tune_for_archs(
     classifier: str = "DecisionTreeA",
     max_problems: int | None = 400,
     seed: int = 0,
+    attn_tuning: tuple | None = None,
 ) -> TuneResult:
     """Tune against the GEMM shapes the assigned architectures will launch."""
     problems = harvest_problems(arch_ids, max_problems=max_problems)
@@ -129,6 +138,7 @@ def tune_for_archs(
         classifier=classifier,
         seed=seed,
         attn_arch_ids=arch_ids,
+        attn_tuning=attn_tuning,
     )
 
 
@@ -138,3 +148,87 @@ def save_result(result: TuneResult, path: str | Path) -> None:
         classifier_fraction=result.classifier_fraction,
     )
     result.deployment.save(path)
+
+
+# ---------------------------------------------------------------------------
+# fleet tuning: several devices, one bundle (the deploy-anywhere artifact)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FleetTuneResult:
+    """Per-device tuning runs packed into one multi-device bundle."""
+
+    bundle: "object"  # DeploymentBundle (forward ref; bundle imports tuner-adjacent code)
+    results: dict[str, TuneResult]
+
+
+def tune_fleet(
+    arch_ids: list[str] | None = None,
+    *,
+    device_names: tuple[str, ...] = ("tpu_v5e", "tpu_v4"),
+    n_kernels: int = 8,
+    method: str = "pca_kmeans",
+    normalization: str = "standard",
+    classifier: str = "DecisionTreeA",
+    max_problems: int | None = 400,
+    cpu_problems: int = 8,
+    seed: int = 0,
+) -> FleetTuneResult:
+    """Tune every device in one run and pack a :class:`DeploymentBundle`.
+
+    Each ``device_name`` gets the full single-device pipeline (``host_cpu``
+    measures this host via ``repro.core.cpubench``; analytic-model devices go
+    through :func:`tune_for_archs`), and the resulting per-device
+    ``Deployment``\\ s become one versioned artifact a serving host installs
+    with ``repro.core.bundle.install_bundle``.
+    """
+    from .bundle import DeploymentBundle
+    from .devices import canonical_device_name
+
+    if not device_names:
+        raise ValueError("tune_fleet needs at least one device name")
+    # The attention tuning is device-independent today (the attn perf model
+    # has a single target): compute it once and share across the fleet.
+    attn_tuning = tune_attention(
+        arch_ids=arch_ids, method=method, normalization=normalization, seed=seed
+    )
+    results: dict[str, TuneResult] = {}
+    for raw_name in device_names:
+        name = canonical_device_name(raw_name)
+        if name in results:
+            continue
+        if name == "host_cpu":
+            from .cpubench import build_cpu_dataset
+            from .cpubench import cpu_problems as cpu_problem_list
+
+            ds = build_cpu_dataset(cpu_problem_list(cpu_problems))
+            res = tune(
+                ds, n_kernels=n_kernels, method=method, normalization=normalization,
+                classifier=classifier, seed=seed, attn_tuning=attn_tuning,
+            )
+        else:
+            res = tune_for_archs(
+                arch_ids, device_name=name, n_kernels=n_kernels, method=method,
+                normalization=normalization, classifier=classifier,
+                max_problems=max_problems, seed=seed, attn_tuning=attn_tuning,
+            )
+        res.deployment.meta.update(
+            oracle_fraction=res.oracle_fraction,
+            classifier_fraction=res.classifier_fraction,
+        )
+        results[name] = res
+    bundle = DeploymentBundle(
+        deployments={name: r.deployment for name, r in results.items()},
+        meta={
+            "devices": sorted(results),
+            "archs": list(arch_ids) if arch_ids else "all",
+            "n_kernels": n_kernels,
+            "method": method,
+            "normalization": normalization,
+            "seed": seed,
+        },
+    )
+    return FleetTuneResult(bundle=bundle, results=results)
+
+
+def save_fleet(result: FleetTuneResult, path: str | Path) -> None:
+    result.bundle.save(path)

@@ -57,6 +57,9 @@ DEFAULT_SHAPE_CACHE_CAP = 1024
 class _State(threading.local):
     def __init__(self):
         self.policy: KernelPolicy | None = None
+        self.device_policies: dict[str, KernelPolicy] = {}
+        self.active_device: str | None = None
+        self.requested_device: str | None = None
         self.use_pallas: bool = False  # CPU host default: XLA dot
         self.interpret: bool = False
         self.log_enabled: bool = False
@@ -72,12 +75,92 @@ _MISS = object()
 
 
 def set_kernel_policy(policy: KernelPolicy | None) -> None:
+    """Install ``policy`` directly (manual single-device path).
+
+    Clears the active-device marker: a manually installed policy is not tied
+    to the registry, so later ``set_kernel_policy_for_device`` calls won't
+    silently replace it.
+    """
     _state.policy = policy
+    _state.active_device = None
+    _state.requested_device = None
     clear_shape_cache()
 
 
 def get_kernel_policy() -> KernelPolicy | None:
     return _state.policy
+
+
+# ---------------------------------------------------------------------------
+# per-device policy registry (the multi-device DeploymentBundle path)
+# ---------------------------------------------------------------------------
+def set_kernel_policy_for_device(device: str, policy: KernelPolicy | None) -> None:
+    """Register (or with ``None``, drop) the policy tuned for one device.
+
+    Registration alone activates nothing; ``activate_device`` picks which
+    registered policy serves this host.  If ``device`` is the currently
+    active one, the live policy is refreshed (and the shape cache cleared).
+    """
+    from repro.core.devices import canonical_device_name
+
+    name = canonical_device_name(device)
+    if policy is None:
+        _state.device_policies.pop(name, None)
+        if name == _state.active_device:
+            # Dropping the live policy deactivates it — a stale marker would
+            # report an active device while dispatch runs unpoliced.
+            _state.policy = None
+            _state.active_device = None
+            _state.requested_device = None
+            clear_shape_cache()
+        return
+    _state.device_policies[name] = policy
+    if name == _state.active_device:
+        _state.policy = policy
+        clear_shape_cache()
+
+
+def device_policies() -> dict[str, KernelPolicy]:
+    """Snapshot of the registered per-device policies (name -> policy)."""
+    return dict(_state.device_policies)
+
+
+def active_device() -> str | None:
+    """Canonical name of the device whose registered policy is live."""
+    return _state.active_device
+
+
+def device_resolution() -> tuple[str | None, str | None]:
+    """(requested, resolved) device names from the last ``activate_device``.
+
+    Differing entries mean this host is untuned and serving a nearest-sibling
+    fallback artifact; ``(None, None)`` means no registry activation is live.
+    """
+    return (_state.requested_device, _state.active_device)
+
+
+def activate_device(device: str | None = None, *, strict: bool = False) -> str:
+    """Make the registered policy for ``device`` the live ``KernelPolicy``.
+
+    ``device=None`` detects the host (``REPRO_DEVICE`` override first).  An
+    unregistered device resolves to the nearest registered sibling via
+    ``repro.core.devices.resolve_device``; ``strict=True`` raises instead of
+    crossing platform families.  Returns the resolved canonical name.
+    """
+    from repro.core.devices import canonical_device_name, detect_device, resolve_device
+
+    requested = canonical_device_name(device) if device is not None else detect_device()
+    resolved = resolve_device(requested, list(_state.device_policies), strict=strict)
+    if resolved is None:
+        raise KeyError(
+            f"no kernel policy registered for device {requested!r} "
+            f"(registered: {sorted(_state.device_policies)})"
+        )
+    _state.policy = _state.device_policies[resolved]
+    _state.active_device = resolved
+    _state.requested_device = requested
+    clear_shape_cache()
+    return resolved
 
 
 def set_pallas_enabled(enabled: bool, *, interpret: bool = False) -> None:
@@ -117,6 +200,21 @@ def clear_selection_log() -> None:
 # ---------------------------------------------------------------------------
 # shape-memoized dispatch (the serving fast path)
 # ---------------------------------------------------------------------------
+def clear_device_policies() -> None:
+    """Drop every registered per-device policy, deactivating the live one.
+
+    A policy that was activated from the registry is uninstalled with it
+    (the marker and the live policy must never disagree); a policy installed
+    manually via ``set_kernel_policy`` is not registry-owned and survives.
+    """
+    _state.device_policies.clear()
+    if _state.active_device is not None:
+        _state.policy = None
+        clear_shape_cache()
+    _state.active_device = None
+    _state.requested_device = None
+
+
 def clear_shape_cache() -> None:
     _state.shape_cache.clear()
     _state.cache_hits = 0
@@ -190,15 +288,19 @@ def matmul(lhs: jax.Array, rhs: jax.Array, *, out_dtype=None, config: MatmulConf
         raise ValueError(f"rhs must be 2-D, got {rhs.shape}")
     *lead, k = lhs.shape
     n = rhs.shape[1]
-    m = 1
-    for d in lead:
-        m *= d
+    # Featurize with the tuning dataset's (m, k, n, batch) convention: the
+    # trailing lead dim is the GEMM M, everything before it is the repeated
+    # batch — a (B, S, D) activation is B GEMMs of (S, D), not one (B*S, D).
+    m = lead[-1] if lead else 1
+    batch = 1
+    for d in lead[:-1]:
+        batch *= d
     if config is None:
-        config = select_matmul_config(m, k, n, 1)
+        config = select_matmul_config(m, k, n, batch)
     if not _state.use_pallas:
         out = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
         return out.astype(out_dtype or lhs.dtype)
-    lhs2 = lhs.reshape(m, k)
+    lhs2 = lhs.reshape(m * batch, k)
     out = matmul_pallas(lhs2, rhs, config or DEFAULT_CONFIG, out_dtype=out_dtype, interpret=_state.interpret)
     return out.reshape(*lead, n)
 

@@ -26,11 +26,20 @@ def main(argv=None) -> None:
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--deployment", default=None)
+    ap.add_argument("--deployment", default=None, help="single-device Deployment json")
+    ap.add_argument("--bundle", default=None,
+                    help="multi-device DeploymentBundle json (auto-installs for this host)")
+    ap.add_argument("--serve-device", default=None,
+                    help="override device name for --bundle resolution (default: detect)")
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch).reduced()
-    if args.deployment:
+    bundle = None
+    if args.bundle:
+        from repro.core.bundle import DeploymentBundle
+
+        bundle = DeploymentBundle.load(args.bundle)
+    elif args.deployment:
         from repro.core.dispatch import Deployment
 
         ops.set_kernel_policy(Deployment.load(args.deployment))
@@ -45,8 +54,11 @@ def main(argv=None) -> None:
         extra["frames"] = jnp.zeros((1, 32, cfg.d_model), jnp.float32)
 
     engine = ServingEngine(
-        model, params, max_batch=args.max_batch, cache_len=args.cache_len, extra_inputs=extra
+        model, params, max_batch=args.max_batch, cache_len=args.cache_len,
+        extra_inputs=extra, bundle=bundle, device=args.serve_device,
     )
+    if bundle is not None:
+        print(f"bundle installed: serving with the {engine.device!r} deployment")
     rng = np.random.default_rng(0)
     reqs = [
         Request(uid=i, prompt=rng.integers(0, cfg.vocab, size=8).astype(np.int32),
@@ -54,11 +66,14 @@ def main(argv=None) -> None:
         for i in range(args.requests)
     ]
     t0 = time.time()
-    engine.run(reqs)
+    status = engine.run(reqs)
     dt = time.time() - t0
     toks = sum(len(r.output) for r in reqs)
     print(f"served {len(reqs)} requests, {toks} tokens, {dt:.2f}s "
           f"({toks / max(dt, 1e-9):.1f} tok/s), {engine.steps} decode steps")
+    if status.exhausted:
+        print(f"WARNING: step budget exhausted with {status.in_flight} in-flight / "
+              f"{status.queued} queued requests unfinished")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.output[:10]}...")
 

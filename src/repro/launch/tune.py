@@ -1,4 +1,4 @@
-"""Tuning CLI: produce a shippable kernel deployment for a device.
+"""Tuning CLI: produce a shippable kernel deployment (or multi-device bundle).
 
 The operator tool for new-hardware bring-up (the paper's zero-developer-
 effort pitch):
@@ -7,9 +7,13 @@ effort pitch):
   python -m repro.launch.tune --device host_cpu --out deploy.json   # measured
   python -m repro.launch.tune --device tpu_v5e --archs granite-8b,glm4-9b
 
-The artifact is consumed by trainers/servers via
-``ops.set_kernel_policy(Deployment.load(path))`` or ``--deployment`` on the
-train/serve launchers.
+Fleet mode packs one Deployment per device into a single v3 bundle any host
+auto-installs for its detected hardware:
+
+  python -m repro.launch.tune --devices tpu_v5e,tpu_v4 --bundle bundle.json
+
+Artifacts are consumed by trainers/servers via ``--deployment`` / ``--bundle``
+launcher flags or ``repro.core.bundle.install_bundle(path)``.
 """
 from __future__ import annotations
 
@@ -18,12 +22,14 @@ import argparse
 from repro.configs import registry
 from repro.core.cluster import CLUSTER_METHODS
 from repro.core.normalize import NORMALIZATIONS
-from repro.core.tuner import save_result, tune, tune_for_archs
+from repro.core.tuner import save_fleet, save_result, tune, tune_fleet, tune_for_archs
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--device", default="tpu_v5e", choices=["tpu_v5e", "tpu_v4", "host_cpu"])
+    ap.add_argument("--devices", default=None,
+                    help="comma-separated device names to tune into one bundle (fleet mode)")
     ap.add_argument("--archs", default=None, help="comma-separated arch ids (default: all)")
     ap.add_argument("--n-kernels", type=int, default=8)
     ap.add_argument("--method", default="pca_kmeans", choices=CLUSTER_METHODS)
@@ -31,14 +37,38 @@ def main(argv=None) -> None:
     ap.add_argument("--classifier", default="DecisionTreeA")
     ap.add_argument("--max-problems", type=int, default=300)
     ap.add_argument("--cpu-problems", type=int, default=24)
-    ap.add_argument("--out", required=True)
+    ap.add_argument("--out", default=None, help="single-device deployment output path")
+    ap.add_argument("--bundle", default=None, help="multi-device bundle output path")
     args = ap.parse_args(argv)
+
+    if not args.out and not args.bundle:
+        ap.error("one of --out / --bundle is required")
+    if args.devices and not args.bundle:
+        ap.error("--devices selects fleet mode and requires --bundle <path>")
 
     archs = args.archs.split(",") if args.archs else None
     if archs:
         for a in archs:
             registry.get(a)  # validate early
 
+    if args.bundle:
+        device_names = tuple(
+            (args.devices or "tpu_v5e,tpu_v4").replace(" ", "").split(",")
+        )
+        fleet = tune_fleet(
+            archs, device_names=device_names, n_kernels=args.n_kernels,
+            method=args.method, normalization=args.normalization,
+            classifier=args.classifier, max_problems=args.max_problems,
+            cpu_problems=args.cpu_problems,
+        )
+        save_fleet(fleet, args.bundle)
+        print(f"bundle ({len(fleet.results)} devices) -> {args.bundle}")
+        for name, res in sorted(fleet.results.items()):
+            print(f"  {name}: oracle {res.oracle_fraction:.1%} / "
+                  f"classifier {res.classifier_fraction:.1%} "
+                  f"({len(res.deployment.configs)} matmul kernels)")
+        if not args.out:
+            return
     if args.device == "host_cpu":
         from repro.core.cpubench import build_cpu_dataset, cpu_problems
 

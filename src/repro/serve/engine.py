@@ -33,6 +33,25 @@ class Request:
     # filled by the engine
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    state: str = "queued"  # queued | active | done | starved
+    truncated_tokens: int = 0  # prompt tokens dropped by sliding-window admit
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStatus:
+    """What ``ServingEngine.run`` actually finished (and what it didn't).
+
+    ``exhausted`` means the step budget ran out with work left: ``in_flight``
+    requests hold slots mid-decode, ``queued`` never got a slot.  Both carry
+    ``done=False`` and a non-``"done"`` per-request ``state`` — checking
+    ``output`` alone cannot distinguish them once prefill has emitted tokens.
+    """
+
+    completed: int
+    in_flight: int
+    queued: int
+    steps: int
+    exhausted: bool
 
 
 def _bucket(n: int, buckets: tuple[int, ...]) -> int:
@@ -52,7 +71,21 @@ class ServingEngine:
         cache_len: int = 256,
         prefill_buckets: tuple[int, ...] = (32, 64, 128),
         extra_inputs: dict | None = None,
+        bundle=None,
+        device: str | None = None,
     ):
+        # A serving host consumes the multi-device artifact directly: install
+        # the Deployment resolved for this host (nearest tuned sibling when
+        # untuned) before the first trace-time kernel selection runs.
+        self.deployment = None
+        self.device = device
+        if bundle is not None:
+            from repro.core.bundle import install_bundle
+
+            self.deployment = install_bundle(bundle, device)
+            from repro.kernels import ops
+
+            self.device = ops.active_device()
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -97,18 +130,29 @@ class ServingEngine:
 
     def _admit(self, req: Request, slot: int) -> None:
         plen = _bucket(len(req.prompt), self.prefill_buckets)
+        tail = np.asarray(req.prompt, dtype=np.int32)
+        if len(tail) > plen:
+            # Sliding-window truncation: a prompt longer than the largest
+            # prefill bucket keeps its most recent plen tokens (causal decode
+            # conditions on the suffix) instead of raising on the left-pad.
+            req.truncated_tokens = len(tail) - plen
+            tail = tail[-plen:]
         prompt = np.zeros(plen, dtype=np.int32)
-        prompt[-len(req.prompt) :] = req.prompt  # left-pad (causal end-aligned)
+        if len(tail):
+            prompt[-len(tail) :] = tail  # left-pad (causal end-aligned)
         batch = {"tokens": jnp.asarray(prompt[None, :])}
         for k, v in self.extra_inputs.items():
-            batch[k] = v[None] if v.ndim == len(v.shape) and v.shape[0] != 1 else v
+            batch[k] = _batch_extra(k, v)
         logits, cache1 = self._prefill_fn(plen)(self.params, batch)
         # Scatter the single-sequence prefill cache into this slot.
         self.cache = jax.tree.map(
-            lambda full, one: _scatter_slot(full, one, slot), self.cache, cache1
+            lambda full, one: _scatter_slot(full, one, slot, self.max_batch),
+            self.cache,
+            cache1,
         )
         first = int(jnp.argmax(logits[0, -1]))
         req.output.append(first)
+        req.state = "active"
         self.slots[slot] = req
         self.positions[slot] = plen
 
@@ -134,12 +178,20 @@ class ServingEngine:
                 or self.positions[i] >= self.cache_len - 1
             ):
                 r.done = True
+                r.state = "done"
                 self.slots[i] = None
         self.steps += 1
 
     # -- public ---------------------------------------------------------------
-    def run(self, requests: list[Request], *, max_steps: int = 10_000) -> list[Request]:
-        """Serve a request list to completion with continuous batching."""
+    def run(self, requests: list[Request], *, max_steps: int = 10_000) -> EngineStatus:
+        """Serve a request list with continuous batching until done or budget.
+
+        Returns an :class:`EngineStatus`.  When the ``max_steps`` budget is
+        exhausted, unfinished requests are NOT silently returned as results:
+        in-flight ones keep ``state="active"`` and queued ones are marked
+        ``state="starved"`` (both stay ``done=False``), so callers can retry
+        or surface them even though partial ``output`` tokens exist.
+        """
         queue = list(requests)
         while (queue or any(s is not None for s in self.slots)) and self.steps < max_steps:
             while queue:
@@ -149,21 +201,50 @@ class ServingEngine:
                 self._admit(queue.pop(0), slot)
             if any(s is not None for s in self.slots):
                 self._decode_all()
-        return requests
+        exhausted = bool(queue or any(s is not None for s in self.slots))
+        for r in queue:
+            r.state = "starved"
+        return EngineStatus(
+            completed=sum(r.done for r in requests),
+            in_flight=sum(s is not None for s in self.slots),
+            queued=len(queue),
+            steps=self.steps,
+            exhausted=exhausted,
+        )
 
 
-def _scatter_slot(full: jax.Array, one: jax.Array, slot: int) -> jax.Array:
+def _batch_extra(key: str, v) -> jax.Array:
+    """Shape one extra input for the batch-1 prefill, explicitly per rank.
+
+    Extras come in two layouts: already batched with a leading batch-1 axis
+    (``(1, n, d)``) which pass through, or per-sequence without a batch axis
+    (``(n, d)``, or a scalar) which gain one.  A leading axis > 1 that is not
+    batch-1 is treated as per-sequence data; an explicit batch > 1 cannot be
+    meant for a single-sequence prefill, so there is nothing to guess.
+    """
+    v = jnp.asarray(v)
+    if v.ndim == 0:
+        return v[None]  # scalar -> (1,)
+    if v.shape[0] == 1:
+        return v  # already batched (batch-1 leading axis)
+    return v[None]  # per-sequence -> add the batch axis
+
+
+def _scatter_slot(full: jax.Array, one: jax.Array, slot: int, max_batch: int) -> jax.Array:
     """Write a batch-1 cache entry into batch slot ``slot`` of the pool.
 
     Cache leaves carry batch either at axis 0 (B, ...) or axis 1 (L, B, ...);
-    disambiguate by matching the batch-1 axis of ``one``.
+    the batch axis is the one sized ``max_batch`` in the pool and 1 in the
+    prefill output.  Matching against the *pool size* (not shape inequality)
+    keeps the write live when ``max_batch == 1``, where pool and prefill
+    shapes coincide and an inequality guard silently drops the cache.
     """
     if one.ndim != full.ndim:
         raise ValueError(f"cache rank mismatch {one.shape} vs {full.shape}")
     for axis in (0, 1):
-        if one.ndim > axis and one.shape[axis] == 1 and full.shape[axis] != one.shape[axis]:
+        if one.ndim > axis and one.shape[axis] == 1 and full.shape[axis] == max_batch:
             idx = [slice(None)] * full.ndim
             idx[axis] = slice(slot, slot + 1)
             return full.at[tuple(idx)].set(one)
-    # replicated leaf (e.g. shared encoder memory with matching batch): keep.
+    # replicated leaf (e.g. shared encoder memory broadcast across slots): keep.
     return full

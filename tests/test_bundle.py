@@ -1,0 +1,269 @@
+"""Multi-device DeploymentBundle: detection, fallback, round-trip, install."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.bundle import DeploymentBundle, install_bundle
+from repro.core.codegen import bundle_to_python
+from repro.core.dataset import build_model_dataset, synthetic_problems
+from repro.core.devices import (
+    DEVICE_ENV_VAR,
+    canonical_device_name,
+    detect_device,
+    resolve_device,
+)
+from repro.core.dispatch import Deployment, train_deployment
+from repro.core.selection import select_from_dataset
+from repro.core.tuner import save_fleet, tune_fleet
+from repro.kernels import ops
+
+
+@pytest.fixture(autouse=True)
+def _clean_policy():
+    yield
+    ops.clear_device_policies()
+    ops.set_kernel_policy(None)
+
+
+def _mini_deployment(device_name: str, n_kernels: int = 5, seed: int = 0) -> Deployment:
+    ds = build_model_dataset(synthetic_problems(60, seed=seed), device_name=device_name)
+    tr, _ = ds.split()
+    chosen = select_from_dataset(tr, n_kernels, "kmeans", "standard", seed=seed)
+    return train_deployment(tr, chosen, "DecisionTreeB")
+
+
+@pytest.fixture(scope="module")
+def bundle2() -> DeploymentBundle:
+    return DeploymentBundle(
+        {
+            "tpu_v5e": _mini_deployment("tpu_v5e"),
+            "tpu_v4": _mini_deployment("tpu_v4", n_kernels=4, seed=1),
+        },
+        meta={"archs": "synthetic"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# device canonicalization + detection
+# ---------------------------------------------------------------------------
+def test_canonical_device_name():
+    assert canonical_device_name("TPU v5 lite") == "tpu_v5e"
+    assert canonical_device_name("TPU v5e") == "tpu_v5e"
+    assert canonical_device_name("TPU v4") == "tpu_v4"
+    assert canonical_device_name("TPU v4i") == "tpu_v4"
+    assert canonical_device_name("TPU v5p") == "tpu_v5p"
+    assert canonical_device_name("cpu") == "host_cpu"
+    assert canonical_device_name("", "cpu") == "host_cpu"
+    assert canonical_device_name("NVIDIA H100", "gpu") == "gpu_nvidia_h100"
+    # canonical slugs are fixed points
+    for name in ("tpu_v5e", "tpu_v4", "host_cpu"):
+        assert canonical_device_name(name) == name
+
+
+def test_detect_device_env_override(monkeypatch):
+    monkeypatch.setenv(DEVICE_ENV_VAR, "TPU v4")
+    assert detect_device() == "tpu_v4"
+    monkeypatch.delenv(DEVICE_ENV_VAR)
+    # this CI/container host has no accelerator
+    assert detect_device() == "host_cpu"
+
+
+def test_resolve_device_order():
+    avail = ["tpu_v5e", "tpu_v4", "host_cpu"]
+    assert resolve_device("tpu_v4", avail) == "tpu_v4"  # exact
+    assert resolve_device("tpu_v5p", avail) == "tpu_v4"  # fallback chain
+    assert resolve_device("tpu_v7", ["tpu_v5e", "host_cpu"]) == "tpu_v5e"  # family
+    assert resolve_device("gpu_h100", ["tpu_v4"]) == "tpu_v4"  # last resort
+    assert resolve_device("gpu_h100", []) is None
+    with pytest.raises(KeyError):
+        resolve_device("gpu_h100", ["tpu_v4"], strict=True)
+
+
+# ---------------------------------------------------------------------------
+# bundle round-trip + back-compat
+# ---------------------------------------------------------------------------
+def test_bundle_roundtrip_two_devices(tmp_path, bundle2):
+    path = tmp_path / "bundle.json"
+    bundle2.save(path)
+    blob = json.loads(path.read_text())
+    assert blob["version"] == 3 and blob["format"] == "bundle"
+    assert blob["deployments"]["tpu_v5e"]["version"] == 2  # embeds v2 blobs
+    back = DeploymentBundle.load(path)
+    assert back.devices == ["tpu_v4", "tpu_v5e"]
+    for name in back.devices:
+        a, b = back.deployments[name], bundle2.deployments[name]
+        assert a.configs == b.configs
+        for p in [(64, 256, 512, 1), (1, 4096, 1024, 1), (2048, 2048, 2048, 8)]:
+            assert a.select_matmul(*p) == b.select_matmul(*p)
+    # the two devices genuinely carry different tuned artifacts
+    assert back.deployments["tpu_v4"].configs != back.deployments["tpu_v5e"].configs
+
+
+def test_bundle_loads_single_device_files(tmp_path, bundle2):
+    """v1 and v2 single-device artifacts are degenerate one-entry bundles."""
+    dep = bundle2.deployments["tpu_v5e"]
+    for fmt in ("flat", "nested"):  # v2 and v1 payloads
+        p = tmp_path / f"dep_{fmt}.json"
+        dep.save(p, tree_format=fmt)
+        wrapped = DeploymentBundle.load(p)
+        assert wrapped.devices == ["tpu_v5e"]
+        assert wrapped.deployments["tpu_v5e"].configs == dep.configs
+
+
+def test_bundle_rejects_future_version(bundle2):
+    blob = bundle2.to_blob()
+    blob["version"] = 99
+    with pytest.raises(ValueError, match="newer than supported"):
+        DeploymentBundle.from_blob(blob)
+
+
+def test_bundle_normalizes_device_keys():
+    dep = _mini_deployment("tpu_v5e")
+    b = DeploymentBundle({"TPU v5 lite": dep})
+    assert b.devices == ["tpu_v5e"]
+
+
+# ---------------------------------------------------------------------------
+# install + per-device ops registry
+# ---------------------------------------------------------------------------
+def test_install_bundle_picks_detected_device(monkeypatch, bundle2):
+    monkeypatch.setenv(DEVICE_ENV_VAR, "tpu_v4")
+    dep = install_bundle(bundle2)
+    assert dep is bundle2.deployments["tpu_v4"]
+    assert ops.active_device() == "tpu_v4"
+    assert ops.get_kernel_policy() is dep
+    assert set(ops.device_policies()) == {"tpu_v4", "tpu_v5e"}
+
+
+def test_install_bundle_untuned_host_falls_back(monkeypatch, bundle2):
+    """An untuned v5p host degrades to its nearest tuned sibling (tpu_v4)."""
+    monkeypatch.setenv(DEVICE_ENV_VAR, "tpu_v5p")
+    dep = install_bundle(bundle2)
+    assert dep is bundle2.deployments["tpu_v4"]
+    assert ops.active_device() == "tpu_v4"
+    assert ops.device_resolution() == ("tpu_v5p", "tpu_v4")
+    assert "fallback_for" not in dep.meta  # shared artifacts are not mutated
+    # the selections served are the tuned sibling's, not FixedPolicy defaults
+    cfg = ops.select_matmul_config(512, 784, 512, 16)
+    assert cfg in dep.configs
+
+
+def test_install_bundle_replaces_stale_registrations(monkeypatch, bundle2):
+    """A prior install's policies must not shadow this bundle's resolution."""
+    stale = _mini_deployment("tpu_v5e", n_kernels=3, seed=7)
+    ops.set_kernel_policy_for_device("tpu_v5p", stale)  # from an earlier install
+    monkeypatch.setenv(DEVICE_ENV_VAR, "tpu_v5p")
+    dep = install_bundle(bundle2)  # bundle2 has no tpu_v5p entry
+    # resolution happened within the bundle: fallback to tpu_v4, not stale
+    assert dep is bundle2.deployments["tpu_v4"]
+    assert ops.get_kernel_policy() is dep
+    assert ops.device_resolution() == ("tpu_v5p", "tpu_v4")
+    assert set(ops.device_policies()) == {"tpu_v4", "tpu_v5e"}
+
+
+def test_clear_device_policies_deactivates_live_policy(monkeypatch, bundle2):
+    monkeypatch.setenv(DEVICE_ENV_VAR, "tpu_v5e")
+    install_bundle(bundle2)
+    assert ops.get_kernel_policy() is not None
+    ops.clear_device_policies()
+    # the registry-owned live policy is uninstalled with the registry
+    assert ops.get_kernel_policy() is None and ops.active_device() is None
+    # a manual (non-registry) install survives a registry clear
+    manual = bundle2.deployments["tpu_v4"]
+    ops.set_kernel_policy(manual)
+    ops.clear_device_policies()
+    assert ops.get_kernel_policy() is manual
+
+
+def test_install_bundle_strict_raises(monkeypatch, bundle2):
+    monkeypatch.setenv(DEVICE_ENV_VAR, "gpu_h100")
+    with pytest.raises(KeyError):
+        install_bundle(bundle2, strict=True)
+    # non-strict still serves *something* tuned
+    dep = install_bundle(bundle2)
+    assert dep in bundle2.deployments.values()
+
+
+def test_ops_device_registry_semantics(bundle2):
+    v5e = bundle2.deployments["tpu_v5e"]
+    v4 = bundle2.deployments["tpu_v4"]
+    ops.set_kernel_policy_for_device("tpu_v5e", v5e)
+    ops.set_kernel_policy_for_device("tpu_v4", v4)
+    assert ops.get_kernel_policy() is None  # registration does not activate
+    assert ops.activate_device("tpu_v5e") == "tpu_v5e"
+    assert ops.get_kernel_policy() is v5e
+    # re-registering the active device refreshes the live policy
+    ops.set_kernel_policy_for_device("tpu_v5e", v4)
+    assert ops.get_kernel_policy() is v4
+    # dropping the live device's policy deactivates it — no stale marker
+    ops.set_kernel_policy_for_device("tpu_v5e", None)
+    assert ops.active_device() is None and ops.get_kernel_policy() is None
+    assert ops.device_resolution() == (None, None)
+    ops.set_kernel_policy_for_device("tpu_v5e", v5e)
+    ops.activate_device("tpu_v5e")
+    # a manual single-device install detaches from the registry
+    ops.set_kernel_policy(v5e)
+    assert ops.active_device() is None
+    ops.clear_device_policies()
+    with pytest.raises(KeyError):
+        ops.activate_device("tpu_v5e")
+
+
+def test_serving_engine_consumes_bundle(monkeypatch, bundle2):
+    from test_serve_engine import ToyModel
+
+    from repro.serve.engine import Request, ServingEngine
+
+    monkeypatch.setenv(DEVICE_ENV_VAR, "tpu_v5e")
+    eng = ServingEngine(ToyModel(), params={}, max_batch=1, cache_len=32,
+                        prefill_buckets=(8,), bundle=bundle2)
+    assert eng.device == "tpu_v5e"
+    assert eng.deployment is bundle2.deployments["tpu_v5e"]
+    assert ops.get_kernel_policy() is eng.deployment
+    req = Request(uid=0, prompt=np.array([1, 2, 3], dtype=np.int32), max_new_tokens=2)
+    status = eng.run([req])
+    assert status.completed == 1
+
+
+# ---------------------------------------------------------------------------
+# fleet tuning
+# ---------------------------------------------------------------------------
+def test_tune_fleet_two_devices(tmp_path):
+    fleet = tune_fleet(["granite-8b"], device_names=("tpu_v5e", "tpu_v4"),
+                       n_kernels=4, max_problems=40)
+    assert sorted(fleet.results) == ["tpu_v4", "tpu_v5e"]
+    for name, res in fleet.results.items():
+        assert res.oracle_fraction > 0.7
+        assert fleet.bundle.deployments[name] is res.deployment
+        assert res.deployment.meta["oracle_fraction"] == res.oracle_fraction
+    path = tmp_path / "fleet.json"
+    save_fleet(fleet, path)
+    back = DeploymentBundle.load(path)
+    assert back.devices == ["tpu_v4", "tpu_v5e"]
+    assert back.meta["archs"] == ["granite-8b"]
+    dep, resolved = back.deployment_for("tpu_v5e")
+    assert resolved == "tpu_v5e" and len(dep.configs) == 4
+
+
+# ---------------------------------------------------------------------------
+# codegen
+# ---------------------------------------------------------------------------
+def test_bundle_to_python_routes_by_device(bundle2):
+    src = bundle_to_python(bundle2)
+    ns = {}
+    exec(src, ns)  # noqa: S102 — generated launcher code, the paper's embedding
+    assert set(ns["DEVICE_SELECTORS"]) == {"tpu_v4", "tpu_v5e"}
+    feats = build_model_dataset(synthetic_problems(30)).features
+    for device in ("tpu_v5e", "tpu_v4"):
+        want = list(bundle2.deployments[device].classifier.predict(feats))
+        got = [ns["select_kernel"](device, *row) for row in feats]
+        assert got == want
+    # untuned device routes through the baked-in fallback chain
+    want = list(bundle2.deployments["tpu_v4"].classifier.predict(feats))
+    got = [ns["select_kernel"]("tpu_v5p", *row) for row in feats]
+    assert got == want
+    # raw jax device_kind strings canonicalize inside the generated launcher
+    row = feats[0]
+    assert ns["select_kernel"]("TPU v4", *row) == ns["select_kernel"]("tpu_v4", *row)
+    assert ns["select_kernel"]("TPU v5 lite", *row) == ns["select_kernel"]("tpu_v5e", *row)

@@ -12,6 +12,7 @@ from repro.kernels import ops
 def _clean_policy():
     ops.set_selection_logging(True)
     yield
+    ops.clear_device_policies()
     ops.set_kernel_policy(None)
     ops.set_selection_logging(False)
     ops.clear_selection_log()
@@ -63,6 +64,30 @@ def test_serve_cli(tmp_path, capsys):
                 "--max-batch", "2", "--cache-len", "64"])
     out = capsys.readouterr().out
     assert "served 3 requests" in out
+
+
+def test_tune_cli_bundle_then_serve_cli(tmp_path, capsys, monkeypatch):
+    """Fleet-tune a two-device bundle, then serve from it on a chosen device."""
+    from repro.core.bundle import DeploymentBundle
+    from repro.launch.serve import main as serve_main
+    from repro.launch.tune import main as tune_main
+
+    out = tmp_path / "bundle.json"
+    tune_main(["--devices", "tpu_v5e,tpu_v4", "--archs", "granite-8b",
+               "--n-kernels", "4", "--max-problems", "40", "--bundle", str(out)])
+    bundle = DeploymentBundle.load(out)
+    assert bundle.devices == ["tpu_v4", "tpu_v5e"]
+    capsys.readouterr()
+
+    serve_main(["--arch", "granite-8b", "--requests", "2", "--max-new-tokens", "4",
+                "--max-batch", "2", "--cache-len", "64",
+                "--bundle", str(out), "--serve-device", "tpu_v4"])
+    printed = capsys.readouterr().out
+    assert "serving with the 'tpu_v4' deployment" in printed
+    assert "served 2 requests" in printed
+    assert ops.active_device() == "tpu_v4"
+    # the serving traces consulted the bundle's tuned policy
+    assert any(op == "matmul" for op, _, _ in ops.selection_log())
 
 
 def test_serve_engine_with_kv_quant():

@@ -1,0 +1,191 @@
+"""Serving-engine regression tests: slot scatter, extras, truncation, starvation.
+
+A deterministic toy model (echo+1 language model with an inspectable cache)
+isolates the engine's bookkeeping from real model math; one real-model test
+pins the max_batch=1 prefill-cache regression end to end.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import EngineStatus, Request, ServingEngine, _scatter_slot
+
+
+class ToyModel:
+    """Echo+1 LM: next token = (last token + 1) % vocab; cache records tokens.
+
+    Cache has both batch-leading ("k": (B, L)) and layer-leading
+    ("mem": (2, B, 4)) leaves, matching the real models' two layouts.
+    """
+
+    vocab = 17
+
+    def __init__(self):
+        self.seen_extras: dict[str, tuple] = {}
+
+    def init_cache(self, b, cache_len):
+        return {
+            "k": jnp.zeros((b, cache_len), jnp.float32),
+            "mem": jnp.zeros((2, b, 4), jnp.float32),
+        }
+
+    def prefill(self, params, batch, cache_len):
+        tokens = batch["tokens"]
+        for k, v in batch.items():
+            if k != "tokens":
+                self.seen_extras[k] = tuple(v.shape)
+        b, s = tokens.shape
+        cache = self.init_cache(b, cache_len)
+        cache["k"] = cache["k"].at[:, :s].set(tokens.astype(jnp.float32))
+        cache["mem"] = cache["mem"] + 1.0
+        logits = jax.nn.one_hot((tokens[:, -1:] + 1) % self.vocab, self.vocab)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, positions):
+        b = tokens.shape[0]
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[jnp.arange(b), positions].set(
+            tokens[:, 0].astype(jnp.float32)
+        )
+        logits = jax.nn.one_hot((tokens + 1) % self.vocab, self.vocab)
+        return logits, cache
+
+
+def _engine(**kw):
+    kw.setdefault("max_batch", 1)
+    kw.setdefault("cache_len", 32)
+    kw.setdefault("prefill_buckets", (8, 16))
+    model = ToyModel()
+    return ServingEngine(model, params={}, **kw), model
+
+
+# ---------------------------------------------------------------------------
+# _scatter_slot
+# ---------------------------------------------------------------------------
+def test_scatter_slot_writes_when_pool_is_batch_one():
+    """max_batch == 1: pool and prefill shapes coincide; the write must land."""
+    full = jnp.zeros((1, 8))
+    one = jnp.arange(8.0).reshape(1, 8)
+    out = _scatter_slot(full, one, slot=0, max_batch=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(one))
+    # layer-leading (L, B, ...) layout too
+    full2 = jnp.zeros((2, 1, 4))
+    one2 = jnp.ones((2, 1, 4))
+    out2 = _scatter_slot(full2, one2, slot=0, max_batch=1)
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(one2))
+
+
+def test_scatter_slot_multi_batch_and_replicated():
+    full = jnp.zeros((4, 6))
+    one = jnp.ones((1, 6))
+    out = np.asarray(_scatter_slot(full, one, slot=2, max_batch=4))
+    assert out[2].sum() == 6 and out[[0, 1, 3]].sum() == 0
+    # replicated leaf (no batch-1 axis in the prefill output): kept as-is
+    rep_full = jnp.full((3, 5), 7.0)
+    rep_one = jnp.zeros((3, 5))
+    out = _scatter_slot(rep_full, rep_one, slot=1, max_batch=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(rep_full))
+
+
+def test_prefill_cache_lands_in_slot_when_max_batch_is_one():
+    """Regression: the admit write used to be silently dropped at max_batch=1."""
+    eng, _ = _engine(max_batch=1)
+    prompt = np.array([3, 1, 4, 1, 5], dtype=np.int32)
+    eng._admit(Request(uid=0, prompt=prompt), slot=0)
+    got = np.asarray(eng.cache["k"])[0, :8]
+    want = np.zeros(8)
+    want[-5:] = prompt  # left-padded into the 8-bucket
+    np.testing.assert_array_equal(got, want)
+    assert np.asarray(eng.cache["mem"]).sum() > 0  # layer-leading leaf written too
+
+
+def test_max_batch_one_matches_larger_pool_real_model():
+    """Same request must decode identically in a 1-slot and a 2-slot pool."""
+    from repro.configs import registry
+    from repro.models.model import build_model
+
+    cfg = registry.get("granite-8b").reduced()
+    model = build_model(cfg, dtype=jnp.float32, param_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    outputs = []
+    for max_batch in (1, 2):
+        eng = ServingEngine(model, params, max_batch=max_batch, cache_len=64)
+        req = Request(uid=0, prompt=prompt.copy(), max_new_tokens=6)
+        status = eng.run([req])
+        assert status.completed == 1 and req.done
+        outputs.append(req.output)
+    assert outputs[0] == outputs[1]
+
+
+# ---------------------------------------------------------------------------
+# extra inputs
+# ---------------------------------------------------------------------------
+def test_admit_extras_batched_and_unbatched():
+    extras = {
+        "batched": jnp.ones((1, 5, 3)),   # leading batch-1 axis: pass through
+        "unbatched": jnp.ones((5, 3)),    # per-sequence: gains the batch axis
+        "scalar": jnp.asarray(2.0),       # scalar: becomes (1,)
+    }
+    eng, model = _engine(extra_inputs=extras)
+    eng._admit(Request(uid=0, prompt=np.array([1, 2], dtype=np.int32)), slot=0)
+    assert model.seen_extras["batched"] == (1, 5, 3)
+    assert model.seen_extras["unbatched"] == (1, 5, 3)
+    assert model.seen_extras["scalar"] == (1,)
+
+
+# ---------------------------------------------------------------------------
+# over-long prompts
+# ---------------------------------------------------------------------------
+def test_overlong_prompt_truncates_sliding_window():
+    eng, _ = _engine()  # largest bucket = 16
+    prompt = np.arange(1, 41, dtype=np.int32)  # 40 tokens, no zeros
+    req = Request(uid=0, prompt=prompt, max_new_tokens=2)
+    status = eng.run([req])  # must not raise
+    assert status.completed == 1 and req.done
+    assert req.truncated_tokens == 40 - 16
+    # the last 16 prompt tokens were prefilled (sliding window keeps the tail)
+    np.testing.assert_array_equal(np.asarray(eng.cache["k"])[0, :16], prompt[-16:])
+    # echo+1 model: first generated token continues from the *last* prompt token
+    assert req.output[0] == (int(prompt[-1]) + 1) % ToyModel.vocab
+
+
+def test_fitting_prompt_not_marked_truncated():
+    eng, _ = _engine()
+    req = Request(uid=0, prompt=np.array([1, 2, 3], dtype=np.int32), max_new_tokens=2)
+    eng.run([req])
+    assert req.truncated_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# starvation / step budget
+# ---------------------------------------------------------------------------
+def test_run_marks_starved_and_in_flight_on_budget_exhaustion():
+    eng, _ = _engine(max_batch=1)
+    reqs = [
+        Request(uid=i, prompt=np.array([1, 2], dtype=np.int32), max_new_tokens=50)
+        for i in range(3)
+    ]
+    status = eng.run(reqs, max_steps=3)
+    assert isinstance(status, EngineStatus) and status.exhausted
+    assert status.completed == 0 and status.in_flight == 1 and status.queued == 2
+    # the in-flight request has partial output but is NOT a completed result
+    assert reqs[0].state == "active" and not reqs[0].done and reqs[0].output
+    # queued requests are distinguishable from both active and done
+    assert all(r.state == "starved" and not r.done for r in reqs[1:])
+
+
+def test_run_completion_status():
+    eng, _ = _engine(max_batch=1)
+    reqs = [
+        Request(uid=i, prompt=np.array([1, 2, 3], dtype=np.int32), max_new_tokens=3)
+        for i in range(2)
+    ]
+    status = eng.run(reqs)
+    assert not status.exhausted
+    assert status.completed == 2 and status.in_flight == 0 and status.queued == 0
+    assert all(r.done and r.state == "done" for r in reqs)
+    # echo+1 chain: each new token is prev+1
+    for r in reqs:
+        assert r.output == [4, 5, 6]

@@ -177,7 +177,9 @@ def test_ops_matmul_uses_policy():
         assert out.shape == (4, 64, 256)
         log = ops.selection_log()
         assert log and log[0][0] == "matmul"
-        assert log[0][1] == (256, 128, 256, 1)
+        # 3-D lhs featurizes with its real leading batch — the tuning
+        # dataset's (m, k, n, batch) convention, not a flattened (256, ..., 1).
+        assert log[0][1] == (64, 128, 256, 4)
         assert isinstance(log[0][2], MatmulConfig)
         assert log[0][2] in res.deployment.configs
         # the second identical-shape dispatch is a shape-cache hit
@@ -186,6 +188,26 @@ def test_ops_matmul_uses_policy():
         stats1 = ops.shape_cache_stats()
         assert stats1["hits"] == stats0["hits"] + 1
         assert stats1["misses"] == stats0["misses"]
+    finally:
+        ops.set_kernel_policy(None)
+        ops.set_selection_logging(False)
+        ops.clear_selection_log()
+
+
+def test_ops_matmul_batch_featurization():
+    """2-D -> batch 1; 3-D -> leading batch; 4-D -> product of lead dims."""
+    ds = build_model_dataset(synthetic_problems(60))
+    res = tune(ds, n_kernels=5)
+    ops.set_kernel_policy(res.deployment)
+    ops.set_selection_logging(True)
+    ops.clear_selection_log()
+    try:
+        b = jnp.ones((32, 64))
+        ops.matmul(jnp.ones((16, 32)), b)
+        ops.matmul(jnp.ones((8, 16, 32)), b)
+        ops.matmul(jnp.ones((2, 3, 16, 32)), b)
+        problems = [p for op, p, _ in ops.selection_log() if op == "matmul"]
+        assert problems == [(16, 32, 64, 1), (16, 32, 64, 8), (16, 32, 64, 6)]
     finally:
         ops.set_kernel_policy(None)
         ops.set_selection_logging(False)
