@@ -1,0 +1,183 @@
+"""Continuous-tuning microbenchmark: hot-swap latency + retune economics.
+
+Tracks the two costs that make the runtime loop (DESIGN.md §8) viable:
+
+  * **swap** — policy hot-swap latency: `ops.set_kernel_policy_for_device`
+    on the live device plus the first post-swap selection (the epoch resync
+    that rebuilds the dispatch fast path), vs a full `install_bundle`;
+  * **retune vs full tune** — `retune.incremental_retune` (bucket-level
+    dataset, warm-started clustering, weighted refit) vs rerunning the whole
+    `tuner.tune` pipeline on the union workload;
+  * **availability** — dispatch throughput while a background thread swaps
+    the policy continuously (zero-downtime check: every selection succeeds).
+
+Run:  PYTHONPATH=src python benchmarks/bench_retune.py [--smoke] [--json out]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+from repro.core import retune
+from repro.core.bundle import DeploymentBundle, install_bundle
+from repro.core.dataset import build_model_dataset, synthetic_problems
+from repro.core.tuner import tune
+from repro.kernels import ops
+
+DEVICE = "tpu_v5e"
+
+
+def _median_of(fn, reps: int) -> float:
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _shifted_traffic(rng, n: int) -> list[tuple]:
+    """Decode-heavy deep-k problems, disjoint from the synthetic tuning mix."""
+    out = []
+    for _ in range(n):
+        m = int(rng.choice([1, 2, 4]))
+        k = int(rng.choice([8192, 16384]))
+        n_ = int(rng.choice([1024, 2048, 4096]))
+        out.append((m, k, n_, 1))
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    ap.add_argument("--json", default=None, help="write results to this path")
+    args = ap.parse_args(argv)
+
+    n_problems = 60 if args.smoke else 200
+    n_traffic = 150 if args.smoke else 1_000
+    reps = 3 if args.smoke else 9
+
+    ds = build_model_dataset(synthetic_problems(n_problems), device_name=DEVICE)
+    res = tune(ds, n_kernels=8)
+    dep = res.deployment
+    print(f"initial deployment: {len(dep.configs)} kernels from {n_problems} problems")
+
+    # -- drive shifted traffic through the dispatch layer --------------------
+    ops.set_kernel_policy_for_device(DEVICE, dep)
+    ops.activate_device(DEVICE)
+    ops.set_selection_logging(True, cap=8192)
+    ops.clear_selection_log()
+    rng = np.random.default_rng(0)
+    traffic = _shifted_traffic(rng, n_traffic)
+    for p in traffic:
+        ops.select_matmul_config(*p)
+    snap = retune.TelemetrySnapshot.from_selection_log(ops.selection_log())
+    report = retune.detect_drift(snap, dep)
+    print(f"drift {report.score:.3f} (unseen {report.unseen_fraction:.1%}), "
+          f"{len(report.drifted_buckets)} drifted buckets / {snap.n_events} events")
+
+    # -- retune vs full tune -------------------------------------------------
+    t_retune = _median_of(
+        lambda: retune.incremental_retune(dep, snap, report=report), reps
+    )
+    union = sorted(set(ds.problems) | set(traffic))
+    t_full = _median_of(
+        lambda: tune(build_model_dataset(union, device_name=DEVICE), n_kernels=8), reps
+    )
+    result = retune.incremental_retune(dep, snap, report=report)
+    new_dep = result.deployment
+    retune_speedup = t_full / t_retune
+    print(f"tune  full {t_full * 1e3:8.1f} ms   incremental {t_retune * 1e3:8.1f} ms   "
+          f"speedup {retune_speedup:6.1f}x   "
+          f"({result.n_problems} bucket problems vs {len(union)} union problems)")
+
+    # -- hot-swap latency ----------------------------------------------------
+    probe = traffic[0]
+    deps = [dep, new_dep]
+    state = {"i": 0}
+
+    def swap_only():
+        state["i"] ^= 1
+        ops.set_kernel_policy_for_device(DEVICE, deps[state["i"]])
+
+    def swap_and_select():
+        swap_only()
+        ops.select_matmul_config(*probe)  # first post-swap selection (resync)
+
+    t_swap_only = _median_of(swap_only, max(reps, 5))
+    t_swap = _median_of(swap_and_select, max(reps, 5))
+    bundle = DeploymentBundle({DEVICE: dep})
+
+    def install_and_select():
+        install_bundle(bundle, DEVICE)
+        ops.select_matmul_config(*probe)
+
+    t_install = _median_of(install_and_select, max(reps, 5))
+    print(f"swap  registry {t_swap_only * 1e6:6.0f} us   +first-selection {t_swap * 1e6:6.0f} us   "
+          f"install_bundle+selection {t_install * 1e6:6.0f} us")
+    # re-pin the registry state install_bundle replaced
+    ops.set_kernel_policy_for_device(DEVICE, dep)
+    ops.activate_device(DEVICE)
+
+    # -- availability under continuous swapping ------------------------------
+    n_sel = 2_000 if args.smoke else 20_000
+    stop = threading.Event()
+    swaps = {"n": 0}
+
+    def swapper():
+        i = 0
+        while not stop.is_set():
+            i ^= 1
+            ops.set_kernel_policy_for_device(DEVICE, deps[i])
+            swaps["n"] += 1
+
+    def dispatch_loop():
+        for j in range(n_sel):
+            cfg = ops.select_matmul_config(*traffic[j % len(traffic)])
+            assert cfg is not None  # never unpoliced mid-swap
+
+    t_quiet = _median_of(dispatch_loop, 1)
+    th = threading.Thread(target=swapper, daemon=True)
+    th.start()
+    t_swapping = _median_of(dispatch_loop, 1)
+    stop.set()
+    th.join()
+    quiet_rate = n_sel / t_quiet
+    swapping_rate = n_sel / t_swapping
+    print(f"disp  quiet {quiet_rate:10.0f} sel/s   under-swap {swapping_rate:10.0f} sel/s "
+          f"({swaps['n']} swaps during run)")
+
+    ops.set_selection_logging(False)
+    ops.clear_selection_log()
+    ops.clear_device_policies()
+
+    results = {
+        "n_problems": n_problems,
+        "n_traffic": n_traffic,
+        "drift_score": report.score,
+        "retune_full_s": t_full,
+        "retune_incremental_s": t_retune,
+        "retune_speedup": retune_speedup,
+        "swap_registry_s": t_swap_only,
+        "swap_hot_s": t_swap,
+        "swap_install_bundle_s": t_install,
+        "dispatch_quiet_per_s": quiet_rate,
+        "dispatch_under_swap_per_s": swapping_rate,
+        "swaps_observed": swaps["n"],
+    }
+    if args.json:
+        from pathlib import Path
+
+        Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.json).write_text(json.dumps(results, indent=1))
+        print(f"wrote {args.json}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

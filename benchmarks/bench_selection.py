@@ -120,12 +120,15 @@ def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
     ap.add_argument("--json", default=None, help="write results to this path")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="override timing repetitions (CI perf-gate uses a few "
+                         "reps even at --smoke sizes to damp scheduler noise)")
     args = ap.parse_args(argv)
 
     n_problems = 80 if args.smoke else 300
     n_predict = 2_000 if args.smoke else 10_000
     n_dispatch = 500 if args.smoke else 5_000
-    reps = 1 if args.smoke else 3
+    reps = args.reps if args.reps else (1 if args.smoke else 3)
 
     ds = build_model_dataset(synthetic_problems(n_problems))
     chosen = select_from_dataset(ds, 8, "topn", "standard")
@@ -138,7 +141,7 @@ def main(argv=None) -> dict:
     t_seed, t_fast = _best_of_pair(
         lambda: SeedDecisionTree().fit(feats, labels),
         lambda: DecisionTreeClassifier().fit(feats, labels),
-        reps if args.smoke else 7,
+        reps if (args.smoke or args.reps) else 7,
     )
     fit_speedup = t_seed / t_fast
     print(f"fit   seed {t_seed * 1e3:8.1f} ms   vectorized {t_fast * 1e3:8.1f} ms   "

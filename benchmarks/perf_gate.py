@@ -1,0 +1,154 @@
+"""CI perf-gate: compare benchmark results against a committed baseline.
+
+Holds the line on the PR1 selection fast path and the end-to-end numbers:
+
+  PYTHONPATH=src python benchmarks/bench_selection.py --smoke --reps 3 --json sel.json
+  PYTHONPATH=src python -m benchmarks.run --quick --only fig7 --json fig7.json
+  PYTHONPATH=src python benchmarks/perf_gate.py \\
+      --selection sel.json --fig7 fig7.json \\
+      --baseline benchmarks/baseline_ci.json --out BENCH_ci.json
+
+Gated metrics are chosen to be robust on shared CI runners: speedup *ratios*
+(seed-vs-fast fit, nested-vs-flat predict, cold-vs-cached dispatch — both
+sides of each ratio run on the same machine in the same process) and the
+fig7 totals (analytic perf model, fully deterministic).  Absolute throughput
+numbers are recorded in the artifact but not gated.
+
+A metric regresses when it moves more than ``--tolerance`` (default 25%) in
+its bad direction vs the committed baseline; any regression exits nonzero.
+``--update-baseline`` rewrites the baseline file from the current run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# metric name -> good direction ("higher" / "lower")
+SELECTION_METRICS = {
+    "fit_speedup": "higher",
+    "predict_speedup": "higher",
+    "dispatch_speedup": "higher",
+}
+# fig7 rows named fig7_<arch>_tuned8_ms are totals in ms: lower is better.
+FIG7_SUFFIX = "_tuned8_ms"
+
+# recorded in the artifact for trend-watching, never gated (machine-dependent)
+UNGATED_RECORD = ("dispatch_cold_per_s", "dispatch_cached_per_s",
+                  "fit_seed_s", "fit_fast_s", "predict_nested_s", "predict_flat_s")
+
+
+def collect_metrics(selection: dict | None, fig7: dict | None) -> tuple[dict, dict]:
+    """(gated, recorded-only) metric dicts from the two benchmark artifacts."""
+    gated: dict[str, tuple[float, str]] = {}
+    recorded: dict[str, float] = {}
+    if selection:
+        for name, direction in SELECTION_METRICS.items():
+            if name in selection:
+                gated[name] = (float(selection[name]), direction)
+        for name in UNGATED_RECORD:
+            if name in selection:
+                recorded[name] = float(selection[name])
+    if fig7:
+        for row in fig7.get("rows", []):
+            name, value = row[0], row[1]
+            if str(name).endswith(FIG7_SUFFIX):
+                gated[str(name)] = (float(value), "lower")
+    return gated, recorded
+
+
+def gate(gated: dict, baseline: dict, tolerance: float) -> tuple[dict, list[str]]:
+    """Verdict per metric + the list of regressions."""
+    verdicts: dict[str, dict] = {}
+    regressions: list[str] = []
+    # A baseline metric the current run no longer emits is itself a failure:
+    # a rename/removal must not silently shrink the gate's coverage.
+    for name in sorted(set(baseline) - set(gated)):
+        verdicts[name] = {"value": None, "baseline": baseline[name], "ok": False,
+                          "note": "metric missing from current run"}
+        regressions.append(
+            f"{name}: present in baseline but missing from the current run "
+            f"(renamed/removed? update {name!r} via --update-baseline deliberately)"
+        )
+    for name, (value, direction) in sorted(gated.items()):
+        base = baseline.get(name)
+        entry = {"value": value, "baseline": base, "direction": direction}
+        if base is None:
+            entry["ok"] = True
+            entry["note"] = "no baseline (new metric; commit one with --update-baseline)"
+        else:
+            base = float(base)
+            if direction == "higher":
+                ok = value >= base * (1.0 - tolerance)
+            else:
+                ok = value <= base * (1.0 + tolerance)
+            entry["ok"] = bool(ok)
+            entry["ratio"] = value / base if base else None
+            if not ok:
+                regressions.append(
+                    f"{name}: {value:.4g} vs baseline {base:.4g} "
+                    f"({direction} is better, tolerance {tolerance:.0%})"
+                )
+        verdicts[name] = entry
+    return verdicts, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--selection", default=None, help="bench_selection --json output")
+    ap.add_argument("--fig7", default=None, help="benchmarks.run --json output (fig7)")
+    ap.add_argument("--baseline", default="benchmarks/baseline_ci.json")
+    ap.add_argument("--out", default="BENCH_ci.json", help="artifact to write")
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from this run instead of gating")
+    args = ap.parse_args(argv)
+
+    selection = json.loads(Path(args.selection).read_text()) if args.selection else None
+    fig7 = json.loads(Path(args.fig7).read_text()) if args.fig7 else None
+    if fig7 and fig7.get("failures"):
+        print(f"perf-gate: upstream benchmark failures: {fig7['failures']}", file=sys.stderr)
+        return 1
+    gated, recorded = collect_metrics(selection, fig7)
+    if not gated:
+        print("perf-gate: no gated metrics found in inputs", file=sys.stderr)
+        return 1
+
+    if args.update_baseline:
+        Path(args.baseline).write_text(
+            json.dumps({name: value for name, (value, _d) in sorted(gated.items())}, indent=1)
+        )
+        print(f"baseline updated: {args.baseline} ({len(gated)} metrics)")
+        return 0
+
+    baseline = json.loads(Path(args.baseline).read_text()) if Path(args.baseline).exists() else {}
+    verdicts, regressions = gate(gated, baseline, args.tolerance)
+    artifact = {
+        "tolerance": args.tolerance,
+        "metrics": verdicts,
+        "recorded": recorded,
+        "regressions": regressions,
+        "ok": not regressions,
+    }
+    Path(args.out).write_text(json.dumps(artifact, indent=1))
+    for name, v in sorted(verdicts.items()):
+        mark = "ok " if v["ok"] else "REG"
+        base = v["baseline"]
+        if v["value"] is None:
+            print(f"  [{mark}] {name:32s} {'missing':>12s}  (baseline {base})")
+            continue
+        print(f"  [{mark}] {name:32s} {v['value']:12.4g}  "
+              f"(baseline {base if base is not None else '—'}, {v['direction']} better)")
+    print(f"wrote {args.out}")
+    if regressions:
+        print("perf-gate FAILED:", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print(f"perf-gate passed: {len(verdicts)} metrics within {args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

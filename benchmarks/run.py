@@ -1,10 +1,12 @@
 """Benchmark driver: one module per paper table/figure.
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig5]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig5] [--json out]
 
 Prints ``name,value,derived`` CSV rows (one per headline number) and writes
-full JSON artifacts to experiments/paper/.
+full JSON artifacts to experiments/paper/.  ``--json`` additionally writes
+the printed rows (plus any failures) to one machine-readable file — the CI
+perf-gate consumes it.  Exits nonzero if any module failed.
 """
 from __future__ import annotations
 
@@ -35,29 +37,50 @@ MODULES = {
 }
 
 
-def main() -> None:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced problem counts")
     ap.add_argument("--only", default=None, choices=sorted(MODULES))
-    args = ap.parse_args()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + failures to this JSON file")
+    args = ap.parse_args(argv)
 
     names = [args.only] if args.only else list(MODULES)
     print("name,value,derived")
-    failures = []
+    failures: list[tuple[str, str]] = []
+    all_rows: list[tuple] = []
     for name in names:
         t0 = time.time()
         try:
             rows = MODULES[name].main(quick=args.quick)
-        except Exception as e:  # noqa: BLE001 — report all, fail at the end
+        except (Exception, SystemExit) as e:  # noqa: BLE001 — report all, fail at the end
+            # SystemExit too: a module's internal regression tripwire must
+            # fail the suite, not skip the remaining modules' reporting.
             failures.append((name, repr(e)))
             print(f"{name},ERROR,{e!r}", flush=True)
             continue
+        all_rows.extend(rows)
         for row in rows:
             print(",".join(str(x) for x in row), flush=True)
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr, flush=True)
+    if args.json:
+        import json
+        from pathlib import Path
+
+        out = {
+            "rows": [list(r) for r in all_rows],
+            "failures": [list(f) for f in failures],
+            "quick": bool(args.quick),
+        }
+        Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.json).write_text(json.dumps(out, indent=1))
     if failures:
-        raise SystemExit(f"benchmark failures: {failures}")
+        # Explicit nonzero exit: the CI perf-gate (and any shell caller)
+        # must see benchmark failures as a failed command, never exit 0.
+        print(f"benchmark failures: {failures}", file=sys.stderr, flush=True)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -18,11 +18,18 @@ hardware — the per-target tuned subsets of the companion study
     (or requested) device, degrading to the nearest tuned sibling via
     :func:`repro.core.devices.resolve_device`.
 
-Format (DESIGN.md §7)::
+Format (DESIGN.md §7-§8)::
 
-    {"version": 3, "format": "bundle",
+    {"version": 4, "format": "bundle",
      "deployments": {"tpu_v5e": {<v2 blob>}, "tpu_v4": {<v2 blob>}, ...},
+     "provenance": {"tpu_v5e": {"train_distribution": {...},
+                                "retune_count": 0}, ...},
      "meta": {...}}
+
+v4 adds the per-device ``provenance`` block consumed by the continuous
+tuning loop (``repro.core.retune``): the shape distribution each deployment
+was tuned against plus its retune lineage.  v1-v3 artifacts load unchanged
+(no provenance -> drift detection treats all live traffic as unseen).
 """
 from __future__ import annotations
 
@@ -33,7 +40,10 @@ from pathlib import Path
 from .devices import canonical_device_name, detect_device, resolve_device
 from .dispatch import Deployment
 
-BUNDLE_VERSION = 3
+BUNDLE_VERSION = 4
+
+# Deployment.meta keys that form the v4 top-level provenance block.
+_PROVENANCE_KEYS = ("train_distribution", "retune_count", "retune")
 
 
 @dataclasses.dataclass
@@ -72,6 +82,19 @@ class DeploymentBundle:
             raise KeyError(f"no deployment for device {device!r} in bundle {self.devices}")
         return self.deployments[resolved], resolved
 
+    def provenance(self) -> dict[str, dict]:
+        """Per-device tuning provenance (the v4 top-level block).
+
+        Extracted from each deployment's meta; devices tuned before
+        provenance existed simply have no entry.
+        """
+        out: dict[str, dict] = {}
+        for name, dep in sorted(self.deployments.items()):
+            ent = {k: dep.meta[k] for k in _PROVENANCE_KEYS if k in dep.meta}
+            if ent:
+                out[name] = ent
+        return out
+
     # -- persistence ---------------------------------------------------------
     def to_blob(self, *, tree_format: str = "flat") -> dict:
         return {
@@ -81,6 +104,7 @@ class DeploymentBundle:
                 name: dep.to_blob(tree_format=tree_format)
                 for name, dep in sorted(self.deployments.items())
             },
+            "provenance": self.provenance(),
             "meta": self.meta,
         }
 
@@ -100,6 +124,14 @@ class DeploymentBundle:
                 name: Deployment.from_blob(sub)
                 for name, sub in blob["deployments"].items()
             }
+            # v4: reattach the top-level provenance block to each deployment
+            # (authoritative for tooling that rewrote it without touching the
+            # embedded per-device blobs; older per-device meta wins nothing).
+            by_canonical = {canonical_device_name(n): d for n, d in deps.items()}
+            for name, ent in (blob.get("provenance") or {}).items():
+                dep = by_canonical.get(canonical_device_name(name))
+                if dep is not None:
+                    dep.meta.update(ent)
             return DeploymentBundle(deployments=deps, meta=blob.get("meta", {}))
         # v1/v2 single-device file: a degenerate one-entry bundle.
         dep = Deployment.from_blob(blob)

@@ -24,8 +24,37 @@ __all__ = [
     "RandomForestClassifier",
     "MLPClassifier",
     "make_classifier",
+    "fit_weighted",
     "CLASSIFIERS",
 ]
+
+
+def fit_weighted(clf, x: np.ndarray, y: np.ndarray, sample_weight: np.ndarray | None = None):
+    """Fit ``clf`` with per-sample traffic weights (the retune path).
+
+    Decision trees take ``sample_weight`` natively; classifiers without the
+    parameter get an equivalent dataset with rows replicated in proportion to
+    weight (bounded at 4 copies of the heaviest row per original row, enough
+    resolution for a traffic histogram without quadratic blow-up).
+    """
+    if sample_weight is None:
+        return clf.fit(x, y)
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=int)
+    w = np.asarray(sample_weight, dtype=np.float64)
+    if w.shape != (len(y),):
+        raise ValueError(f"sample_weight shape {w.shape} != ({len(y)},)")
+    try:
+        return clf.fit(x, y, sample_weight=w)
+    except TypeError:
+        pass
+    pos = w[w > 0]
+    if pos.size == 0:
+        return clf.fit(x, y)
+    reps = np.clip(np.round(4.0 * w / pos.max()), 0, 4).astype(int)
+    reps[w > 0] = np.maximum(reps[w > 0], 1)  # every observed row survives
+    idx = np.repeat(np.arange(len(y)), reps)
+    return clf.fit(x[idx], y[idx])
 
 
 def _standardize_fit(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

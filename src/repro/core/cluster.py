@@ -58,14 +58,29 @@ def kmeans(
     n_init: int = 8,
     max_iter: int = 200,
     seed: int = 0,
+    init_centers: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Lloyd's algorithm with k-means++ init. Returns (labels, centers)."""
+    """Lloyd's algorithm with k-means++ init. Returns (labels, centers).
+
+    ``init_centers`` warm-starts Lloyd from caller-supplied centroids (the
+    incremental-retune path seeds with the deployed clustering so refinement
+    converges in a handful of iterations instead of ``n_init`` cold restarts).
+    Fewer than ``k`` rows are topped up by k-means++; extra rows are ignored.
+    """
     x = np.asarray(x, dtype=np.float64)
     k = min(k, x.shape[0])
     rng = np.random.default_rng(seed)
+    warm = None
+    if init_centers is not None:
+        warm = np.asarray(init_centers, dtype=np.float64)[:k]
+        if warm.shape[0] < k:
+            # top up missing centroids with k-means++ picks over the data
+            extra = _kmeans_pp_init(x, k - warm.shape[0], rng)
+            warm = np.vstack([warm, extra])
+        n_init = 1
     best = (None, None, np.inf)
     for _ in range(n_init):
-        centers = _kmeans_pp_init(x, k, rng)
+        centers = warm if warm is not None else _kmeans_pp_init(x, k, rng)
         for _ in range(max_iter):
             d2 = ((x[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
             labels = d2.argmin(1)
@@ -364,18 +379,21 @@ def select_configs(
     features: np.ndarray | None = None,
     seed: int = 0,
     pca_components: int = 8,
+    init_centers: np.ndarray | None = None,
 ) -> list[int]:
     """Select ``k`` kernel-config indices to deploy, from normalized perf data.
 
     ``perf`` is (n_problems, n_configs) *normalized* performance; ``features``
-    (problem sizes) is required only by the ``tree`` method.
+    (problem sizes) is required only by the ``tree`` method.  ``init_centers``
+    (perf-space centroids) warm-starts the ``kmeans`` method — the incremental
+    retune path; other methods ignore it.
     """
     perf = np.asarray(perf, dtype=np.float64)
     if method == "topn":
         counts = np.bincount(perf.argmax(1), minlength=perf.shape[1])
         return [int(i) for i in np.argsort(-counts)[:k]]
     if method == "kmeans":
-        labels, centers = kmeans(perf, k, seed=seed)
+        labels, centers = kmeans(perf, k, seed=seed, init_centers=init_centers)
         chosen = _configs_from_centers(perf, labels, centers, k)
     elif method == "pca_kmeans":
         z = PCA(n_components=min(pca_components, perf.shape[1], perf.shape[0])).fit_transform(perf)

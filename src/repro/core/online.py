@@ -28,9 +28,16 @@ from typing import Callable, Sequence
 from repro.kernels.matmul import MatmulConfig, config_space
 
 
-def _bucket(problem: tuple[int, int, int, int]) -> tuple[int, int, int, int]:
-    """log2 shape bucket: nearby shapes share measurements (paper's regimes)."""
-    return tuple(max(v, 1).bit_length() for v in problem)
+def shape_bucket(problem: tuple[int, ...]) -> tuple[int, ...]:
+    """log2 shape bucket: nearby shapes share measurements (paper's regimes).
+
+    Shared vocabulary of the telemetry pipeline: ``repro.core.retune`` keys
+    its traffic histograms and drift detection on the same buckets.
+    """
+    return tuple(max(int(v), 1).bit_length() for v in problem)
+
+
+_bucket = shape_bucket  # historical private name
 
 
 @dataclasses.dataclass
@@ -126,6 +133,32 @@ class OnlinePolicy:
         if len(self._attn_cache) > self._attn_cache_cap:
             self._attn_cache.popitem(last=False)
         return cfg
+
+    # -- continuous tuning ----------------------------------------------------
+    def set_prior(self, prior: object | None) -> None:
+        """Hot-swap the offline prior (a new :class:`Deployment` from retune).
+
+        The attention cache memoizes the *previous* prior's answers, so it
+        must be invalidated here — otherwise a swapped-in deployment would
+        never be consulted for already-seen attention shapes.  Matmul arm
+        measurements are kept: they are real timings, still valid evidence;
+        only the not-yet-explored buckets pick up the new prior's ordering.
+        """
+        self.prior = prior
+        self._attn_cache.clear()
+
+    def measurements(self) -> dict[tuple, list[tuple[MatmulConfig, float, int]]]:
+        """Per-bucket measured arms: ``{bucket: [(config, mean_s, trials)]}``.
+
+        The telemetry snapshot (``repro.core.retune``) folds these observed
+        config timings in next to the selection-log shape histogram.
+        """
+        out: dict[tuple, list[tuple[MatmulConfig, float, int]]] = {}
+        for b, arms in self._arms.items():
+            rows = [(a.config, a.mean, a.trials) for a in arms if a.trials > 0]
+            if rows:
+                out[b] = rows
+        return out
 
     # -- introspection ---------------------------------------------------------
     def warmup_cost(self) -> float:

@@ -1,0 +1,393 @@
+"""Continuous tuning loop: telemetry -> drift detection -> incremental retune.
+
+The paper's pipeline is "fully automated, relying only on benchmark data" —
+but that benchmark data is frozen at tune time, while the serving engine sees
+the live problem distribution.  This module closes the loop (the adaptive-
+libraries direction of Cianfriglia et al., and the online-autotuning
+comparison of the paper's §2.2, combined): the offline classifier is a
+*prior* that runtime evidence continuously corrects.
+
+    selection log + OnlinePolicy measurements
+        -> TelemetrySnapshot            (per-device shape-bucket histograms)
+        -> detect_drift                 (vs the Deployment's training
+                                         distribution, carried as provenance
+                                         metadata in the artifact)
+        -> incremental_retune           (re-harvest only drifted buckets,
+                                         warm-start clustering from the
+                                         deployed centroids, refit the
+                                         classifier traffic-weighted)
+        -> new Deployment               (hot-swapped into repro.kernels.ops
+                                         with zero dropped requests)
+
+Everything is host-side numpy; the only measurement source needed is the
+same benchmark-data supplier the offline pipeline used (the analytic perf
+model for TPU targets, a measure hook for real hardware).  See DESIGN.md §8
+for the telemetry schema, the drift metric, and the hot-swap atomicity
+contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .classify import fit_weighted, make_classifier
+from .cluster import select_configs
+from .dataset import TuningDataset, build_model_dataset
+from .dispatch import Deployment, build_labels
+from .normalize import normalize
+from .online import shape_bucket
+
+Bucket = tuple[int, ...]
+
+DEFAULT_DRIFT_THRESHOLD = 0.15
+DEFAULT_MIN_EVENTS = 32
+
+
+# ---------------------------------------------------------------------------
+# training-distribution provenance (bundle v4 / Deployment.meta)
+# ---------------------------------------------------------------------------
+def bucket_key(bucket: Bucket) -> str:
+    """JSON-safe bucket key: ``(9, 10, 9, 1)`` -> ``"9,10,9,1"``."""
+    return ",".join(str(int(v)) for v in bucket)
+
+
+def parse_bucket_key(key: str) -> Bucket:
+    return tuple(int(v) for v in key.split(","))
+
+
+def train_distribution(
+    problems: list[tuple], weights: np.ndarray | None = None
+) -> dict:
+    """Provenance blob describing a tuning dataset's shape distribution.
+
+    JSON-ready (it rides inside ``Deployment.meta`` and the v4 bundle blob):
+
+        {"buckets": {"9,10,9,1": {"w": 0.25, "problem": [512, 784, 512, 16]},
+                     ...},
+         "n_problems": 60}
+
+    ``w`` is the bucket's share of (optionally weighted) problems; ``problem``
+    is one representative shape per bucket, kept so an incremental retune can
+    rebuild benchmark rows for undrifted buckets without the full dataset.
+    """
+    w = np.ones(len(problems)) if weights is None else np.asarray(weights, float)
+    buckets: dict[str, dict] = {}
+    total = float(w.sum()) or 1.0
+    for p, wi in zip(problems, w):
+        key = bucket_key(shape_bucket(p))
+        ent = buckets.setdefault(key, {"w": 0.0, "problem": [int(v) for v in p]})
+        ent["w"] += float(wi) / total
+    return {"buckets": buckets, "n_problems": len(problems)}
+
+
+def _dist_buckets(dist: dict | None) -> dict[Bucket, tuple[float, tuple]]:
+    """Parse a provenance blob into ``{bucket: (weight, problem)}``."""
+    if not dist or not dist.get("buckets"):
+        return {}
+    out = {}
+    for key, ent in dist["buckets"].items():
+        out[parse_bucket_key(key)] = (float(ent["w"]), tuple(int(v) for v in ent["problem"]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TelemetrySnapshot:
+    """Aggregated runtime evidence for one serving window.
+
+    ``matmul_counts`` is the live shape-bucket histogram (every trace-time
+    selection, cache hits included, so frequencies reflect real traffic);
+    ``problems`` keeps the most recent concrete shape per bucket (the
+    re-harvest candidates); ``observed`` carries any measured config timings
+    an :class:`~repro.core.online.OnlinePolicy` gathered (bucket ->
+    ``[(config, mean_s, trials)]``) — recorded for operators and for a
+    future measured-retune path; :func:`detect_drift` and
+    :func:`incremental_retune` key off the histogram alone today.
+    """
+
+    matmul_counts: dict[Bucket, int] = dataclasses.field(default_factory=dict)
+    problems: dict[Bucket, tuple] = dataclasses.field(default_factory=dict)
+    attention_counts: dict[Bucket, int] = dataclasses.field(default_factory=dict)
+    observed: dict[Bucket, list] = dataclasses.field(default_factory=dict)
+    n_events: int = 0
+
+    @staticmethod
+    def from_selection_log(log: list[tuple], online=None) -> "TelemetrySnapshot":
+        """Aggregate ``ops.selection_log()`` entries (op, problem, config).
+
+        ``online`` optionally supplies an ``OnlinePolicy`` whose
+        ``measurements()`` are folded in as observed config timings.
+        """
+        snap = TelemetrySnapshot()
+        for op, problem, _cfg in log:
+            b = shape_bucket(problem)
+            if op == "matmul":
+                snap.matmul_counts[b] = snap.matmul_counts.get(b, 0) + 1
+                snap.problems[b] = tuple(int(v) for v in problem)
+                snap.n_events += 1
+            elif op == "attention":
+                snap.attention_counts[b] = snap.attention_counts.get(b, 0) + 1
+        if online is not None and hasattr(online, "measurements"):
+            for b, rows in online.measurements().items():
+                snap.observed.setdefault(b, []).extend(rows)
+        return snap
+
+    def histogram(self) -> dict[Bucket, float]:
+        """Normalized live matmul-traffic histogram (sums to 1)."""
+        total = float(sum(self.matmul_counts.values()))
+        if total <= 0:
+            return {}
+        return {b: c / total for b, c in self.matmul_counts.items()}
+
+    def merge(self, other: "TelemetrySnapshot") -> "TelemetrySnapshot":
+        """Fold ``other`` into this snapshot (windowed collection)."""
+        for b, c in other.matmul_counts.items():
+            self.matmul_counts[b] = self.matmul_counts.get(b, 0) + c
+        self.problems.update(other.problems)
+        for b, c in other.attention_counts.items():
+            self.attention_counts[b] = self.attention_counts.get(b, 0) + c
+        for b, rows in other.observed.items():
+            self.observed.setdefault(b, []).extend(rows)
+        self.n_events += other.n_events
+        return self
+
+
+# ---------------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DriftReport:
+    """Outcome of comparing live traffic against the training distribution.
+
+    ``score`` is the Jensen-Shannon divergence (base 2, so 0 = identical,
+    1 = disjoint) between the two bucket histograms; ``unseen_fraction`` is
+    the live mass on buckets the tuning dataset never contained (the part no
+    classifier accuracy can fix); ``drifted_buckets`` are the re-harvest
+    targets, heaviest excess live mass first.
+    """
+
+    score: float
+    unseen_fraction: float
+    drifted_buckets: tuple[Bucket, ...]
+    threshold: float
+    n_events: int
+    triggered: bool
+
+
+def js_divergence(p: dict[Bucket, float], q: dict[Bucket, float]) -> float:
+    """Jensen-Shannon divergence between two bucket histograms, in [0, 1]."""
+    keys = sorted(set(p) | set(q))
+    if not keys:
+        return 0.0
+    pv = np.array([p.get(k, 0.0) for k in keys])
+    qv = np.array([q.get(k, 0.0) for k in keys])
+    pv = pv / max(pv.sum(), 1e-12)
+    qv = qv / max(qv.sum(), 1e-12)
+    m = 0.5 * (pv + qv)
+
+    def kl(a, b):
+        mask = a > 0
+        return float(np.sum(a[mask] * np.log2(a[mask] / np.maximum(b[mask], 1e-300))))
+
+    return 0.5 * kl(pv, m) + 0.5 * kl(qv, m)
+
+
+def detect_drift(
+    snapshot: TelemetrySnapshot,
+    deployment: Deployment | dict | None,
+    *,
+    threshold: float = DEFAULT_DRIFT_THRESHOLD,
+    min_events: int = DEFAULT_MIN_EVENTS,
+) -> DriftReport:
+    """Compare live traffic against a deployment's training distribution.
+
+    ``deployment`` may be a :class:`Deployment` (provenance read from
+    ``meta["train_distribution"]``) or the provenance dict itself.  An
+    artifact predating provenance (v1-v3) scores 1.0 — everything live is
+    unseen as far as the frozen tuning data can prove, so past the event
+    floor it always triggers a retune to the observed distribution.
+    """
+    if isinstance(deployment, Deployment):
+        dist = deployment.meta.get("train_distribution")
+    else:
+        dist = deployment
+    live = snapshot.histogram()
+    train = {b: w for b, (w, _p) in _dist_buckets(dist).items()}
+    if not live:
+        return DriftReport(0.0, 0.0, (), threshold, snapshot.n_events, False)
+    if not train:
+        drifted = tuple(sorted(live, key=lambda b: -live[b]))
+        trig = snapshot.n_events >= min_events
+        return DriftReport(1.0, 1.0, drifted, threshold, snapshot.n_events, trig)
+    score = js_divergence(live, train)
+    unseen = sum(w for b, w in live.items() if b not in train)
+    # Re-harvest targets: buckets with materially more live than train mass.
+    excess = {b: live[b] - train.get(b, 0.0) for b in live}
+    margin = 0.5 / max(len(live), 1)
+    drifted = tuple(
+        sorted((b for b, e in excess.items() if e > margin or b not in train),
+               key=lambda b: -excess[b])
+    )
+    triggered = snapshot.n_events >= min_events and score >= threshold
+    return DriftReport(score, unseen, drifted, threshold, snapshot.n_events, triggered)
+
+
+# ---------------------------------------------------------------------------
+# incremental retune
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RetuneResult:
+    deployment: Deployment
+    report: DriftReport
+    n_harvested: int  # buckets whose benchmark rows were newly measured
+    n_problems: int  # total problems in the blended retune dataset
+    warm_started: bool
+
+
+def _warm_start_centers(
+    norm_perf: np.ndarray, ds: TuningDataset, deployment: Deployment
+) -> np.ndarray | None:
+    """Perf-space centroids implied by the deployed kernel subset.
+
+    Problems are grouped by which *deployed* config is best for them (the
+    clustering the old deployment effectively shipped); each group's mean
+    normalized perf vector seeds one k-means center.  Deployed configs
+    missing from the dataset's config space are skipped (k-means++ tops up).
+    """
+    cols = []
+    for cfg in deployment.configs:
+        try:
+            cols.append(ds.configs.index(cfg))
+        except ValueError:
+            continue
+    if not cols:
+        return None
+    owner = np.asarray(ds.perf)[:, cols].argmax(axis=1)
+    centers = []
+    for j in range(len(cols)):
+        members = norm_perf[owner == j]
+        if len(members):
+            centers.append(members.mean(axis=0))
+    return np.stack(centers) if centers else None
+
+
+def incremental_retune(
+    deployment: Deployment,
+    snapshot: TelemetrySnapshot,
+    *,
+    report: DriftReport | None = None,
+    threshold: float = DEFAULT_DRIFT_THRESHOLD,
+    min_events: int = DEFAULT_MIN_EVENTS,
+    n_kernels: int | None = None,
+    blend: float = 0.5,
+    normalization: str = "standard",
+    seed: int = 0,
+    dataset_builder=None,
+) -> RetuneResult:
+    """Refresh a deployment against observed traffic, cheaply.
+
+    Incremental in three ways (vs a full ``tuner.tune`` run):
+
+      * the benchmark set is *buckets*, not the original problem list — one
+        representative problem per training bucket (from provenance) plus the
+        live problems of **drifted buckets only** (fresh harvest);
+      * clustering warm-starts from the deployed centroids
+        (:func:`_warm_start_centers` + ``cluster.kmeans(init_centers=...)``)
+        instead of ``n_init`` cold k-means++ restarts;
+      * the classifier refit is traffic-weighted
+        (:func:`repro.core.classify.fit_weighted` on the blended histogram),
+        so accuracy concentrates where the live workload actually is.
+
+    ``blend`` sets the live-vs-train mix of the target distribution (0.5 =
+    equal weight: the retuned artifact still serves yesterday's traffic).
+    The attention tuning is carried over unchanged — GEMM telemetry carries
+    no attention evidence.  ``dataset_builder(problems, device)`` overrides
+    the benchmark-data source (defaults to the analytic perf model; required
+    for devices the model does not cover, e.g. measured ``host_cpu``).
+    """
+    if report is None:
+        report = detect_drift(
+            snapshot, deployment, threshold=threshold, min_events=min_events
+        )
+    train = _dist_buckets(deployment.meta.get("train_distribution"))
+    live = snapshot.histogram()
+    drifted = set(report.drifted_buckets)
+
+    # Blend the two distributions into one weighted problem list.  Drifted
+    # buckets take their *live* representative problem (the fresh harvest);
+    # undrifted training buckets keep their provenance representative.
+    problems: list[tuple] = []
+    weights: list[float] = []
+    harvested = 0
+    for b in sorted(set(train) | set(live)):
+        t_w = train.get(b, (0.0, None))[0]
+        l_w = live.get(b, 0.0)
+        w = (1.0 - blend) * t_w + blend * l_w
+        if w <= 0:
+            continue
+        if b in drifted and b in snapshot.problems:
+            problems.append(snapshot.problems[b])
+            harvested += 1
+        elif b in train:
+            problems.append(train[b][1])
+        elif b in snapshot.problems:
+            problems.append(snapshot.problems[b])
+            harvested += 1
+        else:
+            continue
+        weights.append(w)
+    if not problems:
+        raise ValueError("incremental_retune needs telemetry or provenance problems")
+
+    build = dataset_builder or _model_dataset_builder
+    ds = build(problems, deployment.device)
+    norm = normalize(ds.perf, normalization)
+    k = n_kernels or len(deployment.configs)
+    centers = _warm_start_centers(norm, ds, deployment)
+    chosen = select_configs(norm, k, "kmeans", seed=seed, init_centers=centers)
+
+    labels = build_labels(ds.perf, chosen)
+    w = np.asarray(weights, dtype=np.float64)
+    clf = make_classifier(deployment.classifier_name)
+    fit_weighted(clf, ds.features, labels, w)
+
+    meta = dict(deployment.meta)
+    meta["train_distribution"] = train_distribution(ds.problems, w)
+    meta["retune_count"] = int(meta.get("retune_count", 0)) + 1
+    meta["retune"] = {
+        "drift_score": round(report.score, 6),
+        "unseen_fraction": round(report.unseen_fraction, 6),
+        "n_harvested_buckets": harvested,
+        "n_problems": len(problems),
+        "warm_started": centers is not None,
+    }
+    new_dep = Deployment(
+        device=deployment.device,
+        configs=[ds.configs[i] for i in chosen],
+        classifier=clf,
+        classifier_name=deployment.classifier_name,
+        attention_configs=list(deployment.attention_configs),
+        attention_tree=deployment.attention_tree,
+        meta=meta,
+    )
+    return RetuneResult(
+        deployment=new_dep,
+        report=report,
+        n_harvested=harvested,
+        n_problems=len(problems),
+        warm_started=centers is not None,
+    )
+
+
+def _model_dataset_builder(problems: list[tuple], device: str) -> TuningDataset:
+    from .perfmodel import DEVICES
+
+    if device not in DEVICES:
+        raise ValueError(
+            f"no analytic perf model for device {device!r}; pass dataset_builder= "
+            f"(e.g. a cpubench-backed measurer) to incremental_retune"
+        )
+    return build_model_dataset(problems, device_name=device)

@@ -53,6 +53,8 @@ def tune(
     """
     train, test = dataset.split(test_fraction=test_fraction, seed=seed)
     chosen = select_from_dataset(train, n_kernels, method, normalization, seed=seed)
+    from .retune import train_distribution
+
     deployment = train_deployment(
         train,
         chosen,
@@ -63,6 +65,10 @@ def tune(
             "n_kernels": n_kernels,
             "seed": seed,
             "source": dataset.source,
+            # Provenance for the continuous tuning loop (DESIGN.md §8): the
+            # shape distribution this artifact was tuned against, so a
+            # serving host can detect when live traffic drifts away from it.
+            "train_distribution": train_distribution(train.problems),
         },
     )
     # Second kernel family (the paper's future-work direction): the same

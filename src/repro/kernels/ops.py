@@ -54,8 +54,22 @@ DEFAULT_LOG_CAP = 4096
 DEFAULT_SHAPE_CACHE_CAP = 1024
 
 
-class _State(threading.local):
+class _Shared:
+    """Process-global policy registry (DESIGN.md §8 hot-swap contract).
+
+    Everything a policy swap must change together — the live policy, the
+    per-device registry, the active/requested markers, and the selection log
+    — lives here, mutated only under ``lock`` with an ``epoch`` bump.
+    Dispatching threads keep their own shape caches (:class:`_Local`) and
+    re-sync them lazily: on the first selection after a swap, a thread sees
+    the stale epoch, drops its cache, and adopts the new policy atomically,
+    so a cached config from the old policy can never be served as if the new
+    policy had chosen it.
+    """
+
     def __init__(self):
+        self.lock = threading.RLock()
+        self.epoch: int = 0
         self.policy: KernelPolicy | None = None
         self.device_policies: dict[str, KernelPolicy] = {}
         self.active_device: str | None = None
@@ -64,14 +78,46 @@ class _State(threading.local):
         self.interpret: bool = False
         self.log_enabled: bool = False
         self.selection_log: deque[tuple] = deque(maxlen=DEFAULT_LOG_CAP)
+
+
+class _Local(threading.local):
+    """Per-thread dispatch fast path: the LRU shape cache and its counters."""
+
+    def __init__(self):
+        self.epoch: int = -1  # never matches: first dispatch syncs
+        self.policy: KernelPolicy | None = None
         self.shape_cache: OrderedDict[tuple, object] = OrderedDict()
         self.shape_cache_cap: int = DEFAULT_SHAPE_CACHE_CAP
         self.cache_hits: int = 0
         self.cache_misses: int = 0
 
 
-_state = _State()
+_shared = _Shared()
+_local = _Local()
 _MISS = object()
+
+
+def _policy() -> KernelPolicy | None:
+    """The live policy, syncing this thread's view of a hot swap.
+
+    The epoch check makes the swap atomic from the dispatcher's side: the
+    policy reference and the shape-cache invalidation are taken together
+    under the registry lock, so a selection either runs fully against the
+    old policy (an in-flight request — fine) or fully against the new one.
+    """
+    if _local.epoch != _shared.epoch:
+        with _shared.lock:
+            _local.policy = _shared.policy
+            _local.epoch = _shared.epoch
+        _local.shape_cache.clear()
+        _local.cache_hits = 0
+        _local.cache_misses = 0
+    return _local.policy
+
+
+def policy_epoch() -> int:
+    """Monotonic counter bumped by every policy mutation (swap observability)."""
+    return _shared.epoch
 
 
 def set_kernel_policy(policy: KernelPolicy | None) -> None:
@@ -81,14 +127,16 @@ def set_kernel_policy(policy: KernelPolicy | None) -> None:
     to the registry, so later ``set_kernel_policy_for_device`` calls won't
     silently replace it.
     """
-    _state.policy = policy
-    _state.active_device = None
-    _state.requested_device = None
+    with _shared.lock:
+        _shared.policy = policy
+        _shared.active_device = None
+        _shared.requested_device = None
+        _shared.epoch += 1
     clear_shape_cache()
 
 
 def get_kernel_policy() -> KernelPolicy | None:
-    return _state.policy
+    return _policy()
 
 
 # ---------------------------------------------------------------------------
@@ -99,35 +147,44 @@ def set_kernel_policy_for_device(device: str, policy: KernelPolicy | None) -> No
 
     Registration alone activates nothing; ``activate_device`` picks which
     registered policy serves this host.  If ``device`` is the currently
-    active one, the live policy is refreshed (and the shape cache cleared).
+    active one, the live policy is refreshed in place — this is the
+    zero-downtime hot-swap primitive the retune loop uses: the registry,
+    the live policy, and the epoch bump happen atomically under the lock,
+    and every dispatching thread invalidates its shape cache on its next
+    selection (in-flight selections complete against the old policy).
     """
     from repro.core.devices import canonical_device_name
 
     name = canonical_device_name(device)
-    if policy is None:
-        _state.device_policies.pop(name, None)
-        if name == _state.active_device:
-            # Dropping the live policy deactivates it — a stale marker would
-            # report an active device while dispatch runs unpoliced.
-            _state.policy = None
-            _state.active_device = None
-            _state.requested_device = None
-            clear_shape_cache()
-        return
-    _state.device_policies[name] = policy
-    if name == _state.active_device:
-        _state.policy = policy
-        clear_shape_cache()
+    with _shared.lock:
+        if policy is None:
+            _shared.device_policies.pop(name, None)
+            if name == _shared.active_device:
+                # Dropping the live policy deactivates it — a stale marker
+                # would report an active device while dispatch runs unpoliced.
+                _shared.policy = None
+                _shared.active_device = None
+                _shared.requested_device = None
+                _shared.epoch += 1
+        else:
+            _shared.device_policies[name] = policy
+            if name == _shared.active_device:
+                _shared.policy = policy
+                _shared.epoch += 1
+    # No explicit cache clear: the epoch bump (live-device cases only) makes
+    # every thread — this one included — drop its shape cache on the next
+    # selection; registering an inactive device leaves warm caches alone.
 
 
 def device_policies() -> dict[str, KernelPolicy]:
     """Snapshot of the registered per-device policies (name -> policy)."""
-    return dict(_state.device_policies)
+    with _shared.lock:
+        return dict(_shared.device_policies)
 
 
 def active_device() -> str | None:
     """Canonical name of the device whose registered policy is live."""
-    return _state.active_device
+    return _shared.active_device
 
 
 def device_resolution() -> tuple[str | None, str | None]:
@@ -136,7 +193,8 @@ def device_resolution() -> tuple[str | None, str | None]:
     Differing entries mean this host is untuned and serving a nearest-sibling
     fallback artifact; ``(None, None)`` means no registry activation is live.
     """
-    return (_state.requested_device, _state.active_device)
+    with _shared.lock:
+        return (_shared.requested_device, _shared.active_device)
 
 
 def activate_device(device: str | None = None, *, strict: bool = False) -> str:
@@ -150,38 +208,43 @@ def activate_device(device: str | None = None, *, strict: bool = False) -> str:
     from repro.core.devices import canonical_device_name, detect_device, resolve_device
 
     requested = canonical_device_name(device) if device is not None else detect_device()
-    resolved = resolve_device(requested, list(_state.device_policies), strict=strict)
-    if resolved is None:
-        raise KeyError(
-            f"no kernel policy registered for device {requested!r} "
-            f"(registered: {sorted(_state.device_policies)})"
-        )
-    _state.policy = _state.device_policies[resolved]
-    _state.active_device = resolved
-    _state.requested_device = requested
+    with _shared.lock:
+        resolved = resolve_device(requested, list(_shared.device_policies), strict=strict)
+        if resolved is None:
+            raise KeyError(
+                f"no kernel policy registered for device {requested!r} "
+                f"(registered: {sorted(_shared.device_policies)})"
+            )
+        _shared.policy = _shared.device_policies[resolved]
+        _shared.active_device = resolved
+        _shared.requested_device = requested
+        _shared.epoch += 1
     clear_shape_cache()
     return resolved
 
 
 def set_pallas_enabled(enabled: bool, *, interpret: bool = False) -> None:
     """Route matmuls through the Pallas kernels (interpret=True on CPU)."""
-    _state.use_pallas = enabled
-    _state.interpret = interpret
+    _shared.use_pallas = enabled
+    _shared.interpret = interpret
 
 
 # ---------------------------------------------------------------------------
 # selection log (opt-in, ring buffer — long serving runs must not leak host
-# memory recording every trace-time decision)
+# memory recording every trace-time decision).  The log is process-global:
+# the retune loop's telemetry reader may run on a different thread than the
+# dispatches it observes (deque append/iterate are GIL-atomic).
 # ---------------------------------------------------------------------------
 def set_selection_logging(enabled: bool, *, cap: int | None = None) -> None:
     """Opt in/out of recording dispatch decisions; ``cap`` bounds the buffer."""
-    _state.log_enabled = enabled
-    if cap is not None:
-        _state.selection_log = deque(_state.selection_log, maxlen=max(int(cap), 1))
+    with _shared.lock:
+        _shared.log_enabled = enabled
+        if cap is not None:
+            _shared.selection_log = deque(_shared.selection_log, maxlen=max(int(cap), 1))
 
 
 def selection_logging_enabled() -> bool:
-    return _state.log_enabled
+    return _shared.log_enabled
 
 
 def selection_log() -> list[tuple]:
@@ -190,11 +253,11 @@ def selection_log() -> list[tuple]:
     Empty unless ``set_selection_logging(True)`` was called; at most the
     newest ``cap`` entries are retained.
     """
-    return list(_state.selection_log)
+    return list(_shared.selection_log)
 
 
 def clear_selection_log() -> None:
-    _state.selection_log.clear()
+    _shared.selection_log.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -207,72 +270,80 @@ def clear_device_policies() -> None:
     (the marker and the live policy must never disagree); a policy installed
     manually via ``set_kernel_policy`` is not registry-owned and survives.
     """
-    _state.device_policies.clear()
-    if _state.active_device is not None:
-        _state.policy = None
-        clear_shape_cache()
-    _state.active_device = None
-    _state.requested_device = None
+    with _shared.lock:
+        _shared.device_policies.clear()
+        if _shared.active_device is not None:
+            _shared.policy = None
+        _shared.active_device = None
+        _shared.requested_device = None
+        _shared.epoch += 1
+    clear_shape_cache()
 
 
 def clear_shape_cache() -> None:
-    _state.shape_cache.clear()
-    _state.cache_hits = 0
-    _state.cache_misses = 0
+    """Drop this thread's shape cache (other threads re-sync on epoch bump)."""
+    _local.shape_cache.clear()
+    _local.cache_hits = 0
+    _local.cache_misses = 0
 
 
 def set_shape_cache_cap(cap: int) -> None:
     """Bound the dispatch cache; oldest (LRU) shape keys are evicted."""
-    _state.shape_cache_cap = max(int(cap), 1)
-    while len(_state.shape_cache) > _state.shape_cache_cap:
-        _state.shape_cache.popitem(last=False)
+    _local.shape_cache_cap = max(int(cap), 1)
+    while len(_local.shape_cache) > _local.shape_cache_cap:
+        _local.shape_cache.popitem(last=False)
 
 
 def shape_cache_stats() -> dict:
     """Hit/miss counters for the dispatch shape cache (reset on policy swap)."""
     return {
-        "hits": _state.cache_hits,
-        "misses": _state.cache_misses,
-        "size": len(_state.shape_cache),
-        "cap": _state.shape_cache_cap,
+        "hits": _local.cache_hits,
+        "misses": _local.cache_misses,
+        "size": len(_local.shape_cache),
+        "cap": _local.shape_cache_cap,
     }
 
 
-def _select(op: str, problem: tuple, select_fn):
+def _select(op: str, problem: tuple, policy: KernelPolicy, select_fn):
     """Policy consultation with LRU shape memoization.
 
     Repeated traces of the same problem shape (the serving engine's
     prefill/decode retraces) hit a dict lookup instead of featurize+predict.
     Policies whose selections are not a pure function of the shape (e.g. the
     exploring ``OnlinePolicy``) opt out via ``cacheable = False``.
+
+    ``policy`` is the reference the caller already synced via :func:`_policy`
+    — passing it through keeps one selection pinned to one policy even if a
+    hot swap lands mid-call.
     """
-    cacheable = bool(getattr(_state.policy, "cacheable", True))
+    cacheable = bool(getattr(policy, "cacheable", True))
     key = (op, *problem)
     if cacheable:
-        cfg = _state.shape_cache.get(key, _MISS)
+        cfg = _local.shape_cache.get(key, _MISS)
         if cfg is not _MISS:
-            _state.cache_hits += 1
-            _state.shape_cache.move_to_end(key)
-            if _state.log_enabled:
-                _state.selection_log.append((op, problem, cfg))
+            _local.cache_hits += 1
+            _local.shape_cache.move_to_end(key)
+            if _shared.log_enabled:
+                _shared.selection_log.append((op, problem, cfg))
             return cfg
     cfg = select_fn()
     if cacheable:
-        _state.cache_misses += 1
-        _state.shape_cache[key] = cfg
-        if len(_state.shape_cache) > _state.shape_cache_cap:
-            _state.shape_cache.popitem(last=False)
-    if _state.log_enabled:
-        _state.selection_log.append((op, problem, cfg))
+        _local.cache_misses += 1
+        _local.shape_cache[key] = cfg
+        if len(_local.shape_cache) > _local.shape_cache_cap:
+            _local.shape_cache.popitem(last=False)
+    if _shared.log_enabled:
+        _shared.selection_log.append((op, problem, cfg))
     return cfg
 
 
 def select_matmul_config(m: int, k: int, n: int, batch: int = 1) -> MatmulConfig | None:
     """The launcher-side selection path on its own (what ``matmul`` runs at
     trace time); ``None`` when no policy is installed."""
-    if _state.policy is None:
+    pol = _policy()
+    if pol is None:
         return None
-    return _select("matmul", (m, k, n, batch), lambda: _state.policy.select_matmul(m, k, n, batch))
+    return _select("matmul", (m, k, n, batch), pol, lambda: pol.select_matmul(m, k, n, batch))
 
 
 # ---------------------------------------------------------------------------
@@ -297,11 +368,11 @@ def matmul(lhs: jax.Array, rhs: jax.Array, *, out_dtype=None, config: MatmulConf
         batch *= d
     if config is None:
         config = select_matmul_config(m, k, n, batch)
-    if not _state.use_pallas:
+    if not _shared.use_pallas:
         out = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
         return out.astype(out_dtype or lhs.dtype)
     lhs2 = lhs.reshape(m * batch, k)
-    out = matmul_pallas(lhs2, rhs, config or DEFAULT_CONFIG, out_dtype=out_dtype, interpret=_state.interpret)
+    out = matmul_pallas(lhs2, rhs, config or DEFAULT_CONFIG, out_dtype=out_dtype, interpret=_shared.interpret)
     return out.reshape(*lead, n)
 
 
@@ -323,14 +394,15 @@ def attention(
     """
     sq, d = q.shape[-2:]
     skv = k.shape[-2]
-    if config is None and _state.policy is not None:
-        config = _select("attention", (sq, skv, d), lambda: _state.policy.select_attention(sq, skv, d))
-    if not _state.use_pallas:
+    pol = _policy()
+    if config is None and pol is not None:
+        config = _select("attention", (sq, skv, d), pol, lambda: pol.select_attention(sq, skv, d))
+    if not _shared.use_pallas:
         fn = lambda q_, k_, v_: flash_attention_ref(q_, k_, v_, causal=causal, scale=scale)
     else:
         cfg = config or DEFAULT_ATTN_CONFIG
         fn = lambda q_, k_, v_: flash_attention_pallas(
-            q_, k_, v_, cfg, causal=causal, scale=scale, interpret=_state.interpret
+            q_, k_, v_, cfg, causal=causal, scale=scale, interpret=_shared.interpret
         )
     for _ in range(q.ndim - 2):
         fn = jax.vmap(fn)
@@ -347,9 +419,10 @@ def wkv(r, k, v, logw, u, state=None, *, config: WkvConfig | None = None):
     kernel when enabled; otherwise the jnp reference (identical math).
     """
     b, s, h, hd = r.shape
-    if config is None and _state.policy is not None and hasattr(_state.policy, "select_wkv"):
-        config = _select("wkv", (s, hd), lambda: _state.policy.select_wkv(s, hd))
-    if not _state.use_pallas:
+    pol = _policy()
+    if config is None and pol is not None and hasattr(pol, "select_wkv"):
+        config = _select("wkv", (s, hd), pol, lambda: pol.select_wkv(s, hd))
+    if not _shared.use_pallas:
         from .ref import wkv_ref
 
         return wkv_ref(r, k, v, logw, u, state)
@@ -359,7 +432,7 @@ def wkv(r, k, v, logw, u, state=None, *, config: WkvConfig | None = None):
         state = _jnp.zeros((b, h, hd, hd), _jnp.float32)
     cfg = config or DEFAULT_WKV_CONFIG
     one = lambda rr, kk, vv, ww, uu, ss: wkv_pallas(
-        rr, kk, vv, ww, uu, ss, cfg, interpret=_state.interpret
+        rr, kk, vv, ww, uu, ss, cfg, interpret=_shared.interpret
     )
     fn = jax.vmap(jax.vmap(one, in_axes=(1, 1, 1, 1, 0, 0)), in_axes=(0, 0, 0, 0, None, 0))
     o, s_out = fn(r, k, v, logw, u, state)
@@ -376,16 +449,17 @@ def ssm_scan(dtx, dta, b, v_c, state=None, *, config: SsmConfig | None = None):
     (d, N) state in VMEM (no (B,S,d,N) HBM materialization); jnp path is the
     associative-scan oracle.
     """
-    if config is None and _state.policy is not None and hasattr(_state.policy, "select_ssm"):
+    pol = _policy()
+    if config is None and pol is not None and hasattr(pol, "select_ssm"):
         s_len, d_in = dtx.shape[1], dtx.shape[2]
-        config = _select("ssm_scan", (s_len, d_in), lambda: _state.policy.select_ssm(s_len, d_in))
-    if not _state.use_pallas:
+        config = _select("ssm_scan", (s_len, d_in), pol, lambda: pol.select_ssm(s_len, d_in))
+    if not _shared.use_pallas:
         from .ref import ssm_scan_ref
 
         return ssm_scan_ref(dtx, dta, b, v_c, state)
     cfg = config or DEFAULT_SSM_CONFIG
     one = lambda x_, a_, b_, c_, s_: ssm_scan_pallas(
-        x_, a_, b_, c_, s_, cfg, interpret=_state.interpret
+        x_, a_, b_, c_, s_, cfg, interpret=_shared.interpret
     )
     if state is None:
         import jax.numpy as _jnp

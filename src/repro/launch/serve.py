@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
+from repro.core.retune import DEFAULT_DRIFT_THRESHOLD, DEFAULT_MIN_EVENTS
 from repro.kernels import ops
 from repro.models.model import build_model
 from repro.serve.engine import Request, ServingEngine
@@ -31,6 +32,13 @@ def main(argv=None) -> None:
                     help="multi-device DeploymentBundle json (auto-installs for this host)")
     ap.add_argument("--serve-device", default=None,
                     help="override device name for --bundle resolution (default: detect)")
+    ap.add_argument("--retune-interval", type=int, default=None, metavar="STEPS",
+                    help="check telemetry drift every N decode steps and "
+                         "incrementally retune + hot-swap the policy when it fires")
+    ap.add_argument("--drift-threshold", type=float, default=DEFAULT_DRIFT_THRESHOLD,
+                    help="Jensen-Shannon divergence (0-1) that triggers a retune")
+    ap.add_argument("--retune-min-events", type=int, default=DEFAULT_MIN_EVENTS,
+                    help="telemetry floor before a drift check may trigger")
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch).reduced()
@@ -56,6 +64,8 @@ def main(argv=None) -> None:
     engine = ServingEngine(
         model, params, max_batch=args.max_batch, cache_len=args.cache_len,
         extra_inputs=extra, bundle=bundle, device=args.serve_device,
+        retune_interval=args.retune_interval, drift_threshold=args.drift_threshold,
+        retune_min_events=args.retune_min_events,
     )
     if bundle is not None:
         print(f"bundle installed: serving with the {engine.device!r} deployment")
@@ -74,6 +84,16 @@ def main(argv=None) -> None:
     if status.exhausted:
         print(f"WARNING: step budget exhausted with {status.in_flight} in-flight / "
               f"{status.queued} queued requests unfinished")
+    for ev in engine.retune_events:
+        if ev.swapped:
+            verdict = "retuned + hot-swapped"
+        elif ev.drift_score >= args.drift_threshold:
+            verdict = f"below event floor ({ev.n_events}/{args.retune_min_events})"
+        else:
+            verdict = "no drift"
+        print(f"  retune check @ step {ev.step}: drift {ev.drift_score:.3f} "
+              f"(unseen {ev.unseen_fraction:.1%}) -> {verdict} "
+              f"[{ev.n_configs} kernels, policy epoch {ev.epoch}]")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.output[:10]}...")
 

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.retune import DEFAULT_DRIFT_THRESHOLD, DEFAULT_MIN_EVENTS
+
 
 @dataclasses.dataclass
 class Request:
@@ -35,6 +37,25 @@ class Request:
     done: bool = False
     state: str = "queued"  # queued | active | done | starved
     truncated_tokens: int = 0  # prompt tokens dropped by sliding-window admit
+
+
+@dataclasses.dataclass(frozen=True)
+class RetuneEvent:
+    """One firing of the continuous tuning loop (DESIGN.md §8).
+
+    ``swapped`` distinguishes a drift check that triggered a retune + policy
+    hot-swap from one that merely looked; ``epoch`` is the ops-layer policy
+    epoch after the swap (monotonic across the process).
+    """
+
+    step: int
+    drift_score: float
+    unseen_fraction: float
+    swapped: bool
+    triggered: bool  # False + high score means the min-events floor blocked it
+    n_events: int
+    n_configs: int
+    epoch: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +94,9 @@ class ServingEngine:
         extra_inputs: dict | None = None,
         bundle=None,
         device: str | None = None,
+        retune_interval: int | None = None,
+        drift_threshold: float = DEFAULT_DRIFT_THRESHOLD,
+        retune_min_events: int = DEFAULT_MIN_EVENTS,
     ):
         # A serving host consumes the multi-device artifact directly: install
         # the Deployment resolved for this host (nearest tuned sibling when
@@ -100,6 +124,19 @@ class ServingEngine:
 
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self._prefill_cache = {}
+
+        # -- continuous tuning loop (DESIGN.md §8) ---------------------------
+        self.retune_interval = retune_interval
+        self.drift_threshold = drift_threshold
+        self.retune_min_events = retune_min_events
+        self.retune_events: list[RetuneEvent] = []
+        self._last_retune_check = 0
+        if retune_interval is not None:
+            from repro.kernels import ops
+
+            # Telemetry source: the dispatch-layer selection log (cache hits
+            # included, so the histogram reflects real traffic frequencies).
+            ops.set_selection_logging(True)
 
     def dispatch_stats(self) -> dict:
         """Kernel-selection shape-cache counters (convenience passthrough).
@@ -182,6 +219,75 @@ class ServingEngine:
                 self.slots[i] = None
         self.steps += 1
 
+    # -- continuous tuning -----------------------------------------------------
+    def maybe_retune(self, *, force: bool = False, online=None) -> RetuneEvent | None:
+        """Telemetry -> drift check -> incremental retune -> policy hot-swap.
+
+        Called between ``run()`` decode steps when ``retune_interval`` is set,
+        or directly from an operator's background hook (the ops-layer policy
+        registry is process-global, so a swap from another thread reaches the
+        serving thread atomically).  Returns the :class:`RetuneEvent` when a
+        drift check actually ran (``swapped=False`` if it didn't trigger),
+        ``None`` when there is no deployment or not enough telemetry yet.
+        ``online`` optionally names a hybrid-mode ``OnlinePolicy``: its arm
+        measurements ride into the snapshot, and after a swap it adopts the
+        retuned deployment as its prior (``set_prior``).
+
+        The hot swap is zero-downtime: KV caches, slots, and in-flight
+        requests are untouched; compiled programs for *already-traced* shapes
+        keep their old kernels until natural retrace, while the cleared
+        prefill/decode jit wrappers make every subsequent trace consult the
+        new policy.
+        """
+        from repro.core.dispatch import Deployment
+        from repro.core.retune import TelemetrySnapshot, detect_drift, incremental_retune
+        from repro.kernels import ops
+
+        dep = self.deployment
+        if dep is None:
+            pol = ops.get_kernel_policy()
+            dep = pol if isinstance(pol, Deployment) else None
+        if dep is None:
+            return None
+        snap = TelemetrySnapshot.from_selection_log(ops.selection_log(), online=online)
+        if snap.n_events == 0:
+            return None
+        report = detect_drift(
+            snap, dep, threshold=self.drift_threshold, min_events=self.retune_min_events
+        )
+        if not (report.triggered or force):
+            ev = RetuneEvent(self.steps, report.score, report.unseen_fraction,
+                             False, report.triggered, report.n_events,
+                             len(dep.configs), ops.policy_epoch())
+            self.retune_events.append(ev)
+            return ev
+        result = incremental_retune(
+            dep, snap, report=report, threshold=self.drift_threshold,
+            min_events=self.retune_min_events,
+        )
+        new_dep = result.deployment
+        if self.device is not None and ops.active_device() == self.device:
+            ops.set_kernel_policy_for_device(self.device, new_dep)  # registry hot-swap
+        else:
+            ops.set_kernel_policy(new_dep)
+        if online is not None and hasattr(online, "set_prior"):
+            # A hybrid-mode OnlinePolicy must adopt the retuned deployment as
+            # its prior (and drop its prior-derived attention cache with it).
+            online.set_prior(new_dep)
+        self.deployment = new_dep
+        ops.clear_selection_log()  # fresh telemetry window for the new policy
+        # Invalidate this engine's compiled programs so the next admission /
+        # decode trace re-runs kernel selection under the swapped-in policy.
+        # Engine state (cache pool, slots, positions) survives: in-flight
+        # requests continue without a drop, paying only a retrace.
+        self._prefill_cache.clear()
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        ev = RetuneEvent(self.steps, report.score, report.unseen_fraction,
+                         True, report.triggered, report.n_events,
+                         len(new_dep.configs), ops.policy_epoch())
+        self.retune_events.append(ev)
+        return ev
+
     # -- public ---------------------------------------------------------------
     def run(self, requests: list[Request], *, max_steps: int = 10_000) -> EngineStatus:
         """Serve a request list with continuous batching until done or budget.
@@ -201,6 +307,12 @@ class ServingEngine:
                 self._admit(queue.pop(0), slot)
             if any(s is not None for s in self.slots):
                 self._decode_all()
+            if (
+                self.retune_interval is not None
+                and self.steps - self._last_retune_check >= self.retune_interval
+            ):
+                self._last_retune_check = self.steps
+                self.maybe_retune()
         exhausted = bool(queue or any(s is not None for s in self.slots))
         for r in queue:
             r.state = "starved"

@@ -87,7 +87,7 @@ def test_bundle_roundtrip_two_devices(tmp_path, bundle2):
     path = tmp_path / "bundle.json"
     bundle2.save(path)
     blob = json.loads(path.read_text())
-    assert blob["version"] == 3 and blob["format"] == "bundle"
+    assert blob["version"] == 4 and blob["format"] == "bundle"
     assert blob["deployments"]["tpu_v5e"]["version"] == 2  # embeds v2 blobs
     back = DeploymentBundle.load(path)
     assert back.devices == ["tpu_v4", "tpu_v5e"]

@@ -1,0 +1,475 @@
+"""Continuous tuning loop: telemetry, drift, incremental retune, hot-swap."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import retune
+from repro.core.bundle import DeploymentBundle
+from repro.core.dataset import build_model_dataset, synthetic_problems
+from repro.core.dispatch import Deployment
+from repro.core.online import OnlinePolicy
+from repro.core.tuner import tune
+from repro.kernels import ops
+from repro.kernels.matmul import config_space
+from repro.kernels.ops import FixedPolicy
+
+
+@pytest.fixture(autouse=True)
+def _clean_policy():
+    yield
+    ops.clear_device_policies()
+    ops.set_kernel_policy(None)
+    ops.set_selection_logging(False)
+    ops.clear_selection_log()
+
+
+@pytest.fixture(scope="module")
+def tuned():
+    ds = build_model_dataset(synthetic_problems(80), device_name="tpu_v5e")
+    return tune(ds, n_kernels=6), ds
+
+
+def _shifted_snapshot(n: int = 100, seed: int = 1) -> retune.TelemetrySnapshot:
+    """Decode-heavy deep-k traffic, disjoint from the synthetic tuning mix."""
+    rng = np.random.default_rng(seed)
+    snap = retune.TelemetrySnapshot()
+    for _ in range(n):
+        p = (int(rng.choice([1, 2, 4])), int(rng.choice([8192, 16384])),
+             int(rng.choice([1024, 2048])), 1)
+        b = retune.shape_bucket(p)
+        snap.matmul_counts[b] = snap.matmul_counts.get(b, 0) + 1
+        snap.problems[b] = p
+        snap.n_events += 1
+    return snap
+
+
+def _snapshot_of(problems) -> retune.TelemetrySnapshot:
+    snap = retune.TelemetrySnapshot()
+    for p in problems:
+        b = retune.shape_bucket(p)
+        snap.matmul_counts[b] = snap.matmul_counts.get(b, 0) + 1
+        snap.problems[b] = tuple(p)
+        snap.n_events += 1
+    return snap
+
+
+# ---------------------------------------------------------------------------
+# provenance + drift metric
+# ---------------------------------------------------------------------------
+def test_train_distribution_is_json_roundtrippable(tuned):
+    res, ds = tuned
+    dist = res.deployment.meta["train_distribution"]
+    back = json.loads(json.dumps(dist))
+    assert back == dist
+    assert abs(sum(e["w"] for e in dist["buckets"].values()) - 1.0) < 1e-9
+    # keys parse back to the buckets of the training problems
+    keys = {retune.parse_bucket_key(k) for k in dist["buckets"]}
+    assert keys == {retune.shape_bucket(p) for p in res.train.problems}
+
+
+def test_js_divergence_bounds():
+    p = {(1,): 0.5, (2,): 0.5}
+    assert retune.js_divergence(p, p) == pytest.approx(0.0, abs=1e-12)
+    q = {(3,): 1.0}
+    assert retune.js_divergence(p, q) == pytest.approx(1.0, abs=1e-9)
+
+
+def test_no_drift_on_training_distribution(tuned):
+    res, _ = tuned
+    snap = _snapshot_of(res.train.problems)
+    rep = retune.detect_drift(snap, res.deployment)
+    assert rep.score == pytest.approx(0.0, abs=1e-9)
+    assert not rep.triggered and rep.unseen_fraction == 0.0
+
+
+def test_drift_fires_on_shifted_traffic(tuned):
+    res, _ = tuned
+    rep = retune.detect_drift(_shifted_snapshot(), res.deployment)
+    assert rep.triggered and rep.score > 0.5 and rep.unseen_fraction > 0.5
+    assert rep.drifted_buckets  # re-harvest targets identified
+
+
+def test_drift_respects_min_events(tuned):
+    res, _ = tuned
+    rep = retune.detect_drift(_shifted_snapshot(5), res.deployment, min_events=32)
+    assert rep.score > 0.5 and not rep.triggered
+
+
+def test_no_provenance_means_everything_unseen(tuned):
+    res, _ = tuned
+    bare = Deployment(
+        device="tpu_v5e", configs=res.deployment.configs,
+        classifier=res.deployment.classifier, meta={},
+    )
+    rep = retune.detect_drift(_shifted_snapshot(), bare)
+    assert rep.score == 1.0 and rep.unseen_fraction == 1.0 and rep.triggered
+
+
+def test_snapshot_from_selection_log_counts_cache_hits(tuned):
+    res, _ = tuned
+    ops.set_kernel_policy(res.deployment)
+    ops.set_selection_logging(True)
+    ops.clear_selection_log()
+    for _ in range(5):  # 1 miss + 4 cache hits: all must count as traffic
+        ops.select_matmul_config(512, 784, 512, 16)
+    snap = retune.TelemetrySnapshot.from_selection_log(ops.selection_log())
+    b = retune.shape_bucket((512, 784, 512, 16))
+    assert snap.matmul_counts[b] == 5 and snap.n_events == 5
+    assert snap.problems[b] == (512, 784, 512, 16)
+
+
+# ---------------------------------------------------------------------------
+# incremental retune
+# ---------------------------------------------------------------------------
+def test_incremental_retune_reduces_drift_and_updates_provenance(tuned):
+    res, _ = tuned
+    snap = _shifted_snapshot()
+    rep = retune.detect_drift(snap, res.deployment)
+    out = retune.incremental_retune(res.deployment, snap, report=rep)
+    nd = out.deployment
+    assert out.warm_started and out.n_harvested > 0
+    assert len(nd.configs) == len(res.deployment.configs)
+    assert nd.meta["retune_count"] == 1
+    assert nd.attention_configs == res.deployment.attention_configs  # carried over
+    assert nd.attention_tree is res.deployment.attention_tree
+    # the retuned artifact is measurably closer to the live distribution
+    rep2 = retune.detect_drift(snap, nd)
+    assert rep2.score < rep.score
+    # and still answers the KernelPolicy protocol on live shapes
+    cfg = nd.select_matmul(1, 8192, 1024, 1)
+    assert cfg in nd.configs
+    # blob round-trip keeps provenance (flat v2 payload)
+    back = Deployment.from_blob(nd.to_blob())
+    assert back.meta["train_distribution"] == nd.meta["train_distribution"]
+    assert back.meta["retune_count"] == 1
+
+
+def test_incremental_retune_classifier_tracks_live_buckets(tuned):
+    """Traffic-weighted refit: live shapes get on-distribution predictions."""
+    res, _ = tuned
+    snap = _shifted_snapshot(200)
+    nd = retune.incremental_retune(res.deployment, snap).deployment
+    from repro.core.perfmodel import TPU_V5E, predict_time
+
+    worse = 0
+    for p in snap.problems.values():
+        t_new = predict_time(p, nd.select_matmul(*p), TPU_V5E)
+        t_old = predict_time(p, res.deployment.select_matmul(*p), TPU_V5E)
+        worse += t_new > t_old * 1.05
+    # the retuned deployment must not lose on the shapes it retuned FOR
+    assert worse <= len(snap.problems) // 3
+
+
+def test_incremental_retune_rejects_unmodeled_device(tuned):
+    res, _ = tuned
+    dep = Deployment(device="host_cpu", configs=res.deployment.configs,
+                     classifier=res.deployment.classifier, meta={})
+    with pytest.raises(ValueError, match="dataset_builder"):
+        retune.incremental_retune(dep, _shifted_snapshot())
+
+
+def test_warm_start_kmeans_respects_init_centers():
+    from repro.core.cluster import kmeans
+
+    rng = np.random.default_rng(0)
+    x = np.vstack([rng.normal(0, 0.1, (20, 3)), rng.normal(5, 0.1, (20, 3))])
+    labels, centers = kmeans(x, 2, init_centers=np.array([[0.0, 0, 0], [5.0, 5, 5]]))
+    assert centers.shape == (2, 3)
+    assert len(set(labels[:20])) == 1 and len(set(labels[20:])) == 1
+
+
+def test_fit_weighted_replicates_for_weightless_classifiers():
+    from repro.core.classify import KNeighborsClassifier, fit_weighted
+
+    x = np.array([[0.0], [1.0], [2.0], [3.0]])
+    y = np.array([0, 0, 1, 1])
+    clf = fit_weighted(KNeighborsClassifier(k=1), x, y, np.array([1.0, 1.0, 0.0, 4.0]))
+    assert list(clf.predict(np.array([[2.9]]))) == [1]
+
+
+# ---------------------------------------------------------------------------
+# bundle v4 provenance
+# ---------------------------------------------------------------------------
+def test_bundle_v4_provenance_roundtrip(tmp_path, tuned):
+    res, _ = tuned
+    bundle = DeploymentBundle({"tpu_v5e": res.deployment})
+    path = tmp_path / "b.json"
+    bundle.save(path)
+    blob = json.loads(path.read_text())
+    assert blob["version"] == 4
+    assert "train_distribution" in blob["provenance"]["tpu_v5e"]
+    back = DeploymentBundle.load(path)
+    got = back.deployments["tpu_v5e"].meta["train_distribution"]
+    assert got == res.deployment.meta["train_distribution"]
+
+
+def test_bundle_v3_blob_without_provenance_still_loads(tmp_path, tuned):
+    res, _ = tuned
+    blob = DeploymentBundle({"tpu_v5e": res.deployment}).to_blob()
+    blob["version"] = 3
+    del blob["provenance"]
+    # strip meta provenance to simulate a genuinely old artifact
+    blob["deployments"]["tpu_v5e"]["meta"] = {}
+    back = DeploymentBundle.from_blob(blob)
+    assert back.devices == ["tpu_v5e"]
+    assert "train_distribution" not in back.deployments["tpu_v5e"].meta
+
+
+# ---------------------------------------------------------------------------
+# OnlinePolicy prior hot-swap (regression: stale _attn_cache)
+# ---------------------------------------------------------------------------
+def test_online_policy_set_prior_invalidates_attn_cache(tuned):
+    res, _ = tuned
+    dep = res.deployment
+
+    class OtherPrior:
+        def select_attention(self, sq, skv, d):
+            return "other"
+
+        def select_matmul(self, m, k, n, batch):
+            return dep.configs[0]
+
+    pol = OnlinePolicy(lambda p, c: 1.0, dep.configs, prior=dep)
+    first = pol.select_attention(128, 2048, 128)
+    assert first == dep.select_attention(128, 2048, 128)
+    assert pol.select_attention(128, 2048, 128) is first  # cached
+    pol.set_prior(OtherPrior())
+    # the swapped-in prior must be consulted, not the stale cache entry
+    assert pol.select_attention(128, 2048, 128) == "other"
+
+
+def test_online_policy_measurements_export():
+    cands = list(config_space())[:3]
+    pol = OnlinePolicy(lambda p, c: 0.5, cands)
+    for _ in range(3):
+        pol.select_matmul(512, 784, 512, 16)
+    meas = pol.measurements()
+    b = retune.shape_bucket((512, 784, 512, 16))
+    assert b in meas and len(meas[b]) == 3
+    assert all(t == pytest.approx(0.5) and n == 1 for _c, t, n in meas[b])
+    snap = retune.TelemetrySnapshot.from_selection_log([], online=pol)
+    assert b in snap.observed
+
+
+# ---------------------------------------------------------------------------
+# hot-swap under dispatch (regression: stale shape-cache entries)
+# ---------------------------------------------------------------------------
+def _two_policies():
+    cfgs = list(config_space())
+    a, b = cfgs[0], cfgs[-1]
+    assert a != b
+    return FixedPolicy(matmul_config=a), FixedPolicy(matmul_config=b), a, b
+
+
+def test_hot_swap_invalidates_same_thread_shape_cache():
+    pol_a, pol_b, cfg_a, cfg_b = _two_policies()
+    ops.set_kernel_policy_for_device("tpu_v5e", pol_a)
+    ops.activate_device("tpu_v5e")
+    assert ops.select_matmul_config(256, 256, 256, 1) == cfg_a
+    assert ops.select_matmul_config(256, 256, 256, 1) == cfg_a  # cache hit
+    assert ops.shape_cache_stats()["hits"] >= 1
+    ops.set_kernel_policy_for_device("tpu_v5e", pol_b)  # hot swap
+    # the shape-memo entry from pol_a must not answer for pol_b
+    assert ops.select_matmul_config(256, 256, 256, 1) == cfg_b
+
+
+def test_hot_swap_epoch_bumps_only_on_live_device():
+    pol_a, pol_b, *_ = _two_policies()
+    ops.set_kernel_policy_for_device("tpu_v5e", pol_a)
+    ops.activate_device("tpu_v5e")
+    e0 = ops.policy_epoch()
+    ops.set_kernel_policy_for_device("tpu_v4", pol_b)  # inactive: registration only
+    assert ops.policy_epoch() == e0
+    ops.set_kernel_policy_for_device("tpu_v5e", pol_b)  # live: swap
+    assert ops.policy_epoch() > e0
+
+
+def test_concurrent_dispatch_never_sees_stale_policy_cache():
+    """Workers hammering ops.matmul selection during a hot swap: once a thread
+    has observed the new policy it may never fall back to a cached config of
+    the old one, and every thread converges to the new policy."""
+    pol_a, pol_b, cfg_a, cfg_b = _two_policies()
+    ops.set_kernel_policy_for_device("tpu_v5e", pol_a)
+    ops.activate_device("tpu_v5e")
+
+    stop = threading.Event()
+    picks: dict[int, list] = {}
+    errors: list = []
+
+    def worker(wid: int):
+        mine = picks[wid] = []
+        try:
+            while not stop.is_set():
+                mine.append(ops.select_matmul_config(256, 256, 256, 1))
+            mine.append(ops.select_matmul_config(256, 256, 256, 1))  # post-stop
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    # let every worker populate its thread-local shape cache with cfg_a
+    import time
+
+    time.sleep(0.05)
+    ops.set_kernel_policy_for_device("tpu_v5e", pol_b)  # the hot swap
+    time.sleep(0.05)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not errors
+    for wid, mine in picks.items():
+        assert mine, f"worker {wid} made no selections"
+        assert set(mine) <= {cfg_a, cfg_b}
+        # monotone: once cfg_b is observed, cfg_a never reappears
+        if cfg_b in mine:
+            assert cfg_a not in mine[mine.index(cfg_b):], f"worker {wid} saw stale cache"
+        # eventual consistency: the selection made after the swap+stop is new
+        assert mine[-1] == cfg_b, f"worker {wid} never adopted the swapped policy"
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+class _ToyModel:
+    vocab = 17
+
+    def init_cache(self, b, cache_len):
+        import jax.numpy as jnp
+
+        return {"k": jnp.zeros((b, cache_len), jnp.float32)}
+
+    def prefill(self, params, batch, cache_len):
+        import jax
+
+        tokens = batch["tokens"]
+        cache = self.init_cache(tokens.shape[0], cache_len)
+        logits = jax.nn.one_hot((tokens[:, -1:] + 1) % self.vocab, self.vocab)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, positions):
+        import jax
+
+        return jax.nn.one_hot((tokens + 1) % self.vocab, self.vocab), cache
+
+
+def test_engine_maybe_retune_swaps_policy(tuned):
+    from repro.serve.engine import ServingEngine
+
+    res, _ = tuned
+    ops.set_kernel_policy(res.deployment)
+    eng = ServingEngine(_ToyModel(), params={}, max_batch=1, cache_len=16,
+                        retune_interval=10_000, retune_min_events=8)
+    assert ops.selection_logging_enabled()
+    ops.clear_selection_log()
+    rng = np.random.default_rng(2)
+    for _ in range(50):  # shifted live traffic through the dispatch layer
+        ops.select_matmul_config(int(rng.choice([1, 2])), 16384, 2048, 1)
+    eng._prefill_cache[8] = object()  # a compiled program that must be dropped
+    ev = eng.maybe_retune()
+    assert ev is not None and ev.swapped
+    assert eng.deployment is not None and eng.deployment is not res.deployment
+    assert eng.deployment.meta["retune_count"] == 1
+    assert ops.get_kernel_policy() is eng.deployment  # live policy swapped
+    assert eng._prefill_cache == {}  # compiled programs invalidated
+    assert ops.selection_log() == []  # fresh telemetry window
+
+
+def test_engine_maybe_retune_propagates_prior_to_online_policy(tuned):
+    """A hybrid-mode OnlinePolicy adopts the retuned deployment as prior."""
+    from repro.serve.engine import ServingEngine
+
+    res, _ = tuned
+    ops.set_kernel_policy(res.deployment)
+    pol = OnlinePolicy(lambda p, c: 1.0, res.deployment.configs, prior=res.deployment)
+    pol.select_attention(128, 2048, 128)  # populate the prior-derived cache
+    eng = ServingEngine(_ToyModel(), params={}, max_batch=1, cache_len=16,
+                        retune_interval=10_000, retune_min_events=8)
+    ops.clear_selection_log()
+    for _ in range(40):
+        ops.select_matmul_config(1, 16384, 2048, 1)
+    ev = eng.maybe_retune(online=pol)
+    assert ev is not None and ev.swapped
+    assert pol.prior is eng.deployment  # prior hot-swapped with the policy
+    assert not pol._attn_cache  # and its stale attention cache dropped
+
+
+def test_engine_maybe_retune_no_events_is_noop(tuned):
+    from repro.serve.engine import ServingEngine
+
+    res, _ = tuned
+    ops.set_kernel_policy(res.deployment)
+    eng = ServingEngine(_ToyModel(), params={}, max_batch=1, cache_len=16,
+                        retune_interval=10_000)
+    ops.clear_selection_log()
+    assert eng.maybe_retune() is None
+    assert ops.get_kernel_policy() is res.deployment
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py exit-code propagation (the CI perf-gate depends on it)
+# ---------------------------------------------------------------------------
+def test_benchmark_runner_exits_nonzero_on_failure(tmp_path, monkeypatch, capsys):
+    import benchmarks.run as run_mod
+
+    class Boom:
+        @staticmethod
+        def main(quick=False):
+            raise RuntimeError("boom")
+
+    class Fine:
+        @staticmethod
+        def main(quick=False):
+            return [("metric", 1.0, "derived")]
+
+    out = tmp_path / "rows.json"
+    monkeypatch.setitem(run_mod.MODULES, "fig2", Boom)
+    monkeypatch.setitem(run_mod.MODULES, "fig3", Fine)
+    rc = run_mod.main(["--only", "fig2", "--json", str(out)])
+    assert rc == 1
+    blob = json.loads(out.read_text())
+    assert blob["failures"] and blob["failures"][0][0] == "fig2"
+    assert run_mod.main(["--only", "fig3"]) == 0
+    capsys.readouterr()
+
+
+def test_perf_gate_flags_missing_baseline_metric():
+    """A renamed/removed gated metric must fail the gate, not shrink it."""
+    from benchmarks.perf_gate import gate
+
+    verdicts, regressions = gate(
+        {"fit_speedup": (10.0, "higher")},
+        {"fit_speedup": 9.0, "predict_speedup": 5.0},
+        tolerance=0.25,
+    )
+    assert verdicts["fit_speedup"]["ok"]
+    assert not verdicts["predict_speedup"]["ok"]
+    assert any("missing from the current run" in r for r in regressions)
+
+
+def test_perf_gate_direction_aware_tolerance():
+    from benchmarks.perf_gate import gate
+
+    base = {"fit_speedup": 10.0, "fig7_x_tuned8_ms": 1000.0}
+    _, regs = gate({"fit_speedup": (7.6, "higher"),
+                    "fig7_x_tuned8_ms": (1240.0, "lower")}, base, 0.25)
+    assert not regs  # both inside 25% in the good-enough direction
+    _, regs = gate({"fit_speedup": (7.4, "higher"),
+                    "fig7_x_tuned8_ms": (1260.0, "lower")}, base, 0.25)
+    assert len(regs) == 2  # both just past the line
+
+
+def test_benchmark_runner_catches_module_systemexit(monkeypatch, capsys):
+    import benchmarks.run as run_mod
+
+    class Tripwire:
+        @staticmethod
+        def main(quick=False):
+            raise SystemExit("speedup regressed")
+
+    monkeypatch.setitem(run_mod.MODULES, "fig2", Tripwire)
+    rc = run_mod.main(["--only", "fig2"])
+    assert rc == 1
+    capsys.readouterr()
