@@ -1,0 +1,114 @@
+"""Tuned vs default dispatch for the recurrence kernel families (wkv, ssm).
+
+The generic-registry analogue of fig7: for each non-matmul family, run the
+full prune+classify pipeline (``tuner.tune_family``) and compare the
+classifier-picked kernel against the single default config an untuned
+library would ship, over the family's harvested problem set plus a
+serving-flavoured synthetic mix.  All numbers come from the family's
+analytic perf model, so they are fully deterministic and CI-gateable:
+
+  * ``families_<name>_speedup``   geomean(picked / default) gflops — the
+                                  headline "tuning this family pays" number
+                                  (gated, higher is better);
+  * oracle fraction rides in the derived column (how close the tree gets to
+    the best deployed kernel).
+
+A dispatch-throughput smoke (shape-memoized ``select_*_config`` calls/s)
+is recorded in the JSON artifact but never gated (machine-dependent).
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only families
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.families import get_family
+from repro.core.selection import geomean_fraction
+from repro.core.tuner import tune_family
+from repro.kernels import ops
+
+from .common import save_json
+
+FAMILIES = ("wkv", "ssm_scan")
+
+# Serving-flavoured probe shapes beyond the harvest (decode bursts, reduced
+# models, chunked prefill) — the traffic a serving host actually sees.
+PROBES = {
+    "wkv": [(1, 64), (64, 64), (256, 64), (1024, 64), (8192, 64), (128, 16)],
+    "ssm_scan": [(64, 1600), (256, 1600), (1024, 1600), (96, 48), (512, 256)],
+}
+
+
+def bench_family(name: str, quick: bool = False) -> dict:
+    fam = get_family(name)
+    res = tune_family(name)
+    space = list(fam.config_space())
+    problems = sorted(set(fam.harvest(None)) | set(PROBES.get(name, [])))
+    if quick:
+        problems = problems[:: max(1, len(problems) // 6)]
+    perf = fam.perf_matrix(problems, space, "tpu_v5e")
+    j_default = space.index(fam.default_config)
+
+    feats = fam.features(problems)
+    pred = np.clip(res.tree.predict(feats), 0, len(res.configs) - 1)
+    cols = [space.index(c) for c in res.configs]
+    picked = perf[np.arange(len(problems)), [cols[i] for i in pred]]
+    default = perf[:, j_default]
+    best = perf.max(axis=1)
+
+    speedup = geomean_fraction(picked, default)
+    oracle_frac = geomean_fraction(picked, best)
+    return {
+        "family": name,
+        "n_problems": len(problems),
+        "n_deployed": len(res.configs),
+        "n_space": len(space),
+        "speedup_vs_default": speedup,
+        "oracle_fraction": oracle_frac,
+        "deployed": [c.name() for c in res.configs],
+    }
+
+
+def bench_dispatch(n: int = 2000) -> dict:
+    """Shape-memoized tuned dispatch throughput for the new families."""
+    from repro.core.dataset import build_model_dataset, synthetic_problems
+    from repro.core.tuner import tune
+
+    ds = build_model_dataset(synthetic_problems(60))
+    dep = tune(ds, n_kernels=5).deployment
+    ops.set_kernel_policy(dep)
+    try:
+        shapes = [(s, hd) for s in (1, 128, 2048, 32768) for hd in (16, 64)]
+        t0 = time.perf_counter()
+        for i in range(n):
+            ops.select_wkv_config(*shapes[i % len(shapes)])
+        wkv_rate = n / max(time.perf_counter() - t0, 1e-9)
+        stats = ops.shape_cache_stats()["per_family"].get("wkv", {})
+        return {"wkv_selects_per_s": wkv_rate, "wkv_cache": stats}
+    finally:
+        ops.set_kernel_policy(None)
+
+
+def main(quick: bool = False) -> list[tuple[str, float, str]]:
+    rows = []
+    blob = {"families": {}, "dispatch": bench_dispatch(500 if quick else 2000)}
+    for name in FAMILIES:
+        r = bench_family(name, quick=quick)
+        blob["families"][name] = r
+        rows.append(
+            (
+                f"families_{name}_speedup",
+                round(r["speedup_vs_default"], 4),
+                f"{r['n_deployed']}/{r['n_space']} kernels deployed; "
+                f"{r['oracle_fraction'] * 100:.1f}% of oracle over {r['n_problems']} problems",
+            )
+        )
+    save_json("bench_families.json", blob)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

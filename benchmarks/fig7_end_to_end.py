@@ -69,9 +69,37 @@ def run(quick: bool = False) -> dict:
             "oracle": _total_time(problems, oracle_pick),
         }
         out[arch] = {k: float(v * 1e3) for k, v in times.items()}  # ms
-    result = {"device": "tpu_v5e", "per_arch_ms": out}
-    save_json("fig7_end_to_end.json", result)
-    return result
+    # The committed artifact keeps rows from earlier (fuller) runs; the
+    # RETURN value carries only this run's measurements, so CSV rows and the
+    # perf gate never report an arch as measured that never ran.
+    save_json("fig7_end_to_end.json",
+              {"device": "tpu_v5e", "per_arch_ms": _merge_artifact(out)})
+    return {"device": "tpu_v5e", "per_arch_ms": out}
+
+
+def _merge_artifact(fresh: dict) -> dict:
+    """Merge this run's per-arch rows into the committed JSON artifact.
+
+    Idempotent append: an arch measured in this run replaces its previous
+    row (re-running never duplicates provenance), while archs only present
+    in an earlier full run survive a later ``--quick`` run instead of being
+    clobbered.
+    """
+    import json
+
+    from .common import out_path
+
+    path = out_path("fig7_end_to_end.json")
+    merged: dict = {}
+    if path.exists():
+        try:
+            prev = json.loads(path.read_text())
+            if isinstance(prev, dict) and prev.get("device") == "tpu_v5e":
+                merged.update(prev.get("per_arch_ms") or {})
+        except (json.JSONDecodeError, OSError):
+            pass  # unreadable artifact: rebuild from this run alone
+    merged.update(fresh)
+    return merged
 
 
 def main(quick: bool = False) -> list[tuple[str, float, str]]:

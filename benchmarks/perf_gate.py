@@ -33,6 +33,10 @@ SELECTION_METRICS = {
 }
 # fig7 rows named fig7_<arch>_tuned8_ms are totals in ms: lower is better.
 FIG7_SUFFIX = "_tuned8_ms"
+# bench_families rows named families_<family>_speedup are tuned-vs-default
+# dispatch ratios from the family's analytic model: higher is better.
+FAMILIES_PREFIX = "families_"
+FAMILIES_SUFFIX = "_speedup"
 
 # recorded in the artifact for trend-watching, never gated (machine-dependent)
 UNGATED_RECORD = ("dispatch_cold_per_s", "dispatch_cached_per_s",
@@ -52,9 +56,11 @@ def collect_metrics(selection: dict | None, fig7: dict | None) -> tuple[dict, di
                 recorded[name] = float(selection[name])
     if fig7:
         for row in fig7.get("rows", []):
-            name, value = row[0], row[1]
-            if str(name).endswith(FIG7_SUFFIX):
-                gated[str(name)] = (float(value), "lower")
+            name, value = str(row[0]), row[1]
+            if name.endswith(FIG7_SUFFIX):
+                gated[name] = (float(value), "lower")
+            elif name.startswith(FAMILIES_PREFIX) and name.endswith(FAMILIES_SUFFIX):
+                gated[name] = (float(value), "higher")
     return gated, recorded
 
 

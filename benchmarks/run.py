@@ -15,6 +15,7 @@ import sys
 import time
 
 from . import (
+    bench_families,
     fig2_best_counts,
     fig3_pca_variance,
     fig4_normalization,
@@ -34,18 +35,26 @@ MODULES = {
     "table12": table12_classifiers,
     "fig7": fig7_end_to_end,
     "fig8": fig8_attention_family,  # beyond-paper: attention kernel family
+    "families": bench_families,  # beyond-paper: wkv/ssm via the family registry
 }
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced problem counts")
-    ap.add_argument("--only", default=None, choices=sorted(MODULES))
+    ap.add_argument("--only", default=None, metavar="NAMES",
+                    help=f"comma-separated subset of {sorted(MODULES)}")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + failures to this JSON file")
     args = ap.parse_args(argv)
 
-    names = [args.only] if args.only else list(MODULES)
+    if args.only:
+        names = [n for n in args.only.replace(" ", "").split(",") if n]
+        unknown = sorted(set(names) - set(MODULES))
+        if unknown:
+            ap.error(f"unknown module(s) {unknown}; choose from {sorted(MODULES)}")
+    else:
+        names = list(MODULES)
     print("name,value,derived")
     failures: list[tuple[str, str]] = []
     all_rows: list[tuple] = []

@@ -1,12 +1,14 @@
-"""Quickstart: the paper's full pipeline in ~40 lines.
+"""Quickstart: the paper's full pipeline in ~50 lines — for every kernel family.
 
   benchmark table -> normalize -> cluster-select kernels -> train classifier
-  -> deploy -> ML-guided dispatch of every matmul in a model.
+  -> deploy a multi-family bundle -> ML-guided dispatch of every matmul,
+  attention, WKV, and selective-scan launch in a model.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
+from repro.core.bundle import DeploymentBundle, install_bundle
 from repro.core.codegen import tree_to_python
 from repro.core.dataset import build_model_dataset, synthetic_problems
 from repro.core.tuner import tune
@@ -18,21 +20,26 @@ from repro.kernels import ops
 dataset = build_model_dataset(synthetic_problems(150))
 print(f"dataset: {len(dataset.problems)} problems x {len(dataset.configs)} configs")
 
-# 2. The paper's pipeline: PCA+K-means selects 8 kernels to deploy,
-#    a decision tree learns to pick among them at runtime.
+# 2. The paper's pipeline: PCA+K-means selects 8 matmul kernels to deploy and
+#    a decision tree learns to pick among them at runtime — and because every
+#    op is a registered kernel family (repro.core.families), the SAME
+#    pipeline prunes + classifies attention, WKV, and the selective-SSM scan.
 result = tune(dataset, n_kernels=8, method="pca_kmeans", classifier="DecisionTreeA")
-print(f"deployed kernels ({len(result.deployment.configs)}):")
-for cfg in result.deployment.configs:
-    print(f"  {cfg.name()}")
-print(f"oracle fraction of optimal:     {result.oracle_fraction:.1%}")
-print(f"classifier fraction of optimal: {result.classifier_fraction:.1%}")
+dep = result.deployment
+for fname in dep.family_names():
+    configs, _tree = dep.family_tuning(fname)
+    print(f"deployed {fname} kernels ({len(configs)}): {[c.name() for c in configs]}")
+print(f"matmul oracle fraction of optimal:     {result.oracle_fraction:.1%}")
+print(f"matmul classifier fraction of optimal: {result.classifier_fraction:.1%}")
 
 # 3. The decision tree as launcher code (the paper embeds it as nested ifs):
 print("\n--- generated launcher (first lines) ---")
-print("\n".join(tree_to_python(result.deployment.classifier).splitlines()[:8]))
+print("\n".join(tree_to_python(dep.classifier).splitlines()[:8]))
 
-# 4. Install the deployment: every repro matmul now dispatches through it.
-ops.set_kernel_policy(result.deployment)
+# 4. Ship it: a v5 bundle carries all four families; install_bundle routes by
+#    detected device and every repro op now dispatches through the artifact.
+bundle = DeploymentBundle({"tpu_v5e": dep})
+install_bundle(bundle, device="tpu_v5e")
 ops.set_selection_logging(True)  # opt-in: dispatch decisions are not recorded by default
 ops.clear_selection_log()
 a = jnp.ones((512, 784), jnp.bfloat16)
@@ -41,7 +48,15 @@ ops.matmul(a, b)
 a2 = jnp.ones((1, 4096), jnp.bfloat16)  # decode-style GEMV picks differently
 b2 = jnp.ones((4096, 512), jnp.bfloat16)
 ops.matmul(a2, b2)
-print("\n--- trace-time kernel selections ---")
+q = jnp.ones((1, 4, 128, 64), jnp.bfloat16)
+ops.attention(q, q, q)  # flash-attention family
+ops.select_wkv_config(4096, 64)  # RWKV6 recurrence family
+ops.select_ssm_config(2048, 1600)  # Mamba selective-scan family
+print("\n--- trace-time kernel selections (family-qualified) ---")
 for op, problem, cfg in ops.selection_log():
     print(f"  {op}{problem} -> {cfg.name()}")
-ops.set_kernel_policy(None)
+stats = ops.shape_cache_stats()
+print(f"shape cache per family: { {f: s['size'] for f, s in stats['per_family'].items()} }")
+ops.clear_device_policies()
+ops.set_selection_logging(False)
+ops.clear_selection_log()

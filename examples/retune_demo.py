@@ -12,7 +12,12 @@ The full DESIGN.md §8 loop against a real model and the real serving engine:
      (bucket-level harvest, warm-started clustering, traffic-weighted
      classifier refit) and hot-swaps the new Deployment into the live
      policy registry — mid-run, with zero dropped requests;
-  4. assert all of it actually happened.
+  4. assert all of it actually happened;
+  5. family-qualified loop: an ssm-only traffic shift (no matmul drift at
+     all) fires drift detection for the ``ssm_scan`` family and the
+     incremental retune refreshes ONLY that family's configs + classifier —
+     the proof that every registered kernel family rides the same
+     tune -> deploy -> dispatch -> retune pipeline.
 
 Run:  PYTHONPATH=src python examples/retune_demo.py
 """
@@ -81,6 +86,44 @@ def main() -> None:
     print("zero-downtime continuous tuning loop OK")
 
     ops.clear_device_policies()
+    ops.set_selection_logging(False)
+    ops.clear_selection_log()
+
+    # -- 5. ssm-only traffic shift: drift + retune for one family -----------
+    from repro.core import retune
+
+    dep = engine.deployment
+    assert "ssm_scan" in (dep.meta.get("family_distributions") or {}), \
+        "tune() should have stamped per-family provenance"
+    ssm_before = dep.family_tuning("ssm_scan")
+    ops.set_kernel_policy(dep)
+    ops.set_selection_logging(True)
+    ops.clear_selection_log()
+    # Live selective-scan shapes far from the harvested (train/prefill)
+    # distribution — a reduced Mamba serving workload.  No matmul traffic.
+    for _ in range(6):
+        for s, d in [(96, 48), (160, 48), (96, 96)]:
+            ops.select_ssm_config(s, d)
+    snap = retune.TelemetrySnapshot.from_selection_log(ops.selection_log())
+    assert snap.families() == ["ssm_scan"], snap.families()
+    rep_mm = retune.detect_drift(snap, dep, family="matmul", min_events=8)
+    rep_ssm = retune.detect_drift(snap, dep, family="ssm_scan", min_events=8)
+    assert not rep_mm.triggered, "no matmul traffic must mean no matmul drift"
+    assert rep_ssm.triggered and rep_ssm.unseen_fraction > 0.9, rep_ssm
+    out = retune.incremental_retune(dep, snap, family="ssm_scan", report=rep_ssm,
+                                    min_events=8)
+    nd = out.deployment
+    assert out.family == "ssm_scan" and out.n_harvested > 0
+    assert nd.configs == dep.configs  # matmul artifact untouched
+    assert nd.attention_tree is dep.attention_tree
+    cfg = nd.select_ssm(96, 48)
+    assert cfg in nd.family_tuning("ssm_scan").configs
+    print(f"ssm-only shift: drift {rep_ssm.score:.3f} -> retuned ssm_scan "
+          f"({len(ssm_before.configs)} -> {len(nd.family_tuning('ssm_scan').configs)} kernels, "
+          f"{out.n_harvested} buckets harvested); live (96, 48) now runs {cfg.name()}")
+    print("family-qualified continuous tuning loop OK")
+
+    ops.set_kernel_policy(None)
     ops.set_selection_logging(False)
     ops.clear_selection_log()
 

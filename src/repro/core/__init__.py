@@ -10,10 +10,19 @@ from .flattree import FlatTree
 from .cluster import CLUSTER_METHODS, select_configs
 from .dataset import TuningDataset, build_model_dataset, harvest_problems, problem_features, synthetic_problems
 from .dispatch import Deployment, classifier_fraction, train_deployment
+from .families import (
+    FamilyTuning,
+    KernelFamily,
+    build_family_dataset,
+    families,
+    family_names,
+    get_family,
+    register_family,
+)
 from .normalize import NORMALIZATIONS, normalize
 from .pca import PCA
 from .selection import achievable_fraction, evaluate_methods, select_from_dataset
-from .tuner import FleetTuneResult, TuneResult, save_fleet, tune, tune_fleet, tune_for_archs
+from .tuner import FleetTuneResult, TuneResult, save_fleet, tune, tune_family, tune_fleet, tune_for_archs
 
 __all__ = [
     "CLASSIFIERS",
@@ -22,21 +31,28 @@ __all__ = [
     "PCA",
     "Deployment",
     "DeploymentBundle",
+    "FamilyTuning",
     "FlatTree",
     "FleetTuneResult",
+    "KernelFamily",
     "TuneResult",
     "TuningDataset",
     "achievable_fraction",
+    "build_family_dataset",
     "build_model_dataset",
     "canonical_device_name",
     "classifier_fraction",
     "detect_device",
     "evaluate_methods",
+    "families",
+    "family_names",
+    "get_family",
     "harvest_problems",
     "install_bundle",
     "make_classifier",
     "normalize",
     "problem_features",
+    "register_family",
     "resolve_device",
     "save_fleet",
     "select_configs",
@@ -44,6 +60,7 @@ __all__ = [
     "synthetic_problems",
     "train_deployment",
     "tune",
+    "tune_family",
     "tune_fleet",
     "tune_for_archs",
 ]

@@ -18,18 +18,22 @@ hardware — the per-target tuned subsets of the companion study
     (or requested) device, degrading to the nearest tuned sibling via
     :func:`repro.core.devices.resolve_device`.
 
-Format (DESIGN.md §7-§8)::
+Format (DESIGN.md §7-§9)::
 
-    {"version": 4, "format": "bundle",
-     "deployments": {"tpu_v5e": {<v2 blob>}, "tpu_v4": {<v2 blob>}, ...},
+    {"version": 5, "format": "bundle",
+     "deployments": {"tpu_v5e": {<v5 blob>}, "tpu_v4": {<v5 blob>}, ...},
      "provenance": {"tpu_v5e": {"train_distribution": {...},
+                                "family_distributions": {...},
                                 "retune_count": 0}, ...},
      "meta": {...}}
 
-v4 adds the per-device ``provenance`` block consumed by the continuous
+v4 added the per-device ``provenance`` block consumed by the continuous
 tuning loop (``repro.core.retune``): the shape distribution each deployment
-was tuned against plus its retune lineage.  v1-v3 artifacts load unchanged
-(no provenance -> drift detection treats all live traffic as unseen).
+was tuned against plus its retune lineage.  v5 embeds per-device blobs that
+carry a per-family section (``repro.core.families``) and extends provenance
+with per-family training distributions.  v1-v4 artifacts load unchanged (no
+provenance -> drift detection treats all live traffic as unseen; no family
+section -> extra families fall back to reference implementations).
 """
 from __future__ import annotations
 
@@ -40,10 +44,12 @@ from pathlib import Path
 from .devices import canonical_device_name, detect_device, resolve_device
 from .dispatch import Deployment
 
-BUNDLE_VERSION = 4
+BUNDLE_VERSION = 5
 
-# Deployment.meta keys that form the v4 top-level provenance block.
-_PROVENANCE_KEYS = ("train_distribution", "retune_count", "retune")
+# Deployment.meta keys that form the v4+ top-level provenance block.
+_PROVENANCE_KEYS = (
+    "train_distribution", "family_distributions", "retune_count", "retune", "retune_log",
+)
 
 
 @dataclasses.dataclass
@@ -83,7 +89,7 @@ class DeploymentBundle:
         return self.deployments[resolved], resolved
 
     def provenance(self) -> dict[str, dict]:
-        """Per-device tuning provenance (the v4 top-level block).
+        """Per-device tuning provenance (the v4+ top-level block).
 
         Extracted from each deployment's meta; devices tuned before
         provenance existed simply have no entry.
@@ -115,7 +121,7 @@ class DeploymentBundle:
 
     @staticmethod
     def from_blob(blob: dict) -> "DeploymentBundle":
-        """Parse a v3 bundle blob — or wrap a v1/v2 single-device blob."""
+        """Parse a v3-v5 bundle blob — or wrap a v1/v2/v5 single-device blob."""
         if blob.get("format") == "bundle" or "deployments" in blob:
             version = int(blob.get("version", BUNDLE_VERSION))
             if version > BUNDLE_VERSION:

@@ -86,25 +86,49 @@ def dict_to_tree(blob: dict) -> DecisionTreeClassifier:
 def bundle_to_python(bundle, func_name: str = "select_kernel") -> str:
     """Emit a whole :class:`DeploymentBundle` as standalone launcher source.
 
-    One nested-if selector per device (``select_kernel_tpu_v5e``, ...), a
-    ``DEVICE_SELECTORS`` table keyed by canonical device name, a ``FALLBACKS``
-    copy of the nearest-device chains, and a dispatching ``select_kernel``
-    that routes by device with the same fallback-order semantics as
+    One nested-if selector per (kernel family, device) —
+    ``select_kernel_tpu_v5e`` for matmul (name kept for compat),
+    ``select_attention_tpu_v5e`` / ``select_wkv_...`` / ... for every other
+    family with a shipped tree — plus routing tables: ``DEVICE_SELECTORS``
+    (matmul, keyed by canonical device name), ``FAMILY_SELECTORS`` (family ->
+    device -> selector), a ``FALLBACKS`` copy of the nearest-device chains, a
+    dispatching ``select_kernel`` and family-generic ``select_kernel_family``
+    that route by device with the same fallback-order semantics as
     ``repro.core.devices.resolve_device`` — the multi-target analogue of the
     paper's launcher embedding, with zero repro imports at use time.
     """
     import re
 
     from .devices import FALLBACKS
+    from .families import get_family
 
     sections: list[str] = []
     names: dict[str, str] = {}
+    family_names_tbl: dict[str, dict[str, str]] = {}
     for device in sorted(bundle.deployments):
+        dep = bundle.deployments[device]
         slug = re.sub(r"[^0-9a-zA-Z_]", "_", device)
         fn = f"{func_name}_{slug}"
         names[device] = fn
-        sections.append(tree_to_python(bundle.deployments[device].classifier, fn))
+        family_names_tbl.setdefault("matmul", {})[device] = fn
+        sections.append(tree_to_python(dep.classifier, fn))
+        for fam_name in dep.family_names():
+            if fam_name == "matmul":
+                continue
+            configs, tree = dep.family_tuning(fam_name)
+            if not isinstance(tree, DecisionTreeClassifier):
+                continue  # untuned / non-tree family: nothing to embed
+            fam = get_family(fam_name)
+            ffn = f"select_{re.sub(r'[^0-9a-zA-Z_]', '_', fam_name)}_{slug}"
+            family_names_tbl.setdefault(fam_name, {})[device] = ffn
+            sections.append(tree_to_python(tree, ffn, feature_names=fam.feature_names))
     table = ",\n".join(f"    {d!r}: {fn}" for d, fn in sorted(names.items()))
+    fam_table = ",\n".join(
+        "    {!r}: {{{}}}".format(
+            fam, ", ".join(f"{d!r}: {fn}" for d, fn in sorted(devs.items()))
+        )
+        for fam, devs in sorted(family_names_tbl.items())
+    )
     chains = ",\n".join(
         f"    {d!r}: {tuple(c for c in chain if c in names)!r}"
         for d, chain in sorted(FALLBACKS.items())
@@ -117,6 +141,10 @@ def bundle_to_python(bundle, func_name: str = "select_kernel") -> str:
                 "",
                 "DEVICE_SELECTORS = {",
                 table,
+                "}",
+                "",
+                "FAMILY_SELECTORS = {",
+                fam_table,
                 "}",
                 "",
                 "FALLBACKS = {",
@@ -134,34 +162,55 @@ def bundle_to_python(bundle, func_name: str = "select_kernel") -> str:
                 "        return 'tpu_v' + m.group(1) + variant",
                 r"    return _re.sub(r'[^a-z0-9]+', '_', low).strip('_') or 'unknown'",
                 "",
-                f"def {func_name}(device, {args}):",
-                '    """Route to the deployed selector for this device (nearest-sibling fallback)."""',
+                "def _resolve(table, device):",
+                '    """Nearest-sibling device resolution over one selector table."""',
                 "    device = _canon_device(device)",
-                "    fn = DEVICE_SELECTORS.get(device)",
+                "    fn = table.get(device)",
                 "    if fn is None:",
                 "        for cand in FALLBACKS.get(device, ()):",
-                "            if cand in DEVICE_SELECTORS:",
-                "                fn = DEVICE_SELECTORS[cand]",
+                "            if cand in table:",
+                "                fn = table[cand]",
                 "                break",
                 "    if fn is None:",
                 "        fam = device.split('_', 1)[0]",
-                "        for cand in sorted(DEVICE_SELECTORS):",
+                "        for cand in sorted(table):",
                 "            if cand.split('_', 1)[0] == fam:",
-                "                fn = DEVICE_SELECTORS[cand]",
+                "                fn = table[cand]",
                 "                break",
                 "    if fn is None:",
-                "        fn = DEVICE_SELECTORS[sorted(DEVICE_SELECTORS)[0]]",
-                f"    return fn({args})",
+                "        fn = table[sorted(table)[0]]",
+                "    return fn",
+                "",
+                f"def {func_name}(device, {args}):",
+                '    """Route to the deployed matmul selector for this device."""',
+                f"    return _resolve(DEVICE_SELECTORS, device)({args})",
+                "",
+                f"def {func_name}_family(family, device, *features):",
+                '    """Route any kernel family (matmul, attention, wkv, ssm_scan, ...).',
+                "",
+                "    ``features`` are the family's own featurization, in its declared",
+                "    order; raises KeyError for a family this bundle does not ship.",
+                '    """',
+                "    table = FAMILY_SELECTORS[family]",
+                "    return _resolve(table, device)(*features)",
             ]
         )
     )
     return "\n\n".join(sections) + "\n"
 
 
-def tree_to_python(tree: DecisionTreeClassifier, func_name: str = "select_kernel") -> str:
-    """Emit the tree as nested-if Python source (the launcher embedding)."""
+def tree_to_python(
+    tree: DecisionTreeClassifier,
+    func_name: str = "select_kernel",
+    feature_names: tuple[str, ...] = FEATURE_NAMES,
+) -> str:
+    """Emit the tree as nested-if Python source (the launcher embedding).
+
+    ``feature_names`` are the argument names of the generated selector —
+    each kernel family passes its own (``repro.core.families``).
+    """
     lines = [
-        f"def {func_name}({', '.join(FEATURE_NAMES)}):",
+        f"def {func_name}({', '.join(feature_names)}):",
         '    """Auto-generated kernel-selection decision tree."""',
     ]
 
@@ -170,7 +219,7 @@ def tree_to_python(tree: DecisionTreeClassifier, func_name: str = "select_kernel
         if node.left is None:
             lines.append(f"{pad}return {int(node.label)}")
             return
-        lines.append(f"{pad}if {FEATURE_NAMES[node.feature]} <= {node.threshold!r}:")
+        lines.append(f"{pad}if {feature_names[node.feature]} <= {node.threshold!r}:")
         rec(node.left, indent + 1)
         lines.append(f"{pad}else:")
         rec(node.right, indent + 1)

@@ -51,13 +51,20 @@ def problem_features(problems: list[Problem]) -> np.ndarray:
 
 @dataclasses.dataclass
 class TuningDataset:
-    """Raw benchmark table for one device (problems x configs, gflops/s)."""
+    """Raw benchmark table for one device (problems x configs, gflops/s).
+
+    ``family`` names the kernel family the table belongs to (a key of the
+    ``repro.core.families`` registry); featurization and config parsing
+    route through that family, so the same container carries matmul GEMMs,
+    attention shapes, or any future op's benchmark data.
+    """
 
     device: str
     problems: list[Problem]
     configs: list[MatmulConfig]
     perf: np.ndarray  # raw gflops/s, (n_problems, n_configs)
     source: str = "model"  # 'model' (analytic) or 'measured'
+    family: str = "matmul"
 
     def __post_init__(self):
         self.perf = np.asarray(self.perf, dtype=np.float64)
@@ -69,7 +76,11 @@ class TuningDataset:
 
     @property
     def features(self) -> np.ndarray:
-        return problem_features(self.problems)
+        if self.family == "matmul":
+            return problem_features(self.problems)
+        from .families import get_family
+
+        return get_family(self.family).features(self.problems)
 
     def split(self, test_fraction: float = 0.25, seed: int = 0) -> tuple["TuningDataset", "TuningDataset"]:
         rng = np.random.default_rng(seed)
@@ -84,6 +95,7 @@ class TuningDataset:
             configs=self.configs,
             perf=self.perf[idx],
             source=self.source,
+            family=self.family,
         )
         return mk(train_idx), mk(test_idx)
 
@@ -99,6 +111,7 @@ class TuningDataset:
                 {
                     "device": self.device,
                     "source": self.source,
+                    "family": self.family,
                     "configs": [c.to_dict() for c in self.configs],
                 }
             ),
@@ -108,12 +121,20 @@ class TuningDataset:
     def load(path: str | Path) -> "TuningDataset":
         with np.load(path, allow_pickle=False) as z:
             meta = json.loads(str(z["meta"]))
+            family = meta.get("family", "matmul")
+            if family == "matmul":
+                config_cls = MatmulConfig
+            else:
+                from .families import get_family
+
+                config_cls = get_family(family).config_cls
             return TuningDataset(
                 device=meta["device"],
                 problems=[tuple(int(v) for v in row) for row in z["problems"]],
-                configs=[MatmulConfig.from_dict(d) for d in meta["configs"]],
+                configs=[config_cls.from_dict(d) for d in meta["configs"]],
                 perf=z["perf"],
                 source=meta["source"],
+                family=family,
             )
 
 

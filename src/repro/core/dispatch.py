@@ -1,9 +1,17 @@
 """Deployment artifact: selected kernels + trained runtime classifier (paper §5).
 
-A :class:`Deployment` is what actually ships in the library: the list of
-deployed kernel configs (the 'binary blobs') and a classifier mapping problem
-features -> deployed-config index.  It implements the ``KernelPolicy``
-protocol consumed by ``repro.kernels.ops``.
+A :class:`Deployment` is what actually ships in the library: per kernel
+*family* (``repro.core.families``), the list of deployed kernel configs (the
+'binary blobs') and a classifier mapping problem features -> deployed-config
+index.  It implements the ``KernelPolicy`` protocol consumed by
+``repro.kernels.ops``: the generic :meth:`Deployment.select` answers any
+registered family, with ``select_matmul`` / ``select_attention`` /
+``select_wkv`` / ``select_ssm`` kept as thin shims.
+
+Blob format (DESIGN.md §9): v5 adds a ``families`` section carrying every
+family beyond the legacy matmul/attention fields; v1 (nested trees) and v2
+(flat trees) single-device blobs load unchanged, and unknown family names in
+a newer blob are ignored (forward compat).
 """
 from __future__ import annotations
 
@@ -18,8 +26,9 @@ from repro.kernels.matmul import MatmulConfig
 
 from .classify import make_classifier
 from .dataset import TuningDataset, problem_features
+from .families import FamilyTuning, get_family, is_registered
 
-_EPS = 1e-12
+DEPLOYMENT_VERSION = 5
 
 
 def _validate_tree_labels(tree, n_configs: int, field: str) -> None:
@@ -46,7 +55,13 @@ def build_labels(perf: np.ndarray, chosen: list[int]) -> np.ndarray:
 
 @dataclasses.dataclass
 class Deployment:
-    """The shippable tuning artifact (implements KernelPolicy)."""
+    """The shippable tuning artifact (implements KernelPolicy).
+
+    The matmul family lives in the legacy ``configs``/``classifier`` fields
+    and attention in ``attention_configs``/``attention_tree`` (wire + ctor
+    compatibility); every other family lives in ``families``.  Use
+    :meth:`family_tuning` / :meth:`set_family_tuning` for uniform access.
+    """
 
     # Selections are a pure function of the problem shape, so the ops-layer
     # shape cache may memoize them (DESIGN.md §6).
@@ -61,8 +76,65 @@ class Deployment:
     )
     attention_tree: object | None = None  # features -> index into attention_configs
     meta: dict = dataclasses.field(default_factory=dict)
+    families: dict[str, FamilyTuning] = dataclasses.field(default_factory=dict)
+
+    # -- family access ------------------------------------------------------
+    def family_tuning(self, family: str) -> FamilyTuning:
+        """``(configs, tree)`` for any family (empty tuning when untuned)."""
+        if family == "matmul":
+            return FamilyTuning(self.configs, self.classifier)
+        if family == "attention":
+            return FamilyTuning(self.attention_configs, self.attention_tree)
+        return self.families.get(family, FamilyTuning([], None))
+
+    def set_family_tuning(self, family: str, configs: list, tree: object | None) -> None:
+        if family == "matmul":
+            self.configs = list(configs)
+            self.classifier = tree
+        elif family == "attention":
+            self.attention_configs = list(configs)
+            self.attention_tree = tree
+        else:
+            self.families[family] = FamilyTuning(list(configs), tree)
+
+    def family_names(self) -> list[str]:
+        """Families this artifact carries a non-empty tuning for."""
+        out = []
+        if self.configs:
+            out.append("matmul")
+        if self.attention_configs:
+            out.append("attention")
+        out.extend(sorted(self.families))
+        return out
+
+    def clone(self) -> "Deployment":
+        """Shallow copy safe for per-family replacement (retune's swap unit)."""
+        return Deployment(
+            device=self.device,
+            configs=list(self.configs),
+            classifier=self.classifier,
+            classifier_name=self.classifier_name,
+            attention_configs=list(self.attention_configs),
+            attention_tree=self.attention_tree,
+            meta=dict(self.meta),
+            families=dict(self.families),
+        )
 
     # -- KernelPolicy -------------------------------------------------------
+    def select(self, family: str, problem: tuple):
+        """Generic launcher-side selection for any registered family."""
+        configs, tree = self.family_tuning(family)
+        if not configs:
+            return get_family(family).default_config
+        if tree is None:
+            if family == "attention":
+                return self._attention_bucket_fallback(*problem)
+            return configs[0]
+        feats = get_family(family).features([tuple(problem)])
+        idx = int(tree.predict(feats)[0])
+        idx = min(max(idx, 0), len(configs) - 1)
+        return configs[idx]
+
     def select_matmul(self, m: int, k: int, n: int, batch: int) -> MatmulConfig:
         feats = problem_features([(m, k, n, batch)])
         idx = int(self.classifier.predict(feats)[0])
@@ -71,13 +143,17 @@ class Deployment:
 
     def select_attention(self, sq: int, skv: int, d: int) -> AttentionConfig:
         if self.attention_tree is not None:
-            from .attnmodel import attn_problem_features
+            return self.select("attention", (sq, skv, d))
+        return self._attention_bucket_fallback(sq, skv, d)
 
-            feats = attn_problem_features([(sq, skv, d)])
-            idx = int(self.attention_tree.predict(feats)[0])
-            idx = min(max(idx, 0), len(self.attention_configs) - 1)
-            return self.attention_configs[idx]
-        # Fallback: pick by KV-length bucket (untuned deployments).
+    def select_wkv(self, s: int, hd: int):
+        return self.select("wkv", (s, hd))
+
+    def select_ssm(self, s: int, d: int):
+        return self.select("ssm_scan", (s, d))
+
+    def _attention_bucket_fallback(self, sq: int, skv: int, d: int) -> AttentionConfig:
+        # Pick by KV-length bucket (untuned deployments).
         best = self.attention_configs[0]
         for cfg in self.attention_configs:
             if cfg.block_kv <= max(skv, 128) and cfg.block_q <= max(sq, 128):
@@ -89,17 +165,19 @@ class Deployment:
     def to_blob(self, *, tree_format: str = "flat") -> dict:
         """JSON-ready blob (the per-device payload a bundle embeds verbatim).
 
-        ``tree_format="flat"`` (default) emits v2 structure-of-arrays tree
-        blobs; ``"nested"`` emits the v1 recursive-dict form for tooling that
-        still expects it.  Both load identically.
+        ``tree_format="flat"`` (default) emits the v5 layout: v2
+        structure-of-arrays tree blobs plus a ``families`` section for every
+        family beyond matmul/attention.  ``"nested"`` emits the v1
+        recursive-dict form for tooling that still expects it (legacy
+        families only).  Both load identically for matmul/attention.
         """
         from .codegen import tree_to_dict, tree_to_flat_dict
 
         if tree_format not in ("flat", "nested"):
             raise ValueError(f"unknown tree_format {tree_format!r}")
         to_blob = tree_to_flat_dict if tree_format == "flat" else tree_to_dict
-        return {
-            "version": 2 if tree_format == "flat" else 1,
+        blob = {
+            "version": DEPLOYMENT_VERSION if tree_format == "flat" else 1,
             "device": self.device,
             "configs": [c.to_dict() for c in self.configs],
             "attention_configs": [c.to_dict() for c in self.attention_configs],
@@ -110,6 +188,15 @@ class Deployment:
             ),
             "meta": self.meta,
         }
+        if tree_format == "flat":
+            blob["families"] = {
+                name: {
+                    "configs": [c.to_dict() for c in tuning.configs],
+                    "tree": to_blob(tuning.tree) if tuning.tree is not None else None,
+                }
+                for name, tuning in sorted(self.families.items())
+            }
+        return blob
 
     def save(self, path: str | Path, *, tree_format: str = "flat") -> None:
         """Serialize (decision-tree classifiers only, like the paper ships)."""
@@ -119,10 +206,23 @@ class Deployment:
 
     @staticmethod
     def from_blob(blob: dict) -> "Deployment":
-        """Parse a v1/v2 single-device blob (label-validated on the way in)."""
+        """Parse a v1/v2/v5 single-device blob (label-validated on the way in).
+
+        Unknown family names inside a v5 ``families`` section are skipped —
+        a newer artifact stays loadable, serving the families this build
+        knows (the unknown op falls back to its reference implementation).
+        """
         from .codegen import dict_to_tree
 
         atree = blob.get("attention_tree")
+        extra: dict[str, FamilyTuning] = {}
+        for name, sub in (blob.get("families") or {}).items():
+            if name in ("matmul", "attention") or not is_registered(name):
+                continue  # legacy fields win; unknown families are ignored
+            fam = get_family(name)
+            cfgs = [fam.config_cls.from_dict(d) for d in sub.get("configs", [])]
+            tree = dict_to_tree(sub["tree"]) if sub.get("tree") else None
+            extra[name] = FamilyTuning(cfgs, tree)
         dep = Deployment(
             device=blob["device"],
             configs=[MatmulConfig.from_dict(d) for d in blob["configs"]],
@@ -131,12 +231,16 @@ class Deployment:
             attention_configs=[AttentionConfig.from_dict(d) for d in blob["attention_configs"]],
             attention_tree=dict_to_tree(atree) if atree else None,
             meta=blob.get("meta", {}),
+            families=extra,
         )
         _validate_tree_labels(dep.classifier, len(dep.configs), "tree")
         if dep.attention_tree is not None:
             _validate_tree_labels(
                 dep.attention_tree, len(dep.attention_configs), "attention_tree"
             )
+        for name, tuning in dep.families.items():
+            if tuning.tree is not None:
+                _validate_tree_labels(tuning.tree, len(tuning.configs), f"families.{name}.tree")
         return dep
 
     @staticmethod
@@ -165,9 +269,9 @@ def train_deployment(
 
 def classifier_fraction(test: TuningDataset, chosen: list[int], deployment: Deployment) -> float:
     """Geomean of (perf of classifier-picked kernel) / optimal (Tables 1-2)."""
+    from .selection import geomean_fraction
+
     pred = deployment.classifier.predict(test.features)
     pred = np.clip(pred, 0, len(chosen) - 1)
     picked = test.perf[np.arange(len(test.problems)), [chosen[i] for i in pred]]
-    best = test.perf.max(axis=1)
-    ratio = np.where(best > 0, picked / np.maximum(best, _EPS), 1.0)
-    return float(np.exp(np.mean(np.log(np.maximum(ratio, _EPS)))))
+    return geomean_fraction(picked, test.perf.max(axis=1))

@@ -134,6 +134,21 @@ class OnlinePolicy:
             self._attn_cache.popitem(last=False)
         return cfg
 
+    def select_wkv(self, s: int, hd: int):
+        """Prior passthrough (online exploration is matmul-only today)."""
+        return self._prior_family_select("wkv", "select_wkv", (s, hd))
+
+    def select_ssm(self, s: int, d: int):
+        return self._prior_family_select("ssm_scan", "select_ssm", (s, d))
+
+    def _prior_family_select(self, family: str, attr: str, problem: tuple):
+        meth = getattr(self.prior, attr, None) if self.prior is not None else None
+        if meth is not None:
+            return meth(*problem)
+        from repro.core.families import get_family
+
+        return get_family(family).default_config
+
     # -- continuous tuning ----------------------------------------------------
     def set_prior(self, prior: object | None) -> None:
         """Hot-swap the offline prior (a new :class:`Deployment` from retune).

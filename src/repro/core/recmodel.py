@@ -1,0 +1,231 @@
+"""Analytic performance models for the recurrence kernel families (WKV, SSM).
+
+Third and fourth kernel families through the paper's pipeline: the RWKV6
+chunked-WKV recurrence (``repro.kernels.wkv``) and the Mamba selective-SSM
+scan (``repro.kernels.ssm``).  Same physics as ``core.perfmodel`` /
+``core.attnmodel``: an overlapped compute/memory roofline over the exact
+Pallas tile-streaming pattern, per-grid-step pipeline overhead, VMEM-overflow
+configs fail, and a deterministic microarchitectural texture so the
+long-tail-of-optima phenomenon (paper Fig. 2) exists for these families too.
+
+Problem spaces mirror what the dispatch layer featurizes at trace time
+(``repro.kernels.ops``):
+
+  * WKV:  ``(s, hd)``  — sequence length x head dim; config ``WkvConfig(chunk)``.
+    Total chunked-WKV FLOPs grow with the chunk size (the intra-chunk
+    quadratic form is O(c^2 hd) per chunk) while the sequential-grid overhead
+    shrinks as 1/c — the optimum genuinely depends on ``s``, which is exactly
+    the structure a selection classifier can learn.
+  * SSM:  ``(s, d)``   — sequence length x inner width; config
+    ``SsmConfig(block_d, chunk)``.  The dt*A tile is ``(chunk, block_d*N)``
+    f32 in VMEM (double-buffered): large blocks overflow VMEM and fail, small
+    ``block_d`` under-fills the lanes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.ssm import SsmConfig, ssm_config_space
+from repro.kernels.wkv import WkvConfig, wkv_config_space
+
+from .perfmodel import DEVICES, TPU_V5E, DeviceModel, _hash_unit
+
+WkvProblem = tuple[int, int]  # (seq_len, head_dim)
+SsmProblem = tuple[int, int]  # (seq_len, d_inner)
+
+WKV_FEATURE_NAMES = ("log2_s", "log2_hd", "log2_s_over_hd")
+SSM_FEATURE_NAMES = ("log2_s", "log2_d", "log2_s_over_d")
+
+SSM_STATE_N = 16  # modeled state width (the shipped configs all use N=16)
+
+
+def _device(device_name: str | None) -> DeviceModel:
+    """The recurrence models cover every modeled TPU; unknown hosts (e.g.
+    ``host_cpu``) fall back to the primary target — these families are tuned
+    once per fleet, like attention."""
+    return DEVICES.get(device_name or TPU_V5E.name, TPU_V5E)
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _log2_features(p: np.ndarray) -> np.ndarray:
+    a, b = p.T
+    return np.column_stack([np.log2(a), np.log2(b), np.log2(a / b)])
+
+
+def wkv_problem_features(problems: list[WkvProblem]) -> np.ndarray:
+    p = np.asarray(problems, dtype=np.float64).reshape(-1, 2)
+    if p.size == 0:
+        return np.zeros((0, len(WKV_FEATURE_NAMES)))
+    return _log2_features(np.maximum(p, 1.0))
+
+
+def ssm_problem_features(problems: list[SsmProblem]) -> np.ndarray:
+    p = np.asarray(problems, dtype=np.float64).reshape(-1, 2)
+    if p.size == 0:
+        return np.zeros((0, len(SSM_FEATURE_NAMES)))
+    return _log2_features(np.maximum(p, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# WKV (RWKV6 chunked recurrence)
+# ---------------------------------------------------------------------------
+def predict_wkv_time(
+    problem: WkvProblem, cfg: WkvConfig, device: DeviceModel = TPU_V5E, *, dtype_bytes: int = 4
+) -> float:
+    """Predicted seconds for one (head, sequence) WKV pass; inf if invalid."""
+    s, hd = problem
+    c = min(cfg.chunk, _round_up(max(s, 1), 8))
+    n_chunks = _ceil(max(s, 1), c)
+    # r/k/v/w tiles double-buffered + (hd, hd) f32 state + f32 score scratch.
+    vmem = 2 * 4 * c * hd * dtype_bytes + hd * hd * 4 + c * c * 4
+    if vmem > device.vmem_bytes:
+        return float("inf")
+    # Per chunk: state in/out quadratic forms (2 x c*hd*hd MACs each) plus the
+    # intra-chunk triangular score/output forms (2 x c*c*hd MACs).
+    flops = n_chunks * (8.0 * c * hd * hd + 4.0 * c * c * hd)
+    util = (min(c, device.mxu_dim) / device.mxu_dim) * (min(hd, device.mxu_dim) / device.mxu_dim)
+    t_compute = flops / (device.peak_flops * util)
+    # r/k/v/w streamed once; o written f32; the state never leaves VMEM.
+    traffic = n_chunks * (4.0 * c * hd * dtype_bytes + c * hd * 4)
+    t_mem = traffic / device.hbm_bw
+    t = max(t_compute, t_mem) + n_chunks * device.grid_step_overhead + device.launch_overhead
+    return t / _texture(device, "wkv", (cfg.chunk,), problem)
+
+
+def predict_wkv_gflops(
+    problem: WkvProblem, cfg: WkvConfig, device: DeviceModel = TPU_V5E, **kw
+) -> float:
+    t = predict_wkv_time(problem, cfg, device, **kw)
+    if not np.isfinite(t) or t <= 0:
+        return 0.0
+    s, hd = problem
+    useful = 8.0 * s * hd * hd  # the recurrence's irreducible state math
+    return useful / t / 1e9
+
+
+def build_wkv_matrix(
+    problems: list[WkvProblem], configs=None, device: DeviceModel | str | None = TPU_V5E
+) -> np.ndarray:
+    if not isinstance(device, DeviceModel):
+        device = _device(device)
+    configs = list(configs if configs is not None else wkv_config_space())
+    perf = np.zeros((len(problems), len(configs)))
+    for i, p in enumerate(problems):
+        for j, c in enumerate(configs):
+            perf[i, j] = predict_wkv_gflops(p, c, device)
+    return perf
+
+
+def harvest_wkv_problems(arch_ids: list[str] | None = None) -> list[WkvProblem]:
+    """WKV shapes the attention-free architectures actually launch."""
+    from repro.configs import registry
+
+    arch_ids = arch_ids or list(registry.ARCHS)
+    out: set[WkvProblem] = set()
+    for arch in arch_ids:
+        cfg = registry.get(arch)
+        if cfg.family != "ssm":  # RWKV-style time-mix archs only
+            continue
+        hd = cfg.head_dim
+        for shape in registry.shapes_for(arch):
+            sp = registry.SHAPES[shape]
+            if sp.kind == "decode":
+                out.add((1, hd))
+            else:
+                out.add((sp.seq_len, hd))
+                out.add((min(2048, sp.seq_len), hd))  # chunked-prefill sub-blocks
+    return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# selective-SSM scan (Mamba / Hymba recurrence)
+# ---------------------------------------------------------------------------
+def predict_ssm_time(
+    problem: SsmProblem,
+    cfg: SsmConfig,
+    device: DeviceModel = TPU_V5E,
+    *,
+    n_state: int = SSM_STATE_N,
+) -> float:
+    """Predicted seconds for one batched-sequence SSM scan; inf if invalid."""
+    s, d = problem
+    bd = min(cfg.block_d, _round_up(max(d, 1), 8))
+    c = min(cfg.chunk, _round_up(max(s, 1), 8))
+    t_d, t_s = _ceil(max(d, 1), bd), _ceil(max(s, 1), c)
+    steps = t_d * t_s
+    # dt*A tile is the VMEM hog: (chunk, bd*N) f32, double-buffered, plus the
+    # carried (bd, N) state and the dtx/y tiles.
+    vmem = 2 * c * bd * n_state * 4 + bd * n_state * 4 + 3 * c * bd * 4
+    if vmem > device.vmem_bytes:
+        return float("inf")
+    # exp + state update + output contraction ~ 6 ops per (t, channel, state).
+    flops = 6.0 * steps * c * bd * n_state
+    util = (min(bd, device.mxu_dim) / device.mxu_dim) * (0.5 + 0.5 * min(c, 64) / 64.0)
+    t_compute = flops / (device.peak_flops * util)
+    # dta dominates traffic (N x the activations); b/c re-streamed per d block.
+    traffic = steps * (c * bd * (2.0 + n_state) * 4 + 2.0 * c * n_state * 4)
+    t_mem = traffic / device.hbm_bw
+    t = max(t_compute, t_mem) + steps * device.grid_step_overhead + device.launch_overhead
+    return t / _texture(device, "ssm", (cfg.block_d, cfg.chunk), problem)
+
+
+def predict_ssm_gflops(
+    problem: SsmProblem, cfg: SsmConfig, device: DeviceModel = TPU_V5E, **kw
+) -> float:
+    t = predict_ssm_time(problem, cfg, device, **kw)
+    if not np.isfinite(t) or t <= 0:
+        return 0.0
+    s, d = problem
+    useful = 6.0 * s * d * kw.get("n_state", SSM_STATE_N)
+    return useful / t / 1e9
+
+
+def build_ssm_matrix(
+    problems: list[SsmProblem], configs=None, device: DeviceModel | str | None = TPU_V5E
+) -> np.ndarray:
+    if not isinstance(device, DeviceModel):
+        device = _device(device)
+    configs = list(configs if configs is not None else ssm_config_space())
+    perf = np.zeros((len(problems), len(configs)))
+    for i, p in enumerate(problems):
+        for j, c in enumerate(configs):
+            perf[i, j] = predict_ssm_gflops(p, c, device)
+    return perf
+
+
+def harvest_ssm_problems(arch_ids: list[str] | None = None) -> list[SsmProblem]:
+    """Selective-scan shapes the hybrid (Mamba-head) architectures launch.
+
+    Decode is excluded: ``mamba_decode_step`` advances the state inline and
+    never dispatches ``ops.ssm_scan``.
+    """
+    from repro.configs import registry
+
+    arch_ids = arch_ids or list(registry.ARCHS)
+    out: set[SsmProblem] = set()
+    for arch in arch_ids:
+        cfg = registry.get(arch)
+        if cfg.family != "hybrid":
+            continue
+        d = cfg.d_model
+        for shape in registry.shapes_for(arch):
+            sp = registry.SHAPES[shape]
+            if sp.kind == "decode":
+                continue
+            out.add((sp.seq_len, d))
+            out.add((min(2048, sp.seq_len), d))
+    return sorted(out)
+
+
+def _texture(device: DeviceModel, op: str, cfg_key: tuple, problem: tuple) -> float:
+    e_cfg = 1.0 - 0.10 * _hash_unit(device.name, f"{op}_cfg", cfg_key)
+    bucket = tuple(int(np.log2(max(v, 1))) for v in problem)
+    e_int = 1.0 + 0.07 * (2.0 * _hash_unit(device.name, f"{op}_int", cfg_key, bucket) - 1.0)
+    return max(e_cfg * e_int, 1e-3)

@@ -8,10 +8,10 @@ comparison of the paper's §2.2, combined): the offline classifier is a
 *prior* that runtime evidence continuously corrects.
 
     selection log + OnlinePolicy measurements
-        -> TelemetrySnapshot            (per-device shape-bucket histograms)
-        -> detect_drift                 (vs the Deployment's training
-                                         distribution, carried as provenance
-                                         metadata in the artifact)
+        -> TelemetrySnapshot            (per-(family, shape-bucket) histograms)
+        -> detect_drift                 (per family, vs the Deployment's
+                                         training distribution, carried as
+                                         provenance metadata in the artifact)
         -> incremental_retune           (re-harvest only drifted buckets,
                                          warm-start clustering from the
                                          deployed centroids, refit the
@@ -19,11 +19,15 @@ comparison of the paper's §2.2, combined): the offline classifier is a
         -> new Deployment               (hot-swapped into repro.kernels.ops
                                          with zero dropped requests)
 
-Everything is host-side numpy; the only measurement source needed is the
-same benchmark-data supplier the offline pipeline used (the analytic perf
-model for TPU targets, a measure hook for real hardware).  See DESIGN.md §8
-for the telemetry schema, the drift metric, and the hot-swap atomicity
-contract.
+Everything buckets per ``(device, family, shape)``: the matmul histogram
+lives in ``meta["train_distribution"]`` (wire compat with v4 artifacts) and
+every other family's in ``meta["family_distributions"][family]``, so an
+ssm-only traffic shift retunes the ssm family without touching the matmul
+artifact.  Everything is host-side numpy; the only measurement source needed
+is the same benchmark-data supplier the offline pipeline used (each family's
+analytic perf model for TPU targets, a measure hook for real hardware).  See
+DESIGN.md §8-§9 for the telemetry schema, the drift metric, and the hot-swap
+atomicity contract.
 """
 from __future__ import annotations
 
@@ -35,6 +39,7 @@ from .classify import fit_weighted, make_classifier
 from .cluster import select_configs
 from .dataset import TuningDataset, build_model_dataset
 from .dispatch import Deployment, build_labels
+from .families import get_family
 from .normalize import normalize
 from .online import shape_bucket
 
@@ -45,7 +50,7 @@ DEFAULT_MIN_EVENTS = 32
 
 
 # ---------------------------------------------------------------------------
-# training-distribution provenance (bundle v4 / Deployment.meta)
+# training-distribution provenance (bundle v4+/Deployment.meta)
 # ---------------------------------------------------------------------------
 def bucket_key(bucket: Bucket) -> str:
     """JSON-safe bucket key: ``(9, 10, 9, 1)`` -> ``"9,10,9,1"``."""
@@ -61,7 +66,7 @@ def train_distribution(
 ) -> dict:
     """Provenance blob describing a tuning dataset's shape distribution.
 
-    JSON-ready (it rides inside ``Deployment.meta`` and the v4 bundle blob):
+    JSON-ready (it rides inside ``Deployment.meta`` and the v4+ bundle blob):
 
         {"buckets": {"9,10,9,1": {"w": 0.25, "problem": [512, 784, 512, 16]},
                      ...},
@@ -91,6 +96,15 @@ def _dist_buckets(dist: dict | None) -> dict[Bucket, tuple[float, tuple]]:
     return out
 
 
+def _deployment_distribution(deployment, family: str) -> dict | None:
+    """The training-distribution provenance blob for one family."""
+    if not isinstance(deployment, Deployment):
+        return deployment  # caller passed the provenance dict itself
+    if family == "matmul":
+        return deployment.meta.get("train_distribution")
+    return (deployment.meta.get("family_distributions") or {}).get(family)
+
+
 # ---------------------------------------------------------------------------
 # telemetry
 # ---------------------------------------------------------------------------
@@ -98,57 +112,84 @@ def _dist_buckets(dist: dict | None) -> dict[Bucket, tuple[float, tuple]]:
 class TelemetrySnapshot:
     """Aggregated runtime evidence for one serving window.
 
-    ``matmul_counts`` is the live shape-bucket histogram (every trace-time
-    selection, cache hits included, so frequencies reflect real traffic);
-    ``problems`` keeps the most recent concrete shape per bucket (the
-    re-harvest candidates); ``observed`` carries any measured config timings
-    an :class:`~repro.core.online.OnlinePolicy` gathered (bucket ->
+    ``counts`` holds one live shape-bucket histogram per kernel family
+    (every trace-time selection, cache hits included, so frequencies reflect
+    real traffic); ``family_problems`` keeps the most recent concrete shape
+    per ``(family, bucket)`` (the re-harvest candidates); ``observed``
+    carries any measured config timings an
+    :class:`~repro.core.online.OnlinePolicy` gathered (bucket ->
     ``[(config, mean_s, trials)]``) — recorded for operators and for a
     future measured-retune path; :func:`detect_drift` and
-    :func:`incremental_retune` key off the histogram alone today.
+    :func:`incremental_retune` key off the histograms alone today.
+
+    ``matmul_counts`` / ``attention_counts`` / ``problems`` remain as live
+    views into the per-family dicts (wire + test compat).
     """
 
-    matmul_counts: dict[Bucket, int] = dataclasses.field(default_factory=dict)
-    problems: dict[Bucket, tuple] = dataclasses.field(default_factory=dict)
-    attention_counts: dict[Bucket, int] = dataclasses.field(default_factory=dict)
+    counts: dict[str, dict[Bucket, int]] = dataclasses.field(default_factory=dict)
+    family_problems: dict[str, dict[Bucket, tuple]] = dataclasses.field(default_factory=dict)
     observed: dict[Bucket, list] = dataclasses.field(default_factory=dict)
     n_events: int = 0
 
+    # -- legacy views --------------------------------------------------------
+    @property
+    def matmul_counts(self) -> dict[Bucket, int]:
+        return self.counts.setdefault("matmul", {})
+
+    @property
+    def attention_counts(self) -> dict[Bucket, int]:
+        return self.counts.setdefault("attention", {})
+
+    @property
+    def problems(self) -> dict[Bucket, tuple]:
+        return self.family_problems.setdefault("matmul", {})
+
+    # -- construction --------------------------------------------------------
     @staticmethod
     def from_selection_log(log: list[tuple], online=None) -> "TelemetrySnapshot":
         """Aggregate ``ops.selection_log()`` entries (op, problem, config).
 
+        Every logged family is bucketed separately under its op name;
         ``online`` optionally supplies an ``OnlinePolicy`` whose
         ``measurements()`` are folded in as observed config timings.
         """
         snap = TelemetrySnapshot()
         for op, problem, _cfg in log:
             b = shape_bucket(problem)
-            if op == "matmul":
-                snap.matmul_counts[b] = snap.matmul_counts.get(b, 0) + 1
-                snap.problems[b] = tuple(int(v) for v in problem)
-                snap.n_events += 1
-            elif op == "attention":
-                snap.attention_counts[b] = snap.attention_counts.get(b, 0) + 1
+            fam = snap.counts.setdefault(op, {})
+            fam[b] = fam.get(b, 0) + 1
+            snap.family_problems.setdefault(op, {})[b] = tuple(int(v) for v in problem)
+            snap.n_events += 1
         if online is not None and hasattr(online, "measurements"):
             for b, rows in online.measurements().items():
                 snap.observed.setdefault(b, []).extend(rows)
         return snap
 
-    def histogram(self) -> dict[Bucket, float]:
-        """Normalized live matmul-traffic histogram (sums to 1)."""
-        total = float(sum(self.matmul_counts.values()))
+    def families(self) -> list[str]:
+        """Families with at least one recorded event, matmul first."""
+        return sorted(
+            (f for f, c in self.counts.items() if c), key=lambda f: (f != "matmul", f)
+        )
+
+    def family_events(self, family: str) -> int:
+        return int(sum(self.counts.get(family, {}).values()))
+
+    def histogram(self, family: str = "matmul") -> dict[Bucket, float]:
+        """Normalized live traffic histogram for one family (sums to 1)."""
+        fam = self.counts.get(family, {})
+        total = float(sum(fam.values()))
         if total <= 0:
             return {}
-        return {b: c / total for b, c in self.matmul_counts.items()}
+        return {b: c / total for b, c in fam.items()}
 
     def merge(self, other: "TelemetrySnapshot") -> "TelemetrySnapshot":
         """Fold ``other`` into this snapshot (windowed collection)."""
-        for b, c in other.matmul_counts.items():
-            self.matmul_counts[b] = self.matmul_counts.get(b, 0) + c
-        self.problems.update(other.problems)
-        for b, c in other.attention_counts.items():
-            self.attention_counts[b] = self.attention_counts.get(b, 0) + c
+        for fname, fam in other.counts.items():
+            mine = self.counts.setdefault(fname, {})
+            for b, c in fam.items():
+                mine[b] = mine.get(b, 0) + c
+        for fname, probs in other.family_problems.items():
+            self.family_problems.setdefault(fname, {}).update(probs)
         for b, rows in other.observed.items():
             self.observed.setdefault(b, []).extend(rows)
         self.n_events += other.n_events
@@ -166,7 +207,8 @@ class DriftReport:
     1 = disjoint) between the two bucket histograms; ``unseen_fraction`` is
     the live mass on buckets the tuning dataset never contained (the part no
     classifier accuracy can fix); ``drifted_buckets`` are the re-harvest
-    targets, heaviest excess live mass first.
+    targets, heaviest excess live mass first.  ``family`` names the kernel
+    family the report covers (drift is detected per (device, family, shape)).
     """
 
     score: float
@@ -175,6 +217,7 @@ class DriftReport:
     threshold: float
     n_events: int
     triggered: bool
+    family: str = "matmul"
 
 
 def js_divergence(p: dict[Bucket, float], q: dict[Bucket, float]) -> float:
@@ -199,29 +242,30 @@ def detect_drift(
     snapshot: TelemetrySnapshot,
     deployment: Deployment | dict | None,
     *,
+    family: str = "matmul",
     threshold: float = DEFAULT_DRIFT_THRESHOLD,
     min_events: int = DEFAULT_MIN_EVENTS,
 ) -> DriftReport:
-    """Compare live traffic against a deployment's training distribution.
+    """Compare one family's live traffic against its training distribution.
 
     ``deployment`` may be a :class:`Deployment` (provenance read from
-    ``meta["train_distribution"]``) or the provenance dict itself.  An
-    artifact predating provenance (v1-v3) scores 1.0 — everything live is
-    unseen as far as the frozen tuning data can prove, so past the event
-    floor it always triggers a retune to the observed distribution.
+    ``meta["train_distribution"]`` for matmul, ``meta["family_distributions"]``
+    otherwise) or the provenance dict itself.  An artifact predating
+    provenance (v1-v3, or a family tuned before per-family provenance)
+    scores 1.0 — everything live is unseen as far as the frozen tuning data
+    can prove, so past the event floor it always triggers a retune to the
+    observed distribution.
     """
-    if isinstance(deployment, Deployment):
-        dist = deployment.meta.get("train_distribution")
-    else:
-        dist = deployment
-    live = snapshot.histogram()
+    dist = _deployment_distribution(deployment, family)
+    live = snapshot.histogram(family)
+    n_events = snapshot.family_events(family)
     train = {b: w for b, (w, _p) in _dist_buckets(dist).items()}
     if not live:
-        return DriftReport(0.0, 0.0, (), threshold, snapshot.n_events, False)
+        return DriftReport(0.0, 0.0, (), threshold, n_events, False, family)
     if not train:
         drifted = tuple(sorted(live, key=lambda b: -live[b]))
-        trig = snapshot.n_events >= min_events
-        return DriftReport(1.0, 1.0, drifted, threshold, snapshot.n_events, trig)
+        trig = n_events >= min_events
+        return DriftReport(1.0, 1.0, drifted, threshold, n_events, trig, family)
     score = js_divergence(live, train)
     unseen = sum(w for b, w in live.items() if b not in train)
     # Re-harvest targets: buckets with materially more live than train mass.
@@ -231,8 +275,24 @@ def detect_drift(
         sorted((b for b, e in excess.items() if e > margin or b not in train),
                key=lambda b: -excess[b])
     )
-    triggered = snapshot.n_events >= min_events and score >= threshold
-    return DriftReport(score, unseen, drifted, threshold, snapshot.n_events, triggered)
+    triggered = n_events >= min_events and score >= threshold
+    return DriftReport(score, unseen, drifted, threshold, n_events, triggered, family)
+
+
+def detect_drift_all(
+    snapshot: TelemetrySnapshot,
+    deployment: Deployment | None,
+    *,
+    threshold: float = DEFAULT_DRIFT_THRESHOLD,
+    min_events: int = DEFAULT_MIN_EVENTS,
+) -> dict[str, DriftReport]:
+    """One :func:`detect_drift` report per family with live traffic."""
+    return {
+        fam: detect_drift(
+            snapshot, deployment, family=fam, threshold=threshold, min_events=min_events
+        )
+        for fam in snapshot.families()
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -245,27 +305,28 @@ class RetuneResult:
     n_harvested: int  # buckets whose benchmark rows were newly measured
     n_problems: int  # total problems in the blended retune dataset
     warm_started: bool
+    family: str = "matmul"
 
 
 def _warm_start_centers(
-    norm_perf: np.ndarray, ds: TuningDataset, deployment: Deployment
+    norm_perf: np.ndarray, all_configs: list, perf: np.ndarray, deployed_configs: list
 ) -> np.ndarray | None:
     """Perf-space centroids implied by the deployed kernel subset.
 
     Problems are grouped by which *deployed* config is best for them (the
     clustering the old deployment effectively shipped); each group's mean
     normalized perf vector seeds one k-means center.  Deployed configs
-    missing from the dataset's config space are skipped (k-means++ tops up).
+    missing from the config space are skipped (k-means++ tops up).
     """
     cols = []
-    for cfg in deployment.configs:
+    for cfg in deployed_configs:
         try:
-            cols.append(ds.configs.index(cfg))
+            cols.append(all_configs.index(cfg))
         except ValueError:
             continue
     if not cols:
         return None
-    owner = np.asarray(ds.perf)[:, cols].argmax(axis=1)
+    owner = np.asarray(perf)[:, cols].argmax(axis=1)
     centers = []
     for j in range(len(cols)):
         members = norm_perf[owner == j]
@@ -274,10 +335,46 @@ def _warm_start_centers(
     return np.stack(centers) if centers else None
 
 
+def _blend_problems(
+    train: dict[Bucket, tuple[float, tuple]],
+    live: dict[Bucket, float],
+    live_problems: dict[Bucket, tuple],
+    drifted: set,
+    blend: float,
+) -> tuple[list[tuple], list[float], int]:
+    """Blend train + live distributions into one weighted problem list.
+
+    Drifted buckets take their *live* representative problem (the fresh
+    harvest); undrifted training buckets keep their provenance representative.
+    """
+    problems: list[tuple] = []
+    weights: list[float] = []
+    harvested = 0
+    for b in sorted(set(train) | set(live)):
+        t_w = train.get(b, (0.0, None))[0]
+        l_w = live.get(b, 0.0)
+        w = (1.0 - blend) * t_w + blend * l_w
+        if w <= 0:
+            continue
+        if b in drifted and b in live_problems:
+            problems.append(live_problems[b])
+            harvested += 1
+        elif b in train:
+            problems.append(train[b][1])
+        elif b in live_problems:
+            problems.append(live_problems[b])
+            harvested += 1
+        else:
+            continue
+        weights.append(w)
+    return problems, weights, harvested
+
+
 def incremental_retune(
     deployment: Deployment,
     snapshot: TelemetrySnapshot,
     *,
+    family: str = "matmul",
     report: DriftReport | None = None,
     threshold: float = DEFAULT_DRIFT_THRESHOLD,
     min_events: int = DEFAULT_MIN_EVENTS,
@@ -287,7 +384,7 @@ def incremental_retune(
     seed: int = 0,
     dataset_builder=None,
 ) -> RetuneResult:
-    """Refresh a deployment against observed traffic, cheaply.
+    """Refresh one family of a deployment against observed traffic, cheaply.
 
     Incremental in three ways (vs a full ``tuner.tune`` run):
 
@@ -301,84 +398,90 @@ def incremental_retune(
         (:func:`repro.core.classify.fit_weighted` on the blended histogram),
         so accuracy concentrates where the live workload actually is.
 
+    ``family`` picks which kernel family to retune — only that family's
+    ``(configs, tree)`` and provenance change; every other family is carried
+    over untouched (its telemetry carries no evidence about this one).
     ``blend`` sets the live-vs-train mix of the target distribution (0.5 =
     equal weight: the retuned artifact still serves yesterday's traffic).
-    The attention tuning is carried over unchanged — GEMM telemetry carries
-    no attention evidence.  ``dataset_builder(problems, device)`` overrides
-    the benchmark-data source (defaults to the analytic perf model; required
-    for devices the model does not cover, e.g. measured ``host_cpu``).
+    ``dataset_builder(problems, device)`` overrides the benchmark-data source
+    for the matmul family (defaults to the analytic perf model; required for
+    devices the model does not cover, e.g. measured ``host_cpu``); other
+    families use their registry-declared perf model.
     """
     if report is None:
         report = detect_drift(
-            snapshot, deployment, threshold=threshold, min_events=min_events
+            snapshot, deployment, family=family, threshold=threshold, min_events=min_events
         )
-    train = _dist_buckets(deployment.meta.get("train_distribution"))
-    live = snapshot.histogram()
-    drifted = set(report.drifted_buckets)
-
-    # Blend the two distributions into one weighted problem list.  Drifted
-    # buckets take their *live* representative problem (the fresh harvest);
-    # undrifted training buckets keep their provenance representative.
-    problems: list[tuple] = []
-    weights: list[float] = []
-    harvested = 0
-    for b in sorted(set(train) | set(live)):
-        t_w = train.get(b, (0.0, None))[0]
-        l_w = live.get(b, 0.0)
-        w = (1.0 - blend) * t_w + blend * l_w
-        if w <= 0:
-            continue
-        if b in drifted and b in snapshot.problems:
-            problems.append(snapshot.problems[b])
-            harvested += 1
-        elif b in train:
-            problems.append(train[b][1])
-        elif b in snapshot.problems:
-            problems.append(snapshot.problems[b])
-            harvested += 1
-        else:
-            continue
-        weights.append(w)
+    train = _dist_buckets(_deployment_distribution(deployment, family))
+    live = snapshot.histogram(family)
+    live_problems = snapshot.family_problems.get(family, {})
+    problems, weights, harvested = _blend_problems(
+        train, live, live_problems, set(report.drifted_buckets), blend
+    )
     if not problems:
         raise ValueError("incremental_retune needs telemetry or provenance problems")
+    w = np.asarray(weights, dtype=np.float64)
 
-    build = dataset_builder or _model_dataset_builder
-    ds = build(problems, deployment.device)
-    norm = normalize(ds.perf, normalization)
-    k = n_kernels or len(deployment.configs)
-    centers = _warm_start_centers(norm, ds, deployment)
+    if family == "matmul":
+        build = dataset_builder or _model_dataset_builder
+        ds = build(problems, deployment.device)
+        all_configs, perf, feats = ds.configs, ds.perf, ds.features
+        dist_problems = ds.problems
+    else:
+        fam = get_family(family)
+        all_configs = list(fam.config_space())
+        # Same perf surface the offline tuning used: device-insensitive
+        # families keep their single model target, so a zero-drift retune
+        # cannot churn kernels just by switching models.
+        model_device = deployment.device if fam.device_sensitive else None
+        perf = fam.perf_matrix(problems, all_configs, model_device)
+        feats = fam.features(problems)
+        dist_problems = problems
+
+    norm = normalize(perf, normalization)
+    deployed, _tree = deployment.family_tuning(family)
+    k = n_kernels or len(deployed) or get_family(family).default_n_kernels
+    k = min(k, len(all_configs))
+    centers = _warm_start_centers(norm, all_configs, perf, deployed)
     chosen = select_configs(norm, k, "kmeans", seed=seed, init_centers=centers)
 
-    labels = build_labels(ds.perf, chosen)
-    w = np.asarray(weights, dtype=np.float64)
-    clf = make_classifier(deployment.classifier_name)
-    fit_weighted(clf, ds.features, labels, w)
+    labels = build_labels(perf, chosen)
+    if family == "matmul":
+        clf = make_classifier(deployment.classifier_name)
+    else:
+        clf = get_family(family).make_tree()
+    fit_weighted(clf, feats, labels, w)
 
-    meta = dict(deployment.meta)
-    meta["train_distribution"] = train_distribution(ds.problems, w)
-    meta["retune_count"] = int(meta.get("retune_count", 0)) + 1
-    meta["retune"] = {
+    new_dep = deployment.clone()
+    new_dep.set_family_tuning(family, [all_configs[i] for i in chosen], clf)
+    new_dist = train_distribution(dist_problems, w)
+    if family == "matmul":
+        new_dep.meta["train_distribution"] = new_dist
+    else:
+        dists = dict(new_dep.meta.get("family_distributions") or {})
+        dists[family] = new_dist
+        new_dep.meta["family_distributions"] = dists
+    new_dep.meta["retune_count"] = int(new_dep.meta.get("retune_count", 0)) + 1
+    record = {
+        "family": family,
         "drift_score": round(report.score, 6),
         "unseen_fraction": round(report.unseen_fraction, 6),
         "n_harvested_buckets": harvested,
         "n_problems": len(problems),
         "warm_started": centers is not None,
     }
-    new_dep = Deployment(
-        device=deployment.device,
-        configs=[ds.configs[i] for i in chosen],
-        classifier=clf,
-        classifier_name=deployment.classifier_name,
-        attention_configs=list(deployment.attention_configs),
-        attention_tree=deployment.attention_tree,
-        meta=meta,
-    )
+    new_dep.meta["retune"] = record  # the latest retune (wire compat)
+    # Bounded audit trail: one retune cycle may refresh several families
+    # (engine.maybe_retune chains calls), and each record must survive —
+    # otherwise retune_count and the recorded events could not be reconciled.
+    new_dep.meta["retune_log"] = (list(new_dep.meta.get("retune_log") or []) + [record])[-16:]
     return RetuneResult(
         deployment=new_dep,
         report=report,
         n_harvested=harvested,
         n_problems=len(problems),
         warm_started=centers is not None,
+        family=family,
     )
 
 

@@ -10,6 +10,22 @@ from .normalize import NORMALIZATIONS, normalize
 _EPS = 1e-12
 
 
+def geomean_fraction(picked: np.ndarray, best: np.ndarray) -> float:
+    """Geomean over problems of picked-perf / best-perf (the paper's headline
+    fraction-of-optimal metric).
+
+    The one shared implementation: oracle fractions (:func:`achievable_fraction`),
+    shipped-classifier fractions (``dispatch.classifier_fraction``,
+    ``tuner.tune_family``), and the gated family benchmarks all call this, so
+    the epsilon/clipping policy cannot drift between them.  Problems where no
+    config achieved positive perf count as 1.0 (nothing was achievable).
+    """
+    picked = np.asarray(picked, dtype=np.float64)
+    best = np.asarray(best, dtype=np.float64)
+    ratio = np.where(best > 0, picked / np.maximum(best, _EPS), 1.0)
+    return float(np.exp(np.mean(np.log(np.maximum(ratio, _EPS)))))
+
+
 def select_from_dataset(
     ds: TuningDataset,
     n_kernels: int,
@@ -30,10 +46,7 @@ def achievable_fraction(perf_test: np.ndarray, chosen: list[int]) -> float:
     of the deployed kernels (classifier quality is measured separately).
     """
     perf_test = np.asarray(perf_test, dtype=np.float64)
-    best = perf_test.max(axis=1)
-    best_chosen = perf_test[:, chosen].max(axis=1)
-    ratio = np.where(best > 0, best_chosen / np.maximum(best, _EPS), 1.0)
-    return float(np.exp(np.mean(np.log(np.maximum(ratio, _EPS)))))
+    return geomean_fraction(perf_test[:, chosen].max(axis=1), perf_test.max(axis=1))
 
 
 def evaluate_methods(

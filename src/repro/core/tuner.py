@@ -7,6 +7,14 @@ deployable kernel subset -> train the runtime classifier -> emit the
 Fully automated: given a benchmark data source for a new device, no developer
 effort or expertise is needed (paper abstract) — this is the function a
 framework operator runs when bringing up new hardware.
+
+Every kernel family registered in ``repro.core.families`` rides the same
+pipeline: the matmul family anchors the Deployment (its dataset is the
+caller-supplied benchmark table), and :func:`tune_family` runs the identical
+prune+classify loop for each other registered family (attention, wkv,
+ssm_scan, and anything registered later) from its declared harvest + perf
+model.  A new op needs only a ``register_family`` call to get tuned artifacts,
+serving dispatch, telemetry, and retuning for free.
 """
 from __future__ import annotations
 
@@ -15,11 +23,12 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.kernels.attention import attention_config_space
-
+from .cluster import select_configs
 from .dataset import TuningDataset, build_model_dataset, harvest_problems
 from .dispatch import Deployment, classifier_fraction, train_deployment
-from .selection import achievable_fraction, select_from_dataset
+from .families import KernelFamily, family_names, get_family
+from .normalize import normalize
+from .selection import achievable_fraction, geomean_fraction, select_from_dataset
 
 
 @dataclasses.dataclass
@@ -30,6 +39,65 @@ class TuneResult:
     classifier_fraction: float  # what the shipped classifier actually attains
     train: TuningDataset
     test: TuningDataset
+    family_results: dict[str, "FamilyTuneResult"] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class FamilyTuneResult:
+    """One non-matmul family through the prune+classify pipeline."""
+
+    family: str
+    configs: list
+    tree: object
+    problems: list[tuple]
+    oracle_fraction: float
+    classifier_fraction: float
+
+    # tuple-compat: ``configs, tree = tune_family(...)`` keeps working.
+    def __iter__(self):
+        return iter((self.configs, self.tree))
+
+
+def tune_family(
+    name: str | KernelFamily,
+    arch_ids: list[str] | None = None,
+    *,
+    n_kernels: int | None = None,
+    method: str = "pca_kmeans",
+    normalization: str = "standard",
+    seed: int = 0,
+    device_name: str | None = None,
+    problems: list[tuple] | None = None,
+) -> FamilyTuneResult:
+    """Prune + classify one registered kernel family (the paper pipeline).
+
+    Works for any family whose registry entry declares a harvest and a perf
+    model; ``problems`` overrides the harvest (e.g. a retune's live shapes).
+    """
+    fam = name if isinstance(name, KernelFamily) else get_family(name)
+    if fam.name == "matmul":
+        raise ValueError("the matmul family is tuned via tune()/tune_for_archs")
+    space = list(fam.config_space())
+    problems = list(problems if problems is not None else fam.harvest(arch_ids))
+    if not problems:
+        raise ValueError(f"no benchmark problems harvested for family {fam.name!r}")
+    perf = fam.perf_matrix(problems, space, device_name)
+    norm = normalize(perf, normalization)
+    feats = fam.features(problems)
+    k = min(n_kernels or fam.default_n_kernels, len(space))
+    chosen = select_configs(norm, k, method, features=feats, seed=seed)
+    labels = perf[:, chosen].argmax(axis=1)
+    tree = fam.make_tree().fit(feats, labels)
+    pred = np.clip(tree.predict(feats), 0, len(chosen) - 1)
+    picked = perf[np.arange(len(problems)), [chosen[i] for i in pred]]
+    return FamilyTuneResult(
+        family=fam.name,
+        configs=[space[i] for i in chosen],
+        tree=tree,
+        problems=problems,
+        oracle_fraction=achievable_fraction(perf, chosen),
+        classifier_fraction=geomean_fraction(picked, perf.max(axis=1)),
+    )
 
 
 def tune(
@@ -41,20 +109,29 @@ def tune(
     classifier: str = "DecisionTreeA",
     test_fraction: float = 0.25,
     seed: int = 0,
+    arch_ids: list[str] | None = None,
     attn_arch_ids: list[str] | None = None,
     n_attn_kernels: int = 4,
     attn_tuning: tuple | None = None,
+    families: list[str] | None = None,
+    family_tunings: dict[str, "FamilyTuneResult | tuple"] | None = None,
 ) -> TuneResult:
-    """Run the full paper pipeline on a benchmark dataset.
+    """Run the full paper pipeline on a benchmark dataset — for every family.
 
-    ``attn_tuning`` optionally supplies a precomputed ``(configs, tree)``
-    attention tuning (``tune_fleet`` shares one across devices instead of
-    recomputing an identical result per device).
+    ``arch_ids`` scopes EVERY non-matmul family's problem harvest (None =
+    all registered architectures); a family none of those archs launch is
+    skipped and serves its reference default.  ``attn_arch_ids`` is the
+    pre-registry spelling of the same scope, kept as an alias.  ``families``
+    selects which registered non-matmul families to tune (default: all of
+    them); ``family_tunings`` supplies precomputed
+    :class:`FamilyTuneResult`\\ s (or bare ``(configs, tree)`` tuples) —
+    ``tune_fleet`` shares device-insensitive tunings across devices this
+    way.  ``attn_tuning`` is the attention-only legacy spelling of the same.
     """
-    train, test = dataset.split(test_fraction=test_fraction, seed=seed)
-    chosen = select_from_dataset(train, n_kernels, method, normalization, seed=seed)
     from .retune import train_distribution
 
+    train, test = dataset.split(test_fraction=test_fraction, seed=seed)
+    chosen = select_from_dataset(train, n_kernels, method, normalization, seed=seed)
     deployment = train_deployment(
         train,
         chosen,
@@ -71,16 +148,39 @@ def tune(
             "train_distribution": train_distribution(train.problems),
         },
     )
-    # Second kernel family (the paper's future-work direction): the same
-    # pipeline prunes + classifies the flash-attention config space.
-    if attn_tuning is None:
-        attn_tuning = tune_attention(
-            arch_ids=attn_arch_ids, n_kernels=n_attn_kernels, method=method,
-            normalization=normalization, seed=seed,
-        )
-    configs, tree = attn_tuning
-    deployment.attention_configs = configs
-    deployment.attention_tree = tree
+    # Every other registered family through the same pipeline (the paper's
+    # future-work direction, generalized): attention, wkv, ssm_scan, ...
+    precomputed = dict(family_tunings or {})
+    if attn_tuning is not None:
+        precomputed.setdefault("attention", attn_tuning)
+    harvest_archs = arch_ids if arch_ids is not None else attn_arch_ids
+    wanted = [f for f in (families if families is not None else family_names()) if f != "matmul"]
+    family_results: dict[str, FamilyTuneResult] = {}
+    family_dists: dict[str, dict] = {}
+    for fname in wanted:
+        got = precomputed.get(fname)
+        if got is None:
+            fam = get_family(fname)
+            probs = fam.harvest(harvest_archs)
+            if not probs:
+                continue  # none of the assigned archs launch this op: stays untuned
+            got = tune_family(
+                fname, problems=probs, method=method, normalization=normalization,
+                seed=seed, n_kernels=n_attn_kernels if fname == "attention" else None,
+                # Device-insensitive families tune against their single model
+                # target everywhere (tune, fleet sharing, AND retune use the
+                # same perf surface); device-sensitive ones follow the dataset.
+                device_name=dataset.device if fam.device_sensitive else None,
+            )
+        if isinstance(got, FamilyTuneResult):
+            deployment.set_family_tuning(fname, got.configs, got.tree)
+            family_results[fname] = got
+            family_dists[fname] = train_distribution(got.problems)
+        else:  # bare (configs, tree): no problem list, so no provenance
+            configs, tree = got
+            deployment.set_family_tuning(fname, list(configs), tree)
+    if family_dists:
+        deployment.meta["family_distributions"] = family_dists
     return TuneResult(
         deployment=deployment,
         chosen=chosen,
@@ -88,6 +188,7 @@ def tune(
         classifier_fraction=classifier_fraction(test, chosen, deployment),
         train=train,
         test=test,
+        family_results=family_results,
     )
 
 
@@ -99,26 +200,16 @@ def tune_attention(
     normalization: str = "standard",
     seed: int = 0,
 ):
-    """Prune + classify the flash-attention family (same paper pipeline)."""
-    from .attnmodel import (
-        attn_problem_features,
-        build_attn_matrix,
-        harvest_attn_problems,
-    )
-    from .classify import DecisionTreeClassifier
-    from .cluster import select_configs
-    from .normalize import normalize
+    """Prune + classify the flash-attention family (registry shim).
 
-    space = list(attention_config_space())
-    problems = harvest_attn_problems(arch_ids)
-    perf = build_attn_matrix(problems, space)
-    norm = normalize(perf, normalization)
-    feats = attn_problem_features(problems)
-    n_kernels = min(n_kernels, len(space))
-    chosen = select_configs(norm, n_kernels, method, features=feats, seed=seed)
-    labels = perf[:, chosen].argmax(axis=1)
-    tree = DecisionTreeClassifier(max_depth=6, min_samples_leaf=1).fit(feats, labels)
-    return [space[i] for i in chosen], tree
+    Returns ``(configs, tree)`` like it always has; the generic
+    :func:`tune_family` is the implementation.
+    """
+    res = tune_family(
+        "attention", arch_ids, n_kernels=n_kernels, method=method,
+        normalization=normalization, seed=seed,
+    )
+    return res.configs, res.tree
 
 
 def tune_for_archs(
@@ -132,6 +223,8 @@ def tune_for_archs(
     max_problems: int | None = 400,
     seed: int = 0,
     attn_tuning: tuple | None = None,
+    families: list[str] | None = None,
+    family_tunings: dict | None = None,
 ) -> TuneResult:
     """Tune against the GEMM shapes the assigned architectures will launch."""
     problems = harvest_problems(arch_ids, max_problems=max_problems)
@@ -143,8 +236,10 @@ def tune_for_archs(
         normalization=normalization,
         classifier=classifier,
         seed=seed,
-        attn_arch_ids=arch_ids,
+        arch_ids=arch_ids,
         attn_tuning=attn_tuning,
+        families=families,
+        family_tunings=family_tunings,
     )
 
 
@@ -178,6 +273,7 @@ def tune_fleet(
     max_problems: int | None = 400,
     cpu_problems: int = 8,
     seed: int = 0,
+    families: list[str] | None = None,
 ) -> FleetTuneResult:
     """Tune every device in one run and pack a :class:`DeploymentBundle`.
 
@@ -185,18 +281,25 @@ def tune_fleet(
     measures this host via ``repro.core.cpubench``; analytic-model devices go
     through :func:`tune_for_archs`), and the resulting per-device
     ``Deployment``\\ s become one versioned artifact a serving host installs
-    with ``repro.core.bundle.install_bundle``.
+    with ``repro.core.bundle.install_bundle``.  Device-insensitive families
+    (attention, wkv, ssm_scan — their perf models have one target) are tuned
+    once and shared across the fleet.
     """
     from .bundle import DeploymentBundle
     from .devices import canonical_device_name
 
     if not device_names:
         raise ValueError("tune_fleet needs at least one device name")
-    # The attention tuning is device-independent today (the attn perf model
-    # has a single target): compute it once and share across the fleet.
-    attn_tuning = tune_attention(
-        arch_ids=arch_ids, method=method, normalization=normalization, seed=seed
-    )
+    wanted = [f for f in (families if families is not None else family_names()) if f != "matmul"]
+    shared: dict[str, FamilyTuneResult] = {}
+    for fname in wanted:
+        if get_family(fname).device_sensitive:
+            continue
+        probs = get_family(fname).harvest(arch_ids)
+        if probs:
+            shared[fname] = tune_family(
+                fname, problems=probs, method=method, normalization=normalization, seed=seed
+            )
     results: dict[str, TuneResult] = {}
     for raw_name in device_names:
         name = canonical_device_name(raw_name)
@@ -209,13 +312,15 @@ def tune_fleet(
             ds = build_cpu_dataset(cpu_problem_list(cpu_problems))
             res = tune(
                 ds, n_kernels=n_kernels, method=method, normalization=normalization,
-                classifier=classifier, seed=seed, attn_tuning=attn_tuning,
+                classifier=classifier, seed=seed, arch_ids=arch_ids,
+                families=wanted, family_tunings=shared,
             )
         else:
             res = tune_for_archs(
                 arch_ids, device_name=name, n_kernels=n_kernels, method=method,
                 normalization=normalization, classifier=classifier,
-                max_problems=max_problems, seed=seed, attn_tuning=attn_tuning,
+                max_problems=max_problems, seed=seed, families=wanted,
+                family_tunings=shared,
             )
         res.deployment.meta.update(
             oracle_fraction=res.oracle_fraction,
@@ -227,6 +332,7 @@ def tune_fleet(
         meta={
             "devices": sorted(results),
             "archs": list(arch_ids) if arch_ids else "all",
+            "families": ["matmul", *wanted],
             "n_kernels": n_kernels,
             "method": method,
             "normalization": normalization,

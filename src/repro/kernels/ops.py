@@ -29,25 +29,44 @@ from .wkv import DEFAULT_WKV_CONFIG, WkvConfig, wkv_pallas
 
 
 class KernelPolicy(Protocol):
-    """Maps a GEMM problem to the deployed config that should run it."""
+    """Maps a kernel-family problem to the deployed config that should run it.
+
+    One ``select_<family>`` hook per registered family
+    (``repro.core.families``); the ops layer resolves the hook generically
+    via the registry's ``policy_attr``, so a policy implementing only a
+    subset keeps working — unimplemented families fall back to their default
+    config (unless the policy exposes a generic ``select(family, problem)``).
+    """
 
     def select_matmul(self, m: int, k: int, n: int, batch: int) -> MatmulConfig: ...
 
     def select_attention(self, sq: int, skv: int, d: int) -> AttentionConfig: ...
 
+    def select_wkv(self, s: int, hd: int) -> WkvConfig: ...
+
+    def select_ssm(self, s: int, d: int) -> SsmConfig: ...
+
 
 @dataclasses.dataclass
 class FixedPolicy:
-    """Single-kernel baseline (what an untuned library ships)."""
+    """Single-kernel-per-family baseline (what an untuned library ships)."""
 
     matmul_config: MatmulConfig = DEFAULT_CONFIG
     attention_config: AttentionConfig = DEFAULT_ATTN_CONFIG
+    wkv_config: WkvConfig = DEFAULT_WKV_CONFIG
+    ssm_config: SsmConfig = DEFAULT_SSM_CONFIG
 
     def select_matmul(self, m, k, n, batch):
         return self.matmul_config
 
     def select_attention(self, sq, skv, d):
         return self.attention_config
+
+    def select_wkv(self, s, hd):
+        return self.wkv_config
+
+    def select_ssm(self, s, d):
+        return self.ssm_config
 
 
 DEFAULT_LOG_CAP = 4096
@@ -81,7 +100,13 @@ class _Shared:
 
 
 class _Local(threading.local):
-    """Per-thread dispatch fast path: the LRU shape cache and its counters."""
+    """Per-thread dispatch fast path: the LRU shape cache and its counters.
+
+    ``family_stats`` tracks hit/miss per kernel family — cache keys are
+    family-qualified (``(op, *problem)``) so an ssm ``(s, d)`` problem can
+    never alias a matmul ``(m, k)`` tuple, and the counters let operators see
+    which family's traffic the memo is actually absorbing.
+    """
 
     def __init__(self):
         self.epoch: int = -1  # never matches: first dispatch syncs
@@ -90,6 +115,10 @@ class _Local(threading.local):
         self.shape_cache_cap: int = DEFAULT_SHAPE_CACHE_CAP
         self.cache_hits: int = 0
         self.cache_misses: int = 0
+        self.family_stats: dict[str, list] = {}  # op -> [hits, misses]
+        # family -> resolved policy hook (or None): depends only on the live
+        # policy, so it lives and dies with the shape cache (epoch sync).
+        self.hook_cache: dict[str, object] = {}
 
 
 _shared = _Shared()
@@ -112,6 +141,8 @@ def _policy() -> KernelPolicy | None:
         _local.shape_cache.clear()
         _local.cache_hits = 0
         _local.cache_misses = 0
+        _local.family_stats = {}
+        _local.hook_cache = {}
     return _local.policy
 
 
@@ -285,6 +316,8 @@ def clear_shape_cache() -> None:
     _local.shape_cache.clear()
     _local.cache_hits = 0
     _local.cache_misses = 0
+    _local.family_stats = {}
+    _local.hook_cache = {}
 
 
 def set_shape_cache_cap(cap: int) -> None:
@@ -295,12 +328,27 @@ def set_shape_cache_cap(cap: int) -> None:
 
 
 def shape_cache_stats() -> dict:
-    """Hit/miss counters for the dispatch shape cache (reset on policy swap)."""
+    """Hit/miss counters for the dispatch shape cache (reset on policy swap).
+
+    ``per_family`` breaks the counters (and resident cache entries) down by
+    kernel family — the keys are the family-qualified ``op`` names of the
+    selection log.
+    """
+    sizes: dict[str, int] = {}
+    for key in _local.shape_cache:
+        sizes[key[0]] = sizes.get(key[0], 0) + 1
+    per_family = {
+        op: {"hits": hm[0], "misses": hm[1], "size": sizes.get(op, 0)}
+        for op, hm in sorted(_local.family_stats.items())
+    }
+    for op, size in sorted(sizes.items()):  # entries inherited before any stat
+        per_family.setdefault(op, {"hits": 0, "misses": 0, "size": size})
     return {
         "hits": _local.cache_hits,
         "misses": _local.cache_misses,
         "size": len(_local.shape_cache),
         "cap": _local.shape_cache_cap,
+        "per_family": per_family,
     }
 
 
@@ -322,6 +370,7 @@ def _select(op: str, problem: tuple, policy: KernelPolicy, select_fn):
         cfg = _local.shape_cache.get(key, _MISS)
         if cfg is not _MISS:
             _local.cache_hits += 1
+            _local.family_stats.setdefault(op, [0, 0])[0] += 1
             _local.shape_cache.move_to_end(key)
             if _shared.log_enabled:
                 _shared.selection_log.append((op, problem, cfg))
@@ -329,12 +378,55 @@ def _select(op: str, problem: tuple, policy: KernelPolicy, select_fn):
     cfg = select_fn()
     if cacheable:
         _local.cache_misses += 1
+        _local.family_stats.setdefault(op, [0, 0])[1] += 1
         _local.shape_cache[key] = cfg
         if len(_local.shape_cache) > _local.shape_cache_cap:
             _local.shape_cache.popitem(last=False)
     if _shared.log_enabled:
         _shared.selection_log.append((op, problem, cfg))
     return cfg
+
+
+def _policy_hook(pol: KernelPolicy, family: str):
+    """Resolve the policy's selection callable for ``family`` via the registry.
+
+    Replaces the old duck-typed ``hasattr(pol, "select_wkv")`` hooks: the
+    method name comes from the family's declared ``policy_attr``, and a
+    policy may instead expose a generic ``select(family, problem)``.  Returns
+    a ``hook(problem)`` callable, or ``None`` when the policy covers neither
+    (the op runs its default config).  Resolution depends only on (policy,
+    family), so :func:`select_kernel_config` memoizes it per thread — the
+    shape-cache fast path never pays registry lookup or ``getattr``.
+    """
+    from repro.core.families import get_family
+
+    meth = getattr(pol, get_family(family).policy_attr, None)
+    if meth is not None:
+        return lambda problem: meth(*problem)
+    generic = getattr(pol, "select", None)
+    if generic is not None:
+        return lambda problem: generic(family, problem)
+    return None
+
+
+def select_kernel_config(family: str, problem: tuple):
+    """Generic launcher-side selection for any registered family.
+
+    Shape-memoized under the family-qualified key, logged to the selection
+    log as ``(family, problem, config)``; ``None`` when no policy is
+    installed or the policy does not cover this family.
+    """
+    pol = _policy()  # syncs _local (and drops stale hook/shape caches)
+    if pol is None:
+        return None
+    hook = _local.hook_cache.get(family, _MISS)
+    if hook is _MISS:
+        hook = _policy_hook(pol, family)
+        _local.hook_cache[family] = hook
+    if hook is None:
+        return None
+    problem = tuple(problem)
+    return _select(family, problem, pol, lambda: hook(problem))
 
 
 def select_matmul_config(m: int, k: int, n: int, batch: int = 1) -> MatmulConfig | None:
@@ -344,6 +436,16 @@ def select_matmul_config(m: int, k: int, n: int, batch: int = 1) -> MatmulConfig
     if pol is None:
         return None
     return _select("matmul", (m, k, n, batch), pol, lambda: pol.select_matmul(m, k, n, batch))
+
+
+def select_wkv_config(s: int, hd: int) -> WkvConfig | None:
+    """Launcher-side WKV selection (what ``wkv`` runs at trace time)."""
+    return select_kernel_config("wkv", (s, hd))
+
+
+def select_ssm_config(s: int, d: int) -> SsmConfig | None:
+    """Launcher-side selective-scan selection (what ``ssm_scan`` runs)."""
+    return select_kernel_config("ssm_scan", (s, d))
 
 
 # ---------------------------------------------------------------------------
@@ -419,9 +521,8 @@ def wkv(r, k, v, logw, u, state=None, *, config: WkvConfig | None = None):
     kernel when enabled; otherwise the jnp reference (identical math).
     """
     b, s, h, hd = r.shape
-    pol = _policy()
-    if config is None and pol is not None and hasattr(pol, "select_wkv"):
-        config = _select("wkv", (s, hd), pol, lambda: pol.select_wkv(s, hd))
+    if config is None:
+        config = select_wkv_config(s, hd)
     if not _shared.use_pallas:
         from .ref import wkv_ref
 
@@ -449,10 +550,8 @@ def ssm_scan(dtx, dta, b, v_c, state=None, *, config: SsmConfig | None = None):
     (d, N) state in VMEM (no (B,S,d,N) HBM materialization); jnp path is the
     associative-scan oracle.
     """
-    pol = _policy()
-    if config is None and pol is not None and hasattr(pol, "select_ssm"):
-        s_len, d_in = dtx.shape[1], dtx.shape[2]
-        config = _select("ssm_scan", (s_len, d_in), pol, lambda: pol.select_ssm(s_len, d_in))
+    if config is None:
+        config = select_ssm_config(dtx.shape[1], dtx.shape[2])
     if not _shared.use_pallas:
         from .ref import ssm_scan_ref
 

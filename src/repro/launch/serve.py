@@ -86,7 +86,7 @@ def main(argv=None) -> None:
               f"{status.queued} queued requests unfinished")
     for ev in engine.retune_events:
         if ev.swapped:
-            verdict = "retuned + hot-swapped"
+            verdict = f"retuned {'+'.join(ev.families) or 'matmul'} + hot-swapped"
         elif ev.drift_score >= args.drift_threshold:
             verdict = f"below event floor ({ev.n_events}/{args.retune_min_events})"
         else:

@@ -7,8 +7,10 @@ effort pitch):
   python -m repro.launch.tune --device host_cpu --out deploy.json   # measured
   python -m repro.launch.tune --device tpu_v5e --archs granite-8b,glm4-9b
 
-Fleet mode packs one Deployment per device into a single v3 bundle any host
-auto-installs for its detected hardware:
+Every registered kernel family (matmul, attention, wkv, ssm_scan, ...) is
+tuned into the artifact; ``--families`` restricts the set.  Fleet mode packs
+one Deployment per device into a single v5 bundle any host auto-installs for
+its detected hardware:
 
   python -m repro.launch.tune --devices tpu_v5e,tpu_v4 --bundle bundle.json
 
@@ -31,6 +33,9 @@ def main(argv=None) -> None:
     ap.add_argument("--devices", default=None,
                     help="comma-separated device names to tune into one bundle (fleet mode)")
     ap.add_argument("--archs", default=None, help="comma-separated arch ids (default: all)")
+    ap.add_argument("--families", default=None,
+                    help="comma-separated kernel families to tune beyond matmul "
+                         "(default: every registered family; see repro.core.families)")
     ap.add_argument("--n-kernels", type=int, default=8)
     ap.add_argument("--method", default="pca_kmeans", choices=CLUSTER_METHODS)
     ap.add_argument("--normalization", default="standard", choices=NORMALIZATIONS)
@@ -50,6 +55,13 @@ def main(argv=None) -> None:
     if archs:
         for a in archs:
             registry.get(a)  # validate early
+    families = None
+    if args.families is not None:
+        from repro.core.families import get_family
+
+        families = [f for f in args.families.replace(" ", "").split(",") if f]
+        for f in families:
+            get_family(f)  # validate early
 
     if args.bundle:
         device_names = tuple(
@@ -59,14 +71,14 @@ def main(argv=None) -> None:
             archs, device_names=device_names, n_kernels=args.n_kernels,
             method=args.method, normalization=args.normalization,
             classifier=args.classifier, max_problems=args.max_problems,
-            cpu_problems=args.cpu_problems,
+            cpu_problems=args.cpu_problems, families=families,
         )
         save_fleet(fleet, args.bundle)
         print(f"bundle ({len(fleet.results)} devices) -> {args.bundle}")
         for name, res in sorted(fleet.results.items()):
             print(f"  {name}: oracle {res.oracle_fraction:.1%} / "
                   f"classifier {res.classifier_fraction:.1%} "
-                  f"({len(res.deployment.configs)} matmul kernels)")
+                  f"(families: {', '.join(res.deployment.family_names())})")
         if not args.out:
             return
     if args.device == "host_cpu":
@@ -77,18 +89,21 @@ def main(argv=None) -> None:
         result = tune(
             ds, n_kernels=args.n_kernels, method=args.method,
             normalization=args.normalization, classifier=args.classifier,
-            attn_arch_ids=archs,
+            arch_ids=archs, families=families,
         )
     else:
         result = tune_for_archs(
             archs, device_name=args.device, n_kernels=args.n_kernels,
             method=args.method, normalization=args.normalization,
             classifier=args.classifier, max_problems=args.max_problems,
+            families=families,
         )
     save_result(result, args.out)
+    dep = result.deployment
     print(f"deployment -> {args.out}")
-    print(f"  matmul kernels:    {[c.name() for c in result.deployment.configs]}")
-    print(f"  attention kernels: {[c.name() for c in result.deployment.attention_configs]}")
+    for fname in dep.family_names():
+        configs, _tree = dep.family_tuning(fname)
+        print(f"  {fname:9s} kernels: {[c.name() for c in configs]}")
     print(f"  oracle {result.oracle_fraction:.1%} / classifier {result.classifier_fraction:.1%}")
 
 

@@ -45,7 +45,10 @@ class RetuneEvent:
 
     ``swapped`` distinguishes a drift check that triggered a retune + policy
     hot-swap from one that merely looked; ``epoch`` is the ops-layer policy
-    epoch after the swap (monotonic across the process).
+    epoch after the swap (monotonic across the process).  Drift is checked
+    per kernel family: ``families`` names the families whose tunings were
+    refreshed by this event (empty when nothing triggered), and
+    ``drift_score`` / ``unseen_fraction`` report the worst family observed.
     """
 
     step: int
@@ -56,6 +59,7 @@ class RetuneEvent:
     n_events: int
     n_configs: int
     epoch: int
+    families: tuple[str, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,7 +244,7 @@ class ServingEngine:
         new policy.
         """
         from repro.core.dispatch import Deployment
-        from repro.core.retune import TelemetrySnapshot, detect_drift, incremental_retune
+        from repro.core.retune import TelemetrySnapshot, detect_drift_all, incremental_retune
         from repro.kernels import ops
 
         dep = self.deployment
@@ -252,20 +256,33 @@ class ServingEngine:
         snap = TelemetrySnapshot.from_selection_log(ops.selection_log(), online=online)
         if snap.n_events == 0:
             return None
-        report = detect_drift(
+        # Drift is detected per (device, family, shape): every family with
+        # live traffic gets its own report against its own provenance, so an
+        # ssm-only traffic shift retunes the ssm family without touching the
+        # (undrifted) matmul artifact.
+        reports = detect_drift_all(
             snap, dep, threshold=self.drift_threshold, min_events=self.retune_min_events
         )
-        if not (report.triggered or force):
-            ev = RetuneEvent(self.steps, report.score, report.unseen_fraction,
-                             False, report.triggered, report.n_events,
-                             len(dep.configs), ops.policy_epoch())
+        worst = max(reports.values(), key=lambda r: r.score)
+        to_retune = [f for f, r in reports.items() if r.triggered]
+        if force and not to_retune:
+            to_retune = list(reports)
+        if not to_retune:
+            # n_events is the worst family's own event count: the "below
+            # event floor" verdict must be judged against the per-family
+            # floor drift detection actually applied, not the cross-family
+            # aggregate.
+            ev = RetuneEvent(self.steps, worst.score, worst.unseen_fraction,
+                             False, any(r.triggered for r in reports.values()),
+                             worst.n_events, len(dep.configs), ops.policy_epoch())
             self.retune_events.append(ev)
             return ev
-        result = incremental_retune(
-            dep, snap, report=report, threshold=self.drift_threshold,
-            min_events=self.retune_min_events,
-        )
-        new_dep = result.deployment
+        new_dep = dep
+        for fam in to_retune:
+            new_dep = incremental_retune(
+                new_dep, snap, family=fam, report=reports[fam],
+                threshold=self.drift_threshold, min_events=self.retune_min_events,
+            ).deployment
         if self.device is not None and ops.active_device() == self.device:
             ops.set_kernel_policy_for_device(self.device, new_dep)  # registry hot-swap
         else:
@@ -282,9 +299,11 @@ class ServingEngine:
         # requests continue without a drop, paying only a retrace.
         self._prefill_cache.clear()
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
-        ev = RetuneEvent(self.steps, report.score, report.unseen_fraction,
-                         True, report.triggered, report.n_events,
-                         len(new_dep.configs), ops.policy_epoch())
+        worst_retuned = max((reports[f] for f in to_retune), key=lambda r: r.score)
+        ev = RetuneEvent(self.steps, worst_retuned.score, worst_retuned.unseen_fraction,
+                         True, any(r.triggered for r in reports.values()),
+                         worst_retuned.n_events, len(new_dep.configs), ops.policy_epoch(),
+                         tuple(to_retune))
         self.retune_events.append(ev)
         return ev
 

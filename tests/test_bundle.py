@@ -87,8 +87,8 @@ def test_bundle_roundtrip_two_devices(tmp_path, bundle2):
     path = tmp_path / "bundle.json"
     bundle2.save(path)
     blob = json.loads(path.read_text())
-    assert blob["version"] == 4 and blob["format"] == "bundle"
-    assert blob["deployments"]["tpu_v5e"]["version"] == 2  # embeds v2 blobs
+    assert blob["version"] == 5 and blob["format"] == "bundle"
+    assert blob["deployments"]["tpu_v5e"]["version"] == 5  # embeds v5 blobs
     back = DeploymentBundle.load(path)
     assert back.devices == ["tpu_v4", "tpu_v5e"]
     for name in back.devices:

@@ -176,7 +176,8 @@ def test_shape_cache_hits_on_repeated_dispatch():
     assert ops.shape_cache_stats()["misses"] == 2
     ops.set_kernel_policy(res.deployment)
     assert ops.shape_cache_stats() == {"hits": 0, "misses": 0, "size": 0,
-                                       "cap": ops.DEFAULT_SHAPE_CACHE_CAP}
+                                       "cap": ops.DEFAULT_SHAPE_CACHE_CAP,
+                                       "per_family": {}}
 
 
 def test_shape_cache_lru_eviction():

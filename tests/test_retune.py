@@ -198,7 +198,7 @@ def test_bundle_v4_provenance_roundtrip(tmp_path, tuned):
     path = tmp_path / "b.json"
     bundle.save(path)
     blob = json.loads(path.read_text())
-    assert blob["version"] == 4
+    assert blob["version"] == 5
     assert "train_distribution" in blob["provenance"]["tpu_v5e"]
     back = DeploymentBundle.load(path)
     got = back.deployments["tpu_v5e"].meta["train_distribution"]
