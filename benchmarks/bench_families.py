@@ -27,7 +27,6 @@ import numpy as np
 from repro.core.families import get_family
 from repro.core.selection import geomean_fraction
 from repro.core.tuner import tune_family
-from repro.kernels import ops
 
 from .common import save_json
 
@@ -76,19 +75,19 @@ def bench_dispatch(n: int = 2000) -> dict:
     from repro.core.dataset import build_model_dataset, synthetic_problems
     from repro.core.tuner import tune
 
+    from repro.core.runtime import KernelRuntime
+
     ds = build_model_dataset(synthetic_problems(60))
     dep = tune(ds, n_kernels=5).deployment
-    ops.set_kernel_policy(dep)
-    try:
-        shapes = [(s, hd) for s in (1, 128, 2048, 32768) for hd in (16, 64)]
-        t0 = time.perf_counter()
-        for i in range(n):
-            ops.select_wkv_config(*shapes[i % len(shapes)])
-        wkv_rate = n / max(time.perf_counter() - t0, 1e-9)
-        stats = ops.shape_cache_stats()["per_family"].get("wkv", {})
-        return {"wkv_selects_per_s": wkv_rate, "wkv_cache": stats}
-    finally:
-        ops.set_kernel_policy(None)
+    rt = KernelRuntime(name="bench-families")
+    rt.install(dep)
+    shapes = [(s, hd) for s in (1, 128, 2048, 32768) for hd in (16, 64)]
+    t0 = time.perf_counter()
+    for i in range(n):
+        rt.select_wkv_config(*shapes[i % len(shapes)])
+    wkv_rate = n / max(time.perf_counter() - t0, 1e-9)
+    stats = rt.shape_cache_stats()["per_family"].get("wkv", {})
+    return {"wkv_selects_per_s": wkv_rate, "wkv_cache": stats}
 
 
 def main(quick: bool = False) -> list[tuple[str, float, str]]:

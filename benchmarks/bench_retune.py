@@ -2,7 +2,7 @@
 
 Tracks the two costs that make the runtime loop (DESIGN.md §8) viable:
 
-  * **swap** — policy hot-swap latency: `ops.set_kernel_policy_for_device`
+  * **swap** — policy hot-swap latency: `KernelRuntime.install_for_device`
     on the live device plus the first post-swap selection (the epoch resync
     that rebuilds the dispatch fast path), vs a full `install_bundle`;
   * **retune vs full tune** — `retune.incremental_retune` (bucket-level
@@ -25,8 +25,8 @@ import numpy as np
 from repro.core import retune
 from repro.core.bundle import DeploymentBundle, install_bundle
 from repro.core.dataset import build_model_dataset, synthetic_problems
+from repro.core.runtime import KernelRuntime
 from repro.core.tuner import tune
-from repro.kernels import ops
 
 DEVICE = "tpu_v5e"
 
@@ -67,16 +67,16 @@ def main(argv=None) -> dict:
     dep = res.deployment
     print(f"initial deployment: {len(dep.configs)} kernels from {n_problems} problems")
 
-    # -- drive shifted traffic through the dispatch layer --------------------
-    ops.set_kernel_policy_for_device(DEVICE, dep)
-    ops.activate_device(DEVICE)
-    ops.set_selection_logging(True, cap=8192)
-    ops.clear_selection_log()
+    # -- drive shifted traffic through an isolated runtime handle ------------
+    rt = KernelRuntime(name="bench-retune")
+    rt.install_for_device(DEVICE, dep)
+    rt.activate_device(DEVICE)
+    rt.set_selection_logging(True, cap=8192)
     rng = np.random.default_rng(0)
     traffic = _shifted_traffic(rng, n_traffic)
     for p in traffic:
-        ops.select_matmul_config(*p)
-    snap = retune.TelemetrySnapshot.from_selection_log(ops.selection_log())
+        rt.select_matmul_config(*p)
+    snap = retune.TelemetrySnapshot.from_runtime(rt)
     report = retune.detect_drift(snap, dep)
     print(f"drift {report.score:.3f} (unseen {report.unseen_fraction:.1%}), "
           f"{len(report.drifted_buckets)} drifted buckets / {snap.n_events} events")
@@ -103,26 +103,26 @@ def main(argv=None) -> dict:
 
     def swap_only():
         state["i"] ^= 1
-        ops.set_kernel_policy_for_device(DEVICE, deps[state["i"]])
+        rt.install_for_device(DEVICE, deps[state["i"]])
 
     def swap_and_select():
         swap_only()
-        ops.select_matmul_config(*probe)  # first post-swap selection (resync)
+        rt.select_matmul_config(*probe)  # first post-swap selection (resync)
 
     t_swap_only = _median_of(swap_only, max(reps, 5))
     t_swap = _median_of(swap_and_select, max(reps, 5))
     bundle = DeploymentBundle({DEVICE: dep})
 
     def install_and_select():
-        install_bundle(bundle, DEVICE)
-        ops.select_matmul_config(*probe)
+        install_bundle(bundle, DEVICE, runtime=rt)
+        rt.select_matmul_config(*probe)
 
     t_install = _median_of(install_and_select, max(reps, 5))
     print(f"swap  registry {t_swap_only * 1e6:6.0f} us   +first-selection {t_swap * 1e6:6.0f} us   "
           f"install_bundle+selection {t_install * 1e6:6.0f} us")
     # re-pin the registry state install_bundle replaced
-    ops.set_kernel_policy_for_device(DEVICE, dep)
-    ops.activate_device(DEVICE)
+    rt.install_for_device(DEVICE, dep)
+    rt.activate_device(DEVICE)
 
     # -- availability under continuous swapping ------------------------------
     n_sel = 2_000 if args.smoke else 20_000
@@ -133,12 +133,12 @@ def main(argv=None) -> dict:
         i = 0
         while not stop.is_set():
             i ^= 1
-            ops.set_kernel_policy_for_device(DEVICE, deps[i])
+            rt.install_for_device(DEVICE, deps[i])
             swaps["n"] += 1
 
     def dispatch_loop():
         for j in range(n_sel):
-            cfg = ops.select_matmul_config(*traffic[j % len(traffic)])
+            cfg = rt.select_matmul_config(*traffic[j % len(traffic)])
             assert cfg is not None  # never unpoliced mid-swap
 
     t_quiet = _median_of(dispatch_loop, 1)
@@ -152,10 +152,7 @@ def main(argv=None) -> dict:
     print(f"disp  quiet {quiet_rate:10.0f} sel/s   under-swap {swapping_rate:10.0f} sel/s "
           f"({swaps['n']} swaps during run)")
 
-    ops.set_selection_logging(False)
-    ops.clear_selection_log()
-    ops.clear_device_policies()
-
+    # rt is a local handle: nothing process-global to tear down
     results = {
         "n_problems": n_problems,
         "n_traffic": n_traffic,

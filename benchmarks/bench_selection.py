@@ -8,8 +8,13 @@ companion case study's retuning economics):
     baseline so the speedup stays measurable forever);
   * **predict** — batch classification of 10k feature rows, flat-array
     frontier descent vs the seed per-row nested walk;
-  * **dispatch** — policy selections/sec through ``repro.kernels.ops``,
-    cold (featurize+predict every call) vs shape-cache-hit.
+  * **dispatch** — policy selections/sec through a ``KernelRuntime`` handle,
+    cold (featurize+predict every call) vs shape-cache-hit;
+  * **handle vs legacy** — the same warm dispatch through an explicit
+    ``KernelRuntime`` handle vs the deprecated module-level
+    ``repro.kernels.ops`` shim path (which resolves the current runtime per
+    call).  Gated in ``perf_gate.py`` so the api_redesign's indirection can
+    never quietly eat the PR-1 compiled fast path.
 
 Run:  PYTHONPATH=src python benchmarks/bench_selection.py [--smoke] [--json out]
 """
@@ -24,6 +29,7 @@ import numpy as np
 from repro.core.classify import DecisionTreeClassifier
 from repro.core.dataset import build_model_dataset, problem_features, synthetic_problems
 from repro.core.dispatch import build_labels, train_deployment
+from repro.core.runtime import KernelRuntime, default_runtime
 from repro.core.selection import select_from_dataset
 from repro.kernels import ops
 
@@ -161,33 +167,64 @@ def main(argv=None) -> dict:
 
     # -- dispatch: selections/sec, cold vs shape-cache-hit -------------------
     dep = train_deployment(ds, chosen, "DecisionTreeA")
-    ops.set_kernel_policy(dep)
+    rt = KernelRuntime(name="bench-selection")
+    rt.install(dep)
     shapes = [tuple(int(v) for v in p) for p in ds.problems]
-    try:
-        def cold():
-            ops.clear_shape_cache()
-            for i in range(n_dispatch):
-                m, k, n, b = shapes[i % len(shapes)]
-                # bypass the cache: a fresh shape key every call
-                dep.select_matmul(m, k, n, b)
 
-        def warm():
-            ops.clear_shape_cache()
-            for i in range(n_dispatch):
-                m, k, n, b = shapes[i % len(shapes)]
-                ops.select_matmul_config(m, k, n, b)
+    def cold():
+        rt.clear_shape_cache()
+        for i in range(n_dispatch):
+            m, k, n, b = shapes[i % len(shapes)]
+            # bypass the cache: a fresh shape key every call
+            dep.select_matmul(m, k, n, b)
 
-        t_cold = _best_of(cold, reps)
-        t_warm = _best_of(warm, reps)
-        stats = ops.shape_cache_stats()
-        assert stats["hits"] >= n_dispatch - len(shapes), stats
-    finally:
-        ops.set_kernel_policy(None)
+    def warm():
+        rt.clear_shape_cache()
+        for i in range(n_dispatch):
+            m, k, n, b = shapes[i % len(shapes)]
+            rt.select_matmul_config(m, k, n, b)
+
+    t_cold = _best_of(cold, reps)
+    t_warm = _best_of(warm, reps)
+    stats = rt.shape_cache_stats()
+    assert stats["hits"] >= n_dispatch - len(shapes), stats
     cold_rate = n_dispatch / t_cold
     warm_rate = n_dispatch / t_warm
     print(f"disp  cold {cold_rate:10.0f} sel/s   cached {warm_rate:10.0f} sel/s   "
           f"speedup {warm_rate / cold_rate:6.1f}x   "
           f"(cache: {stats['hits']} hits / {stats['misses']} misses)")
+
+    # -- handle vs legacy-global: the api_redesign dispatch microbench -------
+    # Same deployment, same warm shapes: explicit KernelRuntime methods vs
+    # the deprecated ops.* shim (one extra current_runtime() resolution per
+    # call).  The ratio should sit near 1.0; a fall-off means the redesign's
+    # indirection started taxing the serving fast path.
+    default_runtime().install(dep)  # the shims' target (no deprecated call)
+    # All-cache-hit loops are so fast that n_dispatch iterations time ~1 ms;
+    # stretch the timed region and interleave more reps so one scheduler
+    # preemption cannot flip the gated ratio.
+    n_ab = n_dispatch * 4
+    try:
+        def handle():
+            for i in range(n_ab):
+                m, k, n, b = shapes[i % len(shapes)]
+                rt.select_matmul_config(m, k, n, b)
+
+        def legacy():
+            for i in range(n_ab):
+                m, k, n, b = shapes[i % len(shapes)]
+                ops.select_matmul_config(m, k, n, b)
+
+        handle()  # prime both caches outside the timed region
+        legacy()
+        t_handle, t_legacy = _best_of_pair(handle, legacy, max(reps, 5))
+    finally:
+        default_runtime().install(None)
+    handle_rate = n_ab / t_handle
+    legacy_rate = n_ab / t_legacy
+    runtime_ratio = handle_rate / legacy_rate
+    print(f"disp  handle {handle_rate:8.0f} sel/s   legacy shim {legacy_rate:8.0f} sel/s   "
+          f"handle/legacy {runtime_ratio:5.2f}x")
 
     results = {
         "n_problems": n_problems,
@@ -201,6 +238,9 @@ def main(argv=None) -> dict:
         "dispatch_cold_per_s": cold_rate,
         "dispatch_cached_per_s": warm_rate,
         "dispatch_speedup": warm_rate / cold_rate,
+        "dispatch_handle_per_s": handle_rate,
+        "dispatch_legacy_per_s": legacy_rate,
+        "runtime_dispatch_ratio": runtime_ratio,
     }
     if args.json:
         from pathlib import Path

@@ -30,6 +30,10 @@ SELECTION_METRICS = {
     "fit_speedup": "higher",
     "predict_speedup": "higher",
     "dispatch_speedup": "higher",
+    # api_redesign guard: explicit KernelRuntime handle dispatch vs the
+    # deprecated ops.* shim path — a fall-off below baseline means runtime
+    # indirection crept into the serving fast path.
+    "runtime_dispatch_ratio": "higher",
 }
 # fig7 rows named fig7_<arch>_tuned8_ms are totals in ms: lower is better.
 FIG7_SUFFIX = "_tuned8_ms"
@@ -40,6 +44,7 @@ FAMILIES_SUFFIX = "_speedup"
 
 # recorded in the artifact for trend-watching, never gated (machine-dependent)
 UNGATED_RECORD = ("dispatch_cold_per_s", "dispatch_cached_per_s",
+                  "dispatch_handle_per_s", "dispatch_legacy_per_s",
                   "fit_seed_s", "fit_fast_s", "predict_nested_s", "predict_flat_s")
 
 

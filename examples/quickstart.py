@@ -1,14 +1,22 @@
 """Quickstart: the paper's full pipeline in ~50 lines — for every kernel family.
 
   benchmark table -> normalize -> cluster-select kernels -> train classifier
-  -> deploy a multi-family bundle -> ML-guided dispatch of every matmul,
-  attention, WKV, and selective-scan launch in a model.
+  -> deploy a multi-family bundle -> an isolated KernelRuntime dispatches
+  every matmul, attention, WKV, and selective-scan launch in a model.
+
+Fully on the redesigned explicit-handle API (DESIGN.md §10): nothing here
+touches process-global state, and the whole lifecycle is
+
+    bundle = repro.tune(...)            # or core tune() on your own dataset
+    rt = bundle.runtime(device=...)     # isolated runtime handle
+    engine = rt.serve(model, params)    # serving engine on that runtime
+    engine.run(requests)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
-from repro.core.bundle import DeploymentBundle, install_bundle
+import repro
 from repro.core.codegen import tree_to_python
 from repro.core.dataset import build_model_dataset, synthetic_problems
 from repro.core.tuner import tune
@@ -24,6 +32,7 @@ print(f"dataset: {len(dataset.problems)} problems x {len(dataset.configs)} confi
 #    a decision tree learns to pick among them at runtime — and because every
 #    op is a registered kernel family (repro.core.families), the SAME
 #    pipeline prunes + classifies attention, WKV, and the selective-SSM scan.
+#    (repro.tune(...) wraps this for whole-fleet, multi-device tuning.)
 result = tune(dataset, n_kernels=8, method="pca_kmeans", classifier="DecisionTreeA")
 dep = result.deployment
 for fname in dep.family_names():
@@ -36,27 +45,27 @@ print(f"matmul classifier fraction of optimal: {result.classifier_fraction:.1%}"
 print("\n--- generated launcher (first lines) ---")
 print("\n".join(tree_to_python(dep.classifier).splitlines()[:8]))
 
-# 4. Ship it: a v5 bundle carries all four families; install_bundle routes by
-#    detected device and every repro op now dispatches through the artifact.
-bundle = DeploymentBundle({"tpu_v5e": dep})
-install_bundle(bundle, device="tpu_v5e")
-ops.set_selection_logging(True)  # opt-in: dispatch decisions are not recorded by default
-ops.clear_selection_log()
-a = jnp.ones((512, 784), jnp.bfloat16)
-b = jnp.ones((784, 512), jnp.bfloat16)
-ops.matmul(a, b)
-a2 = jnp.ones((1, 4096), jnp.bfloat16)  # decode-style GEMV picks differently
-b2 = jnp.ones((4096, 512), jnp.bfloat16)
-ops.matmul(a2, b2)
-q = jnp.ones((1, 4, 128, 64), jnp.bfloat16)
-ops.attention(q, q, q)  # flash-attention family
-ops.select_wkv_config(4096, 64)  # RWKV6 recurrence family
-ops.select_ssm_config(2048, 1600)  # Mamba selective-scan family
+# 4. Ship it: a v5 bundle carries all four families; bundle.runtime() loads
+#    it into an ISOLATED KernelRuntime (build several for several tenants —
+#    they share nothing), and activation scopes dispatch to that handle.
+bundle = repro.DeploymentBundle({"tpu_v5e": dep})
+rt = bundle.runtime(device="tpu_v5e")
+rt.set_selection_logging(True)  # opt-in telemetry, scoped to this runtime
+with rt.activate():  # every repro op in this block dispatches through rt
+    a = jnp.ones((512, 784), jnp.bfloat16)
+    b = jnp.ones((784, 512), jnp.bfloat16)
+    ops.matmul(a, b)
+    a2 = jnp.ones((1, 4096), jnp.bfloat16)  # decode-style GEMV picks differently
+    b2 = jnp.ones((4096, 512), jnp.bfloat16)
+    ops.matmul(a2, b2)
+    q = jnp.ones((1, 4, 128, 64), jnp.bfloat16)
+    ops.attention(q, q, q)  # flash-attention family
+rt.select_wkv_config(4096, 64)  # RWKV6 recurrence family (direct handle call)
+rt.select_ssm_config(2048, 1600)  # Mamba selective-scan family
 print("\n--- trace-time kernel selections (family-qualified) ---")
-for op, problem, cfg in ops.selection_log():
+for op, problem, cfg in rt.selection_log():
     print(f"  {op}{problem} -> {cfg.name()}")
-stats = ops.shape_cache_stats()
+stats = rt.shape_cache_stats()
 print(f"shape cache per family: { {f: s['size'] for f, s in stats['per_family'].items()} }")
-ops.clear_device_policies()
-ops.set_selection_logging(False)
-ops.clear_selection_log()
+# No teardown choreography: rt and its caches/logs die with this scope, and
+# the process default runtime was never touched.

@@ -27,11 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.configs import registry
 from repro.core.bundle import DeploymentBundle
 from repro.core.dataset import build_model_dataset, synthetic_problems
 from repro.core.tuner import tune
-from repro.kernels import ops
 from repro.models.model import build_model
 from repro.serve.engine import Request, ServingEngine
 
@@ -49,12 +49,15 @@ def main() -> None:
     cfg = registry.get("granite-8b").reduced()
     model = build_model(cfg, dtype=jnp.float32, param_dtype=jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
+    # The engine owns an explicit, isolated KernelRuntime: telemetry, the
+    # policy registry, and the hot swap below are all scoped to this tenant.
+    rt = repro.KernelRuntime(name="retune-demo")
     engine = ServingEngine(
         model, params, max_batch=2, cache_len=128,
-        bundle=bundle, device="tpu_v5e",
+        bundle=bundle, device="tpu_v5e", runtime=rt,
         retune_interval=8, drift_threshold=0.15, retune_min_events=8,
     )
-    epoch0 = ops.policy_epoch()
+    epoch0 = rt.policy_epoch()
     original = engine.deployment
 
     rng = np.random.default_rng(0)
@@ -75,36 +78,34 @@ def main() -> None:
     assert swapped, f"drift never triggered a retune: {engine.retune_events}"
     assert engine.deployment is not original, "policy was not hot-swapped"
     assert engine.deployment.meta.get("retune_count", 0) >= 1
-    assert ops.policy_epoch() > epoch0, "ops-layer policy epoch did not advance"
-    assert ops.active_device() == "tpu_v5e"  # registry swap, not a manual detach
+    assert rt.policy_epoch() > epoch0, "runtime policy epoch did not advance"
+    assert rt.active_device() == "tpu_v5e"  # registry swap, not a manual detach
     first = swapped[0]
     print(f"drift {first.drift_score:.3f} (unseen {first.unseen_fraction:.1%}) "
           f"fired at step {first.step}: retuned to {first.n_configs} kernels and "
-          f"hot-swapped (policy epoch {epoch0} -> {ops.policy_epoch()})")
+          f"hot-swapped (policy epoch {epoch0} -> {rt.policy_epoch()})")
     print(f"retune checks: {len(engine.retune_events)}, swaps: {len(swapped)}, "
           f"final retune_count {engine.deployment.meta['retune_count']}")
     print("zero-downtime continuous tuning loop OK")
 
-    ops.clear_device_policies()
-    ops.set_selection_logging(False)
-    ops.clear_selection_log()
-
     # -- 5. ssm-only traffic shift: drift + retune for one family -----------
+    # A SECOND isolated runtime (same process, zero interaction with rt):
+    # exactly the multi-tenant shape of an A/B shadow-policy deployment.
     from repro.core import retune
 
     dep = engine.deployment
     assert "ssm_scan" in (dep.meta.get("family_distributions") or {}), \
         "tune() should have stamped per-family provenance"
     ssm_before = dep.family_tuning("ssm_scan")
-    ops.set_kernel_policy(dep)
-    ops.set_selection_logging(True)
-    ops.clear_selection_log()
+    rt2 = repro.KernelRuntime(name="ssm-shift")
+    rt2.install(dep)
+    rt2.set_selection_logging(True)
     # Live selective-scan shapes far from the harvested (train/prefill)
     # distribution — a reduced Mamba serving workload.  No matmul traffic.
     for _ in range(6):
         for s, d in [(96, 48), (160, 48), (96, 96)]:
-            ops.select_ssm_config(s, d)
-    snap = retune.TelemetrySnapshot.from_selection_log(ops.selection_log())
+            rt2.select_ssm_config(s, d)
+    snap = retune.TelemetrySnapshot.from_runtime(rt2)
     assert snap.families() == ["ssm_scan"], snap.families()
     rep_mm = retune.detect_drift(snap, dep, family="matmul", min_events=8)
     rep_ssm = retune.detect_drift(snap, dep, family="ssm_scan", min_events=8)
@@ -122,10 +123,7 @@ def main() -> None:
           f"({len(ssm_before.configs)} -> {len(nd.family_tuning('ssm_scan').configs)} kernels, "
           f"{out.n_harvested} buckets harvested); live (96, 48) now runs {cfg.name()}")
     print("family-qualified continuous tuning loop OK")
-
-    ops.set_kernel_policy(None)
-    ops.set_selection_logging(False)
-    ops.clear_selection_log()
+    # No teardown: both runtimes are local handles; nothing global to undo.
 
 
 if __name__ == "__main__":

@@ -16,9 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.configs import registry
 from repro.core.tuner import tune_fleet
-from repro.kernels import ops
 from repro.models.model import build_model
 from repro.serve.engine import Request, ServingEngine
 
@@ -31,13 +31,16 @@ def main() -> None:
                        n_kernels=8, max_problems=100)
     bundle = fleet.bundle
     print(f"bundle tuned for {bundle.devices}")
-    ops.set_selection_logging(True)
-    ops.clear_selection_log()
+    # One isolated runtime per tenant: telemetry below is scoped to it.
+    rt = repro.KernelRuntime(name="serve-lm")
+    rt.set_selection_logging(True)
 
     model = build_model(cfg, dtype=jnp.float32, param_dtype=jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
-    # The engine installs the right per-device Deployment from the bundle.
-    engine = ServingEngine(model, params, max_batch=4, cache_len=128, bundle=bundle)
+    # The engine installs the right per-device Deployment from the bundle
+    # into ITS runtime (nothing process-global is touched).
+    engine = ServingEngine(model, params, max_batch=4, cache_len=128,
+                           bundle=bundle, runtime=rt)
     print(f"host resolved to device {engine.device!r} "
           f"(detected or REPRO_DEVICE; nearest tuned sibling when untuned)")
 
@@ -57,12 +60,11 @@ def main() -> None:
     print(f"served {status.completed}/{len(requests)} requests / {tokens} tokens "
           f"in {dt:.2f}s ({tokens / dt:.1f} tok/s, {engine.steps} batched decode steps)")
 
-    decode_sel = {c.name() for op, p, c in ops.selection_log() if p[0] <= 4}
-    prefill_sel = {c.name() for op, p, c in ops.selection_log() if p[0] > 4}
+    decode_sel = {c.name() for op, p, c in rt.selection_log() if p[0] <= 4}
+    prefill_sel = {c.name() for op, p, c in rt.selection_log() if p[0] > 4}
     print(f"decode-GEMM kernels selected:  {sorted(decode_sel)}")
     print(f"prefill-GEMM kernels selected: {sorted(prefill_sel)}")
-    ops.clear_device_policies()
-    ops.set_kernel_policy(None)
+    # No teardown choreography: the runtime handle dies with this function.
 
 
 if __name__ == "__main__":

@@ -12,10 +12,10 @@ import dataclasses
 
 import jax.numpy as jnp
 
+import repro
 from repro.configs import registry
 from repro.core.tuner import tune_for_archs
 from repro.data.pipeline import DataConfig
-from repro.kernels import ops
 from repro.models.model import build_model
 from repro.optim import adamw
 from repro.train.trainer import Trainer, TrainerConfig
@@ -43,7 +43,8 @@ def main() -> None:
     # Tune the kernel deployment against this architecture's GEMM shapes
     # (the paper's pipeline) and install it for trace-time dispatch.
     result = tune_for_archs([base.name], n_kernels=8, max_problems=100)
-    ops.set_kernel_policy(result.deployment)
+    rt = repro.KernelRuntime(name="train-lm")
+    rt.install(result.deployment)
     print(f"kernel deployment: {len(result.deployment.configs)} configs, "
           f"oracle {result.oracle_fraction:.1%}, classifier {result.classifier_fraction:.1%}")
 
@@ -60,8 +61,9 @@ def main() -> None:
             log_every=10,
         ),
     )
-    step, _, _, metrics = trainer.train()
-    stats = ops.shape_cache_stats()
+    with rt.activate():  # every trace-time GEMM selection dispatches via rt
+        step, _, _, metrics = trainer.train()
+    stats = rt.shape_cache_stats()
     print(f"done at step {step}: loss {float(metrics['loss']):.4f} "
           f"(selections made: {stats['hits'] + stats['misses']})")
 

@@ -11,7 +11,7 @@ Run:  PYTHONPATH=src python examples/tune_new_device.py [--full]
 """
 import argparse
 
-from repro.core.bundle import DeploymentBundle, install_bundle
+from repro.core.bundle import DeploymentBundle
 from repro.core.cluster import CLUSTER_METHODS
 from repro.core.cpubench import build_cpu_dataset, cpu_problems
 from repro.core.normalize import NORMALIZATIONS
@@ -58,10 +58,12 @@ def main() -> None:
     })
     bundle_path = args.out.replace(".json", "") + ".bundle.json"
     bundle.save(bundle_path)
-    installed = install_bundle(bundle)
+    # Serving hosts load the artifact into an isolated runtime handle; the
+    # detected device picks its entry (nearest tuned sibling when untuned).
+    rt = bundle.runtime()
     print(f"bundle ({bundle.devices}) -> {bundle_path}")
-    print(f"auto-installed deployment for this host: {installed.device!r}")
-    print("serving hosts install with: repro.core.bundle.install_bundle(path)")
+    print(f"runtime for this host: {rt!r}")
+    print("serving hosts bring up with: repro.load_bundle(path).runtime()")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,107 @@
+"""ML-guided kernel selection for JAX/Pallas — the library facade.
+
+The whole tune → deploy → serve → retune lifecycle in four lines::
+
+    import repro
+
+    bundle = repro.tune(["granite-8b"], devices=("tpu_v5e", "tpu_v4"))
+    rt = bundle.runtime(device="tpu_v5e")       # isolated KernelRuntime
+    engine = rt.serve(model, params)            # ServingEngine on that runtime
+    engine.run(requests)                        # retunes itself under drift
+
+Everything selection-related that a process does — which tuned policy is
+live, the dispatch shape caches, the selection-telemetry log — belongs to an
+explicit :class:`KernelRuntime` handle (DESIGN.md §10).  Handles are cheap;
+build one per tenant/deployment and activate it around dispatch
+(``with rt.activate(): ...``), or let a :class:`ServingEngine` own one.  Two
+runtimes in one process are fully isolated: concurrent tunings, A/B shadow
+policies, and test isolation without global teardown.
+
+Submodule imports stay lazy (PEP 562): ``import repro`` pulls in neither JAX
+nor the tuning stack until an attribute is touched.
+"""
+from __future__ import annotations
+
+__version__ = "0.5.0"
+
+__all__ = [
+    "Deployment",
+    "DeploymentBundle",
+    "KernelRuntime",
+    "Request",
+    "ServingEngine",
+    "TelemetrySnapshot",
+    "__version__",
+    "current_runtime",
+    "default_runtime",
+    "install_bundle",
+    "load_bundle",
+    "reset_default_runtime",
+    "tune",
+]
+
+# name -> (module, attribute): resolved on first access, cached in globals().
+_LAZY = {
+    "Deployment": ("repro.core.dispatch", "Deployment"),
+    "DeploymentBundle": ("repro.core.bundle", "DeploymentBundle"),
+    "KernelRuntime": ("repro.core.runtime", "KernelRuntime"),
+    "Request": ("repro.serve.engine", "Request"),
+    "ServingEngine": ("repro.serve.engine", "ServingEngine"),
+    "TelemetrySnapshot": ("repro.core.retune", "TelemetrySnapshot"),
+    "current_runtime": ("repro.core.runtime", "current_runtime"),
+    "default_runtime": ("repro.core.runtime", "default_runtime"),
+    "install_bundle": ("repro.core.bundle", "install_bundle"),
+    "reset_default_runtime": ("repro.core.runtime", "reset_default_runtime"),
+}
+
+
+def tune(archs=None, *, devices=("tpu_v5e", "tpu_v4"), n_kernels: int = 8,
+         families=None, **kwargs):
+    """Tune every device and kernel family into one deployable bundle.
+
+    The operator entry point (the paper's zero-developer-effort pitch):
+    ``archs`` scopes the benchmark harvest to the model architectures you
+    will actually launch (None = all registered), ``devices`` names the
+    fleet (``host_cpu`` measures this host; TPU targets use the analytic
+    perf model).  Returns a :class:`DeploymentBundle` — save it with
+    ``bundle.save(path)``, serve it with ``bundle.runtime(device=...)``.
+    Remaining keyword arguments pass through to
+    :func:`repro.core.tuner.tune_fleet` (``method``, ``normalization``,
+    ``classifier``, ``max_problems``, ...).
+    """
+    from repro.core.tuner import tune_fleet
+
+    fleet = tune_fleet(
+        list(archs) if archs is not None else None,
+        device_names=tuple(devices), n_kernels=n_kernels, families=families,
+        **kwargs,
+    )
+    return fleet.bundle
+
+
+def load_bundle(path):
+    """Load a saved :class:`DeploymentBundle` (any blob version, v1-v5).
+
+    ``repro.load_bundle(path).runtime(device=...)`` is the serving-host
+    bring-up path; plain v1/v2 single-device deployment files load as
+    degenerate one-entry bundles.
+    """
+    from repro.core.bundle import DeploymentBundle
+
+    return DeploymentBundle.load(path)
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") from None
+    import importlib
+
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value  # cache: __getattr__ runs once per name
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

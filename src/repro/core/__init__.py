@@ -21,6 +21,8 @@ from .families import (
 )
 from .normalize import NORMALIZATIONS, normalize
 from .pca import PCA
+from .retune import TelemetrySnapshot
+from .runtime import KernelRuntime, current_runtime, default_runtime, reset_default_runtime
 from .selection import achievable_fraction, evaluate_methods, select_from_dataset
 from .tuner import FleetTuneResult, TuneResult, save_fleet, tune, tune_family, tune_fleet, tune_for_archs
 
@@ -35,6 +37,8 @@ __all__ = [
     "FlatTree",
     "FleetTuneResult",
     "KernelFamily",
+    "KernelRuntime",
+    "TelemetrySnapshot",
     "TuneResult",
     "TuningDataset",
     "achievable_fraction",
@@ -42,6 +46,8 @@ __all__ = [
     "build_model_dataset",
     "canonical_device_name",
     "classifier_fraction",
+    "current_runtime",
+    "default_runtime",
     "detect_device",
     "evaluate_methods",
     "families",
@@ -53,6 +59,7 @@ __all__ = [
     "normalize",
     "problem_features",
     "register_family",
+    "reset_default_runtime",
     "resolve_device",
     "save_fleet",
     "select_configs",

@@ -41,7 +41,7 @@ import dataclasses
 import json
 from pathlib import Path
 
-from .devices import canonical_device_name, detect_device, resolve_device
+from .devices import canonical_device_name, resolve_device
 from .dispatch import Deployment
 
 BUNDLE_VERSION = 5
@@ -87,6 +87,24 @@ class DeploymentBundle:
         if resolved is None:
             raise KeyError(f"no deployment for device {device!r} in bundle {self.devices}")
         return self.deployments[resolved], resolved
+
+    def runtime(self, device: str | None = None, *, strict: bool = False,
+                name: str | None = None):
+        """A fresh :class:`~repro.core.runtime.KernelRuntime` serving this bundle.
+
+        The multi-tenant entry point: each call builds an isolated runtime
+        with this bundle's per-device policies installed and the one resolved
+        for ``device`` (default: detected host) activated — two bundles (or
+        two calls) can serve different tunings concurrently in one process::
+
+            rt = repro.load_bundle("bundle.json").runtime(device="tpu_v5e")
+            engine = rt.serve(model, params)
+        """
+        from .runtime import KernelRuntime
+
+        rt = KernelRuntime(name=name or f"bundle[{'+'.join(self.devices)}]")
+        rt.install_bundle(self, device, strict=strict)
+        return rt
 
     def provenance(self) -> dict[str, dict]:
         """Per-device tuning provenance (the v4+ top-level block).
@@ -153,28 +171,24 @@ def install_bundle(
     device: str | None = None,
     *,
     strict: bool = False,
+    runtime=None,
 ) -> Deployment:
-    """Install the bundle: its policies become the registry, one activates.
+    """Install the bundle into a runtime: its policies become the registry.
 
-    Any previously registered per-device policies are replaced (installing a
+    ``runtime`` names the target :class:`~repro.core.runtime.KernelRuntime`
+    (default: the current — usually the process default — runtime; prefer
+    :meth:`DeploymentBundle.runtime` for an isolated handle).  Any previously
+    registered per-device policies of that runtime are replaced (installing a
     bundle is authoritative — resolution must agree between the bundle and
     the registry, so stale entries from an earlier install cannot shadow this
     bundle's fallback choice).  ``device=None`` detects the host
     (``REPRO_DEVICE`` override first); an untuned host degrades to the
     nearest tuned sibling rather than the untuned ``FixedPolicy`` baseline.
     Returns the activated ``Deployment``; whether a fallback happened is
-    readable from ``ops.device_resolution()`` (the shared ``Deployment``
-    objects are never mutated).
+    readable from the runtime's ``device_resolution()`` (the shared
+    ``Deployment`` objects are never mutated).
     """
-    from repro.kernels import ops
+    from .runtime import current_runtime
 
-    if not isinstance(bundle, DeploymentBundle):
-        bundle = DeploymentBundle.load(bundle)
-    requested = canonical_device_name(device) if device else detect_device()
-    # Resolve (and raise under strict) before touching the live registry.
-    bundle.deployment_for(requested, strict=strict)
-    ops.clear_device_policies()
-    for name, d in bundle.deployments.items():
-        ops.set_kernel_policy_for_device(name, d)
-    resolved = ops.activate_device(requested, strict=strict)
-    return bundle.deployments[resolved]
+    rt = runtime if runtime is not None else current_runtime()
+    return rt.install_bundle(bundle, device, strict=strict)

@@ -16,8 +16,9 @@ comparison of the paper's §2.2, combined): the offline classifier is a
                                          warm-start clustering from the
                                          deployed centroids, refit the
                                          classifier traffic-weighted)
-        -> new Deployment               (hot-swapped into repro.kernels.ops
-                                         with zero dropped requests)
+        -> new Deployment               (hot-swapped into the serving engine's
+                                         KernelRuntime with zero dropped
+                                         requests)
 
 Everything buckets per ``(device, family, shape)``: the matmul histogram
 lives in ``meta["train_distribution"]`` (wire compat with v4 artifacts) and
@@ -164,6 +165,16 @@ class TelemetrySnapshot:
             for b, rows in online.measurements().items():
                 snap.observed.setdefault(b, []).extend(rows)
         return snap
+
+    @staticmethod
+    def from_runtime(runtime, online=None) -> "TelemetrySnapshot":
+        """Aggregate one :class:`~repro.core.runtime.KernelRuntime`'s log.
+
+        The runtime handle owns the telemetry window (per-tenant, isolated
+        from every other runtime in the process); this is
+        :meth:`from_selection_log` fed from ``runtime.selection_log()``.
+        """
+        return TelemetrySnapshot.from_selection_log(runtime.selection_log(), online=online)
 
     def families(self) -> list[str]:
         """Families with at least one recorded event, matmul first."""

@@ -6,6 +6,14 @@ routes through :func:`matmul`, which consults the installed
 the problem size at trace time (JAX shapes are static, so trace time is the
 TPU-native "runtime" — see DESIGN.md §2).
 
+Selection state lives on an explicit :class:`~repro.core.runtime.KernelRuntime`
+(DESIGN.md §10): dispatch consults the innermost runtime activated on the
+calling thread (``with rt.activate(): ...``), falling back to the process-wide
+default runtime.  The module-level mutators below
+(``set_kernel_policy`` & co.) are **deprecated** thin shims over that default
+runtime — byte-identical selections, kept for migration; see README's
+old→new map.  New code should hold a ``KernelRuntime`` and call its methods.
+
 A policy is produced by ``repro.core.tuner`` from benchmark data.  With no
 policy installed (or on hosts without a TPU), the op falls back to XLA's
 ``jnp.dot`` — numerically identical to the Pallas path (same f32
@@ -14,12 +22,17 @@ accumulation), which the kernel tests assert.
 from __future__ import annotations
 
 import dataclasses
-import threading
-from collections import OrderedDict, deque
+import warnings
 from typing import Protocol
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.runtime import (
+    DEFAULT_LOG_CAP,
+    DEFAULT_SHAPE_CACHE_CAP,
+    current_runtime,
+)
 
 from .attention import DEFAULT_ATTN_CONFIG, AttentionConfig, flash_attention_pallas
 from .matmul import DEFAULT_CONFIG, MatmulConfig, matmul_pallas
@@ -27,15 +40,49 @@ from .ref import flash_attention_ref
 from .ssm import DEFAULT_SSM_CONFIG, SsmConfig, ssm_scan_pallas
 from .wkv import DEFAULT_WKV_CONFIG, WkvConfig, wkv_pallas
 
+__all__ = [
+    # dispatch entry points (the real ops API)
+    "KernelPolicy",
+    "FixedPolicy",
+    "attention",
+    "matmul",
+    "ssm_scan",
+    "wkv",
+    # launcher-side selection helpers (route through the current runtime)
+    "select_kernel_config",
+    "select_matmul_config",
+    "select_ssm_config",
+    "select_wkv_config",
+    # runtime-state readers (current-runtime passthroughs)
+    "active_device",
+    "device_policies",
+    "device_resolution",
+    "get_kernel_policy",
+    "policy_epoch",
+    "selection_log",
+    "selection_logging_enabled",
+    "shape_cache_stats",
+    # deprecated global mutators (shims over the default runtime)
+    "activate_device",
+    "clear_device_policies",
+    "clear_selection_log",
+    "clear_shape_cache",
+    "set_kernel_policy",
+    "set_kernel_policy_for_device",
+    "set_pallas_enabled",
+    "set_selection_logging",
+    "set_shape_cache_cap",
+]
+
 
 class KernelPolicy(Protocol):
     """Maps a kernel-family problem to the deployed config that should run it.
 
     One ``select_<family>`` hook per registered family
-    (``repro.core.families``); the ops layer resolves the hook generically
-    via the registry's ``policy_attr``, so a policy implementing only a
-    subset keeps working — unimplemented families fall back to their default
-    config (unless the policy exposes a generic ``select(family, problem)``).
+    (``repro.core.families``); the runtime resolves the hook generically via
+    the registry's ``policy_attr``, so a policy implementing only a subset
+    keeps working — unimplemented families fall back to their default config
+    (unless the policy exposes a generic ``select(family, problem)``).
     """
 
     def select_matmul(self, m: int, k: int, n: int, batch: int) -> MatmulConfig: ...
@@ -69,383 +116,140 @@ class FixedPolicy:
         return self.ssm_config
 
 
-DEFAULT_LOG_CAP = 4096
-DEFAULT_SHAPE_CACHE_CAP = 1024
-
-
-class _Shared:
-    """Process-global policy registry (DESIGN.md §8 hot-swap contract).
-
-    Everything a policy swap must change together — the live policy, the
-    per-device registry, the active/requested markers, and the selection log
-    — lives here, mutated only under ``lock`` with an ``epoch`` bump.
-    Dispatching threads keep their own shape caches (:class:`_Local`) and
-    re-sync them lazily: on the first selection after a swap, a thread sees
-    the stale epoch, drops its cache, and adopts the new policy atomically,
-    so a cached config from the old policy can never be served as if the new
-    policy had chosen it.
-    """
-
-    def __init__(self):
-        self.lock = threading.RLock()
-        self.epoch: int = 0
-        self.policy: KernelPolicy | None = None
-        self.device_policies: dict[str, KernelPolicy] = {}
-        self.active_device: str | None = None
-        self.requested_device: str | None = None
-        self.use_pallas: bool = False  # CPU host default: XLA dot
-        self.interpret: bool = False
-        self.log_enabled: bool = False
-        self.selection_log: deque[tuple] = deque(maxlen=DEFAULT_LOG_CAP)
-
-
-class _Local(threading.local):
-    """Per-thread dispatch fast path: the LRU shape cache and its counters.
-
-    ``family_stats`` tracks hit/miss per kernel family — cache keys are
-    family-qualified (``(op, *problem)``) so an ssm ``(s, d)`` problem can
-    never alias a matmul ``(m, k)`` tuple, and the counters let operators see
-    which family's traffic the memo is actually absorbing.
-    """
-
-    def __init__(self):
-        self.epoch: int = -1  # never matches: first dispatch syncs
-        self.policy: KernelPolicy | None = None
-        self.shape_cache: OrderedDict[tuple, object] = OrderedDict()
-        self.shape_cache_cap: int = DEFAULT_SHAPE_CACHE_CAP
-        self.cache_hits: int = 0
-        self.cache_misses: int = 0
-        self.family_stats: dict[str, list] = {}  # op -> [hits, misses]
-        # family -> resolved policy hook (or None): depends only on the live
-        # policy, so it lives and dies with the shape cache (epoch sync).
-        self.hook_cache: dict[str, object] = {}
-
-
-_shared = _Shared()
-_local = _Local()
-_MISS = object()
-
-
-def _policy() -> KernelPolicy | None:
-    """The live policy, syncing this thread's view of a hot swap.
-
-    The epoch check makes the swap atomic from the dispatcher's side: the
-    policy reference and the shape-cache invalidation are taken together
-    under the registry lock, so a selection either runs fully against the
-    old policy (an in-flight request — fine) or fully against the new one.
-    """
-    if _local.epoch != _shared.epoch:
-        with _shared.lock:
-            _local.policy = _shared.policy
-            _local.epoch = _shared.epoch
-        _local.shape_cache.clear()
-        _local.cache_hits = 0
-        _local.cache_misses = 0
-        _local.family_stats = {}
-        _local.hook_cache = {}
-    return _local.policy
-
-
-def policy_epoch() -> int:
-    """Monotonic counter bumped by every policy mutation (swap observability)."""
-    return _shared.epoch
+# ---------------------------------------------------------------------------
+# deprecated module-level API: thin shims over the current (default) runtime
+# ---------------------------------------------------------------------------
+def _warn_global(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{old}() mutates shared global runtime state and is "
+        f"deprecated; hold a repro.KernelRuntime and call {new} instead "
+        f"(see the migration map in README.md)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def set_kernel_policy(policy: KernelPolicy | None) -> None:
-    """Install ``policy`` directly (manual single-device path).
-
-    Clears the active-device marker: a manually installed policy is not tied
-    to the registry, so later ``set_kernel_policy_for_device`` calls won't
-    silently replace it.
-    """
-    with _shared.lock:
-        _shared.policy = policy
-        _shared.active_device = None
-        _shared.requested_device = None
-        _shared.epoch += 1
-    clear_shape_cache()
+    """Deprecated shim: ``KernelRuntime.install(policy)`` on the current runtime."""
+    _warn_global("set_kernel_policy", "KernelRuntime.install(policy)")
+    current_runtime().install(policy)
 
 
 def get_kernel_policy() -> KernelPolicy | None:
-    return _policy()
+    return current_runtime().policy()
 
 
-# ---------------------------------------------------------------------------
-# per-device policy registry (the multi-device DeploymentBundle path)
-# ---------------------------------------------------------------------------
 def set_kernel_policy_for_device(device: str, policy: KernelPolicy | None) -> None:
-    """Register (or with ``None``, drop) the policy tuned for one device.
-
-    Registration alone activates nothing; ``activate_device`` picks which
-    registered policy serves this host.  If ``device`` is the currently
-    active one, the live policy is refreshed in place — this is the
-    zero-downtime hot-swap primitive the retune loop uses: the registry,
-    the live policy, and the epoch bump happen atomically under the lock,
-    and every dispatching thread invalidates its shape cache on its next
-    selection (in-flight selections complete against the old policy).
-    """
-    from repro.core.devices import canonical_device_name
-
-    name = canonical_device_name(device)
-    with _shared.lock:
-        if policy is None:
-            _shared.device_policies.pop(name, None)
-            if name == _shared.active_device:
-                # Dropping the live policy deactivates it — a stale marker
-                # would report an active device while dispatch runs unpoliced.
-                _shared.policy = None
-                _shared.active_device = None
-                _shared.requested_device = None
-                _shared.epoch += 1
-        else:
-            _shared.device_policies[name] = policy
-            if name == _shared.active_device:
-                _shared.policy = policy
-                _shared.epoch += 1
-    # No explicit cache clear: the epoch bump (live-device cases only) makes
-    # every thread — this one included — drop its shape cache on the next
-    # selection; registering an inactive device leaves warm caches alone.
+    """Deprecated shim: ``KernelRuntime.install_for_device(device, policy)``."""
+    _warn_global(
+        "set_kernel_policy_for_device", "KernelRuntime.install_for_device(device, policy)"
+    )
+    current_runtime().install_for_device(device, policy)
 
 
 def device_policies() -> dict[str, KernelPolicy]:
-    """Snapshot of the registered per-device policies (name -> policy)."""
-    with _shared.lock:
-        return dict(_shared.device_policies)
+    """Registered per-device policies of the current runtime (name -> policy)."""
+    return current_runtime().device_policies()
 
 
 def active_device() -> str | None:
-    """Canonical name of the device whose registered policy is live."""
-    return _shared.active_device
+    """Canonical name of the current runtime's live registered device."""
+    return current_runtime().active_device()
 
 
 def device_resolution() -> tuple[str | None, str | None]:
-    """(requested, resolved) device names from the last ``activate_device``.
-
-    Differing entries mean this host is untuned and serving a nearest-sibling
-    fallback artifact; ``(None, None)`` means no registry activation is live.
-    """
-    with _shared.lock:
-        return (_shared.requested_device, _shared.active_device)
+    """(requested, resolved) device names from the last device activation."""
+    return current_runtime().device_resolution()
 
 
 def activate_device(device: str | None = None, *, strict: bool = False) -> str:
-    """Make the registered policy for ``device`` the live ``KernelPolicy``.
+    """Deprecated shim: ``KernelRuntime.activate_device(device)``."""
+    _warn_global("activate_device", "KernelRuntime.activate_device(device)")
+    return current_runtime().activate_device(device, strict=strict)
 
-    ``device=None`` detects the host (``REPRO_DEVICE`` override first).  An
-    unregistered device resolves to the nearest registered sibling via
-    ``repro.core.devices.resolve_device``; ``strict=True`` raises instead of
-    crossing platform families.  Returns the resolved canonical name.
-    """
-    from repro.core.devices import canonical_device_name, detect_device, resolve_device
 
-    requested = canonical_device_name(device) if device is not None else detect_device()
-    with _shared.lock:
-        resolved = resolve_device(requested, list(_shared.device_policies), strict=strict)
-        if resolved is None:
-            raise KeyError(
-                f"no kernel policy registered for device {requested!r} "
-                f"(registered: {sorted(_shared.device_policies)})"
-            )
-        _shared.policy = _shared.device_policies[resolved]
-        _shared.active_device = resolved
-        _shared.requested_device = requested
-        _shared.epoch += 1
-    clear_shape_cache()
-    return resolved
+def clear_device_policies() -> None:
+    """Deprecated shim: ``KernelRuntime.clear_device_policies()``."""
+    _warn_global("clear_device_policies", "KernelRuntime.clear_device_policies()")
+    current_runtime().clear_device_policies()
 
 
 def set_pallas_enabled(enabled: bool, *, interpret: bool = False) -> None:
-    """Route matmuls through the Pallas kernels (interpret=True on CPU)."""
-    _shared.use_pallas = enabled
-    _shared.interpret = interpret
+    """Deprecated shim: ``KernelRuntime.set_pallas_enabled(enabled)``."""
+    _warn_global("set_pallas_enabled", "KernelRuntime.set_pallas_enabled(enabled)")
+    current_runtime().set_pallas_enabled(enabled, interpret=interpret)
 
 
-# ---------------------------------------------------------------------------
-# selection log (opt-in, ring buffer — long serving runs must not leak host
-# memory recording every trace-time decision).  The log is process-global:
-# the retune loop's telemetry reader may run on a different thread than the
-# dispatches it observes (deque append/iterate are GIL-atomic).
-# ---------------------------------------------------------------------------
 def set_selection_logging(enabled: bool, *, cap: int | None = None) -> None:
-    """Opt in/out of recording dispatch decisions; ``cap`` bounds the buffer."""
-    with _shared.lock:
-        _shared.log_enabled = enabled
-        if cap is not None:
-            _shared.selection_log = deque(_shared.selection_log, maxlen=max(int(cap), 1))
+    """Deprecated shim: ``KernelRuntime.set_selection_logging(enabled)``."""
+    _warn_global("set_selection_logging", "KernelRuntime.set_selection_logging(enabled)")
+    current_runtime().set_selection_logging(enabled, cap=cap)
 
 
 def selection_logging_enabled() -> bool:
-    return _shared.log_enabled
+    return current_runtime().selection_logging_enabled()
 
 
 def selection_log() -> list[tuple]:
-    """Trace-time dispatch decisions (op, problem, chosen config).
-
-    Empty unless ``set_selection_logging(True)`` was called; at most the
-    newest ``cap`` entries are retained.
-    """
-    return list(_shared.selection_log)
+    """Trace-time dispatch decisions of the current runtime (op, problem, config)."""
+    return current_runtime().selection_log()
 
 
 def clear_selection_log() -> None:
-    _shared.selection_log.clear()
-
-
-# ---------------------------------------------------------------------------
-# shape-memoized dispatch (the serving fast path)
-# ---------------------------------------------------------------------------
-def clear_device_policies() -> None:
-    """Drop every registered per-device policy, deactivating the live one.
-
-    A policy that was activated from the registry is uninstalled with it
-    (the marker and the live policy must never disagree); a policy installed
-    manually via ``set_kernel_policy`` is not registry-owned and survives.
-    """
-    with _shared.lock:
-        _shared.device_policies.clear()
-        if _shared.active_device is not None:
-            _shared.policy = None
-        _shared.active_device = None
-        _shared.requested_device = None
-        _shared.epoch += 1
-    clear_shape_cache()
+    """Deprecated shim: ``KernelRuntime.clear_selection_log()``."""
+    _warn_global("clear_selection_log", "KernelRuntime.clear_selection_log()")
+    current_runtime().clear_selection_log()
 
 
 def clear_shape_cache() -> None:
-    """Drop this thread's shape cache (other threads re-sync on epoch bump)."""
-    _local.shape_cache.clear()
-    _local.cache_hits = 0
-    _local.cache_misses = 0
-    _local.family_stats = {}
-    _local.hook_cache = {}
+    """Deprecated shim: ``KernelRuntime.clear_shape_cache()``."""
+    _warn_global("clear_shape_cache", "KernelRuntime.clear_shape_cache()")
+    current_runtime().clear_shape_cache()
 
 
 def set_shape_cache_cap(cap: int) -> None:
-    """Bound the dispatch cache; oldest (LRU) shape keys are evicted."""
-    _local.shape_cache_cap = max(int(cap), 1)
-    while len(_local.shape_cache) > _local.shape_cache_cap:
-        _local.shape_cache.popitem(last=False)
+    """Deprecated shim: ``KernelRuntime.set_shape_cache_cap(cap)``."""
+    _warn_global("set_shape_cache_cap", "KernelRuntime.set_shape_cache_cap(cap)")
+    current_runtime().set_shape_cache_cap(cap)
 
 
 def shape_cache_stats() -> dict:
-    """Hit/miss counters for the dispatch shape cache (reset on policy swap).
-
-    ``per_family`` breaks the counters (and resident cache entries) down by
-    kernel family — the keys are the family-qualified ``op`` names of the
-    selection log.
-    """
-    sizes: dict[str, int] = {}
-    for key in _local.shape_cache:
-        sizes[key[0]] = sizes.get(key[0], 0) + 1
-    per_family = {
-        op: {"hits": hm[0], "misses": hm[1], "size": sizes.get(op, 0)}
-        for op, hm in sorted(_local.family_stats.items())
-    }
-    for op, size in sorted(sizes.items()):  # entries inherited before any stat
-        per_family.setdefault(op, {"hits": 0, "misses": 0, "size": size})
-    return {
-        "hits": _local.cache_hits,
-        "misses": _local.cache_misses,
-        "size": len(_local.shape_cache),
-        "cap": _local.shape_cache_cap,
-        "per_family": per_family,
-    }
+    """Dispatch shape-cache counters of the current runtime (this thread)."""
+    return current_runtime().shape_cache_stats()
 
 
-def _select(op: str, problem: tuple, policy: KernelPolicy, select_fn):
-    """Policy consultation with LRU shape memoization.
-
-    Repeated traces of the same problem shape (the serving engine's
-    prefill/decode retraces) hit a dict lookup instead of featurize+predict.
-    Policies whose selections are not a pure function of the shape (e.g. the
-    exploring ``OnlinePolicy``) opt out via ``cacheable = False``.
-
-    ``policy`` is the reference the caller already synced via :func:`_policy`
-    — passing it through keeps one selection pinned to one policy even if a
-    hot swap lands mid-call.
-    """
-    cacheable = bool(getattr(policy, "cacheable", True))
-    key = (op, *problem)
-    if cacheable:
-        cfg = _local.shape_cache.get(key, _MISS)
-        if cfg is not _MISS:
-            _local.cache_hits += 1
-            _local.family_stats.setdefault(op, [0, 0])[0] += 1
-            _local.shape_cache.move_to_end(key)
-            if _shared.log_enabled:
-                _shared.selection_log.append((op, problem, cfg))
-            return cfg
-    cfg = select_fn()
-    if cacheable:
-        _local.cache_misses += 1
-        _local.family_stats.setdefault(op, [0, 0])[1] += 1
-        _local.shape_cache[key] = cfg
-        if len(_local.shape_cache) > _local.shape_cache_cap:
-            _local.shape_cache.popitem(last=False)
-    if _shared.log_enabled:
-        _shared.selection_log.append((op, problem, cfg))
-    return cfg
+def policy_epoch() -> int:
+    """Policy epoch of the current runtime (swap observability)."""
+    return current_runtime().policy_epoch()
 
 
-def _policy_hook(pol: KernelPolicy, family: str):
-    """Resolve the policy's selection callable for ``family`` via the registry.
-
-    Replaces the old duck-typed ``hasattr(pol, "select_wkv")`` hooks: the
-    method name comes from the family's declared ``policy_attr``, and a
-    policy may instead expose a generic ``select(family, problem)``.  Returns
-    a ``hook(problem)`` callable, or ``None`` when the policy covers neither
-    (the op runs its default config).  Resolution depends only on (policy,
-    family), so :func:`select_kernel_config` memoizes it per thread — the
-    shape-cache fast path never pays registry lookup or ``getattr``.
-    """
-    from repro.core.families import get_family
-
-    meth = getattr(pol, get_family(family).policy_attr, None)
-    if meth is not None:
-        return lambda problem: meth(*problem)
-    generic = getattr(pol, "select", None)
-    if generic is not None:
-        return lambda problem: generic(family, problem)
-    return None
-
-
+# ---------------------------------------------------------------------------
+# launcher-side selection (used by the ops below; also callable directly)
+# ---------------------------------------------------------------------------
 def select_kernel_config(family: str, problem: tuple):
-    """Generic launcher-side selection for any registered family.
+    """Generic launcher-side selection against the current runtime.
 
-    Shape-memoized under the family-qualified key, logged to the selection
-    log as ``(family, problem, config)``; ``None`` when no policy is
-    installed or the policy does not cover this family.
+    Shape-memoized under the family-qualified key, logged to the runtime's
+    selection log as ``(family, problem, config)``; ``None`` when no policy
+    is installed or the policy does not cover this family.
     """
-    pol = _policy()  # syncs _local (and drops stale hook/shape caches)
-    if pol is None:
-        return None
-    hook = _local.hook_cache.get(family, _MISS)
-    if hook is _MISS:
-        hook = _policy_hook(pol, family)
-        _local.hook_cache[family] = hook
-    if hook is None:
-        return None
-    problem = tuple(problem)
-    return _select(family, problem, pol, lambda: hook(problem))
+    return current_runtime().select_config(family, problem)
 
 
 def select_matmul_config(m: int, k: int, n: int, batch: int = 1) -> MatmulConfig | None:
     """The launcher-side selection path on its own (what ``matmul`` runs at
     trace time); ``None`` when no policy is installed."""
-    pol = _policy()
-    if pol is None:
-        return None
-    return _select("matmul", (m, k, n, batch), pol, lambda: pol.select_matmul(m, k, n, batch))
+    return current_runtime().select_matmul_config(m, k, n, batch)
 
 
 def select_wkv_config(s: int, hd: int) -> WkvConfig | None:
     """Launcher-side WKV selection (what ``wkv`` runs at trace time)."""
-    return select_kernel_config("wkv", (s, hd))
+    return current_runtime().select_wkv_config(s, hd)
 
 
 def select_ssm_config(s: int, d: int) -> SsmConfig | None:
     """Launcher-side selective-scan selection (what ``ssm_scan`` runs)."""
-    return select_kernel_config("ssm_scan", (s, d))
+    return current_runtime().select_ssm_config(s, d)
 
 
 # ---------------------------------------------------------------------------
@@ -459,6 +263,7 @@ def matmul(lhs: jax.Array, rhs: jax.Array, *, out_dtype=None, config: MatmulConf
     """
     if rhs.ndim != 2:
         raise ValueError(f"rhs must be 2-D, got {rhs.shape}")
+    rt = current_runtime()
     *lead, k = lhs.shape
     n = rhs.shape[1]
     # Featurize with the tuning dataset's (m, k, n, batch) convention: the
@@ -469,12 +274,12 @@ def matmul(lhs: jax.Array, rhs: jax.Array, *, out_dtype=None, config: MatmulConf
     for d in lead[:-1]:
         batch *= d
     if config is None:
-        config = select_matmul_config(m, k, n, batch)
-    if not _shared.use_pallas:
+        config = rt.select_matmul_config(m, k, n, batch)
+    if not rt.use_pallas:
         out = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
         return out.astype(out_dtype or lhs.dtype)
     lhs2 = lhs.reshape(m * batch, k)
-    out = matmul_pallas(lhs2, rhs, config or DEFAULT_CONFIG, out_dtype=out_dtype, interpret=_shared.interpret)
+    out = matmul_pallas(lhs2, rhs, config or DEFAULT_CONFIG, out_dtype=out_dtype, interpret=rt.interpret)
     return out.reshape(*lead, n)
 
 
@@ -496,15 +301,15 @@ def attention(
     """
     sq, d = q.shape[-2:]
     skv = k.shape[-2]
-    pol = _policy()
-    if config is None and pol is not None:
-        config = _select("attention", (sq, skv, d), pol, lambda: pol.select_attention(sq, skv, d))
-    if not _shared.use_pallas:
+    rt = current_runtime()
+    if config is None:
+        config = rt.select_attention_config(sq, skv, d)
+    if not rt.use_pallas:
         fn = lambda q_, k_, v_: flash_attention_ref(q_, k_, v_, causal=causal, scale=scale)
     else:
         cfg = config or DEFAULT_ATTN_CONFIG
         fn = lambda q_, k_, v_: flash_attention_pallas(
-            q_, k_, v_, cfg, causal=causal, scale=scale, interpret=_shared.interpret
+            q_, k_, v_, cfg, causal=causal, scale=scale, interpret=rt.interpret
         )
     for _ in range(q.ndim - 2):
         fn = jax.vmap(fn)
@@ -521,9 +326,10 @@ def wkv(r, k, v, logw, u, state=None, *, config: WkvConfig | None = None):
     kernel when enabled; otherwise the jnp reference (identical math).
     """
     b, s, h, hd = r.shape
+    rt = current_runtime()
     if config is None:
-        config = select_wkv_config(s, hd)
-    if not _shared.use_pallas:
+        config = rt.select_wkv_config(s, hd)
+    if not rt.use_pallas:
         from .ref import wkv_ref
 
         return wkv_ref(r, k, v, logw, u, state)
@@ -533,7 +339,7 @@ def wkv(r, k, v, logw, u, state=None, *, config: WkvConfig | None = None):
         state = _jnp.zeros((b, h, hd, hd), _jnp.float32)
     cfg = config or DEFAULT_WKV_CONFIG
     one = lambda rr, kk, vv, ww, uu, ss: wkv_pallas(
-        rr, kk, vv, ww, uu, ss, cfg, interpret=_shared.interpret
+        rr, kk, vv, ww, uu, ss, cfg, interpret=rt.interpret
     )
     fn = jax.vmap(jax.vmap(one, in_axes=(1, 1, 1, 1, 0, 0)), in_axes=(0, 0, 0, 0, None, 0))
     o, s_out = fn(r, k, v, logw, u, state)
@@ -550,15 +356,16 @@ def ssm_scan(dtx, dta, b, v_c, state=None, *, config: SsmConfig | None = None):
     (d, N) state in VMEM (no (B,S,d,N) HBM materialization); jnp path is the
     associative-scan oracle.
     """
+    rt = current_runtime()
     if config is None:
-        config = select_ssm_config(dtx.shape[1], dtx.shape[2])
-    if not _shared.use_pallas:
+        config = rt.select_ssm_config(dtx.shape[1], dtx.shape[2])
+    if not rt.use_pallas:
         from .ref import ssm_scan_ref
 
         return ssm_scan_ref(dtx, dta, b, v_c, state)
     cfg = config or DEFAULT_SSM_CONFIG
     one = lambda x_, a_, b_, c_, s_: ssm_scan_pallas(
-        x_, a_, b_, c_, s_, cfg, interpret=_shared.interpret
+        x_, a_, b_, c_, s_, cfg, interpret=rt.interpret
     )
     if state is None:
         import jax.numpy as _jnp

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.core.retune import DEFAULT_DRIFT_THRESHOLD, DEFAULT_MIN_EVENTS
-from repro.kernels import ops
+from repro.core.runtime import KernelRuntime
 from repro.models.model import build_model
 from repro.serve.engine import Request, ServingEngine
 
@@ -42,6 +42,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch).reduced()
+    # The launcher owns an explicit runtime handle: every policy, cache, and
+    # telemetry mutation below is scoped to it (nothing process-global).
+    rt = KernelRuntime(name=f"serve[{args.arch}]")
     bundle = None
     if args.bundle:
         from repro.core.bundle import DeploymentBundle
@@ -50,7 +53,7 @@ def main(argv=None) -> None:
     elif args.deployment:
         from repro.core.dispatch import Deployment
 
-        ops.set_kernel_policy(Deployment.load(args.deployment))
+        rt.install(Deployment.load(args.deployment))
 
     model = build_model(cfg, dtype=jnp.float32, param_dtype=jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
@@ -63,7 +66,7 @@ def main(argv=None) -> None:
 
     engine = ServingEngine(
         model, params, max_batch=args.max_batch, cache_len=args.cache_len,
-        extra_inputs=extra, bundle=bundle, device=args.serve_device,
+        extra_inputs=extra, bundle=bundle, device=args.serve_device, runtime=rt,
         retune_interval=args.retune_interval, drift_threshold=args.drift_threshold,
         retune_min_events=args.retune_min_events,
     )
@@ -81,6 +84,11 @@ def main(argv=None) -> None:
     toks = sum(len(r.output) for r in reqs)
     print(f"served {len(reqs)} requests, {toks} tokens, {dt:.2f}s "
           f"({toks / max(dt, 1e-9):.1f} tok/s), {engine.steps} decode steps")
+    # Dispatch evidence: nonzero counters prove the traces consulted the
+    # installed policy (the counters only move when a policy is live).
+    stats = rt.shape_cache_stats()
+    print(f"policy selections at trace time: {stats['hits'] + stats['misses']} "
+          f"({stats['hits']} shape-cache hits) on runtime {rt.name!r}")
     if status.exhausted:
         print(f"WARNING: step budget exhausted with {status.in_flight} in-flight / "
               f"{status.queued} queued requests unfinished")

@@ -12,8 +12,8 @@ import argparse
 import jax.numpy as jnp
 
 from repro.configs import registry
+from repro.core.runtime import default_runtime
 from repro.data.pipeline import DataConfig
-from repro.kernels import ops
 from repro.models.model import build_model
 from repro.optim import adamw
 from repro.train.trainer import Trainer, TrainerConfig
@@ -50,7 +50,9 @@ def main(argv=None) -> None:
     if args.deployment:
         from repro.core.dispatch import Deployment
 
-        ops.set_kernel_policy(Deployment.load(args.deployment))
+        # Training dispatch runs on the process default runtime (the trainer
+        # owns every thread here, so an isolated handle buys nothing).
+        default_runtime().install(Deployment.load(args.deployment))
         print(f"installed kernel deployment from {args.deployment}")
 
     model = build_model(cfg, dtype=jnp.float32, param_dtype=jnp.float32)

@@ -79,6 +79,19 @@ def main(argv=None) -> None:
             print(f"  {name}: oracle {res.oracle_fraction:.1%} / "
                   f"classifier {res.classifier_fraction:.1%} "
                   f"(families: {', '.join(res.deployment.family_names())})")
+        # Prove the saved artifact serves: load it back into a fresh, isolated
+        # KernelRuntime (nothing process-global is touched) and dispatch one
+        # probe selection against the first tuned device.
+        import repro
+
+        rt = repro.load_bundle(args.bundle).runtime(device=device_names[0])
+        probe = rt.select_matmul_config(512, 784, 512, 16)
+        if probe is None:
+            raise SystemExit(
+                f"bundle verification failed: {args.bundle} loaded into {rt!r} "
+                f"but served no probe selection"
+            )
+        print(f"verified: {rt!r} serves (probe matmul -> {probe.name()})")
         if not args.out:
             return
     if args.device == "host_cpu":

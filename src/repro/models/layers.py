@@ -5,7 +5,7 @@ dispatcher).  Attention uses a memory-bounded chunked online-softmax
 implementation (flash-attention algorithm at the jnp level) so that 32k-token
 prefill fits per-device HBM without relying on XLA fusion heuristics; on TPU
 hosts the Pallas kernel path in ``repro.kernels`` takes over via
-``set_pallas_enabled``.
+``KernelRuntime.set_pallas_enabled``.
 """
 from __future__ import annotations
 

@@ -44,8 +44,8 @@ class RetuneEvent:
     """One firing of the continuous tuning loop (DESIGN.md §8).
 
     ``swapped`` distinguishes a drift check that triggered a retune + policy
-    hot-swap from one that merely looked; ``epoch`` is the ops-layer policy
-    epoch after the swap (monotonic across the process).  Drift is checked
+    hot-swap from one that merely looked; ``epoch`` is the engine runtime's
+    policy epoch after the swap (monotonic within that runtime).  Drift is checked
     per kernel family: ``families`` names the families whose tunings were
     refreshed by this event (empty when nothing triggered), and
     ``drift_score`` / ``unseen_fraction`` report the worst family observed.
@@ -98,22 +98,29 @@ class ServingEngine:
         extra_inputs: dict | None = None,
         bundle=None,
         device: str | None = None,
+        runtime=None,
         retune_interval: int | None = None,
         drift_threshold: float = DEFAULT_DRIFT_THRESHOLD,
         retune_min_events: int = DEFAULT_MIN_EVENTS,
     ):
+        from repro.core.runtime import current_runtime
+
+        # The engine dispatches against ONE explicit KernelRuntime for its
+        # whole lifetime: every prefill/decode trace runs inside
+        # ``runtime.activate()``, so two engines with different runtimes (two
+        # tenants, an A/B shadow pair) share no policy, shape-cache, or
+        # selection-log state even on the same thread.  ``runtime=None``
+        # adopts the caller's current runtime (the process default unless the
+        # ctor runs inside an activation) — the legacy behavior.
+        self.runtime = runtime if runtime is not None else current_runtime()
         # A serving host consumes the multi-device artifact directly: install
         # the Deployment resolved for this host (nearest tuned sibling when
         # untuned) before the first trace-time kernel selection runs.
         self.deployment = None
         self.device = device
         if bundle is not None:
-            from repro.core.bundle import install_bundle
-
-            self.deployment = install_bundle(bundle, device)
-            from repro.kernels import ops
-
-            self.device = ops.active_device()
+            self.deployment = self.runtime.install_bundle(bundle, device)
+            self.device = self.runtime.active_device()
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -136,25 +143,21 @@ class ServingEngine:
         self.retune_events: list[RetuneEvent] = []
         self._last_retune_check = 0
         if retune_interval is not None:
-            from repro.kernels import ops
-
-            # Telemetry source: the dispatch-layer selection log (cache hits
+            # Telemetry source: the runtime's selection log (cache hits
             # included, so the histogram reflects real traffic frequencies).
-            ops.set_selection_logging(True)
+            self.runtime.set_selection_logging(True)
 
     def dispatch_stats(self) -> dict:
         """Kernel-selection shape-cache counters (convenience passthrough).
 
         Each prefill bucket and the decode program retrace the model, so
-        repeated admissions re-run trace-time kernel selection; the ops-layer
+        repeated admissions re-run trace-time kernel selection; the runtime's
         shape cache (DESIGN.md §6) turns those repeats into dict hits.  Note
-        the counters are per *thread* (ops state is thread-local), not per
-        engine: call from the thread that drives this engine, and expect
-        other engines on the same thread to contribute to the same numbers.
+        the counters are per *thread within the runtime*: call from the
+        thread that drives this engine, and expect other engines sharing the
+        same runtime on this thread to contribute to the same numbers.
         """
-        from repro.kernels import ops
-
-        return ops.shape_cache_stats()
+        return self.runtime.shape_cache_stats()
 
     # -- slot admission -------------------------------------------------------
     def _free_slot(self) -> int | None:
@@ -184,7 +187,8 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(prompt[None, :])}
         for k, v in self.extra_inputs.items():
             batch[k] = _batch_extra(k, v)
-        logits, cache1 = self._prefill_fn(plen)(self.params, batch)
+        with self.runtime.activate():  # trace-time selections hit OUR runtime
+            logits, cache1 = self._prefill_fn(plen)(self.params, batch)
         # Scatter the single-sequence prefill cache into this slot.
         self.cache = jax.tree.map(
             lambda full, one: _scatter_slot(full, one, slot, self.max_batch),
@@ -203,9 +207,10 @@ class ServingEngine:
         for i, r in enumerate(self.slots):
             if r is not None:
                 tokens[i, 0] = r.output[-1]
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.positions)
-        )
+        with self.runtime.activate():  # trace-time selections hit OUR runtime
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.positions)
+            )
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for i, r in enumerate(self.slots):
             if r is None:
@@ -228,9 +233,11 @@ class ServingEngine:
         """Telemetry -> drift check -> incremental retune -> policy hot-swap.
 
         Called between ``run()`` decode steps when ``retune_interval`` is set,
-        or directly from an operator's background hook (the ops-layer policy
-        registry is process-global, so a swap from another thread reaches the
-        serving thread atomically).  Returns the :class:`RetuneEvent` when a
+        or directly from an operator's background hook (the runtime's policy
+        registry is lock+epoch protected, so a swap from another thread
+        reaches the serving thread atomically — and only threads dispatching
+        against *this engine's runtime*; other tenants' runtimes never see
+        it).  Returns the :class:`RetuneEvent` when a
         drift check actually ran (``swapped=False`` if it didn't trigger),
         ``None`` when there is no deployment or not enough telemetry yet.
         ``online`` optionally names a hybrid-mode ``OnlinePolicy``: its arm
@@ -244,16 +251,16 @@ class ServingEngine:
         new policy.
         """
         from repro.core.dispatch import Deployment
-        from repro.core.retune import TelemetrySnapshot, detect_drift_all, incremental_retune
-        from repro.kernels import ops
+        from repro.core.retune import detect_drift_all, incremental_retune
 
+        rt = self.runtime
         dep = self.deployment
         if dep is None:
-            pol = ops.get_kernel_policy()
+            pol = rt.policy()
             dep = pol if isinstance(pol, Deployment) else None
         if dep is None:
             return None
-        snap = TelemetrySnapshot.from_selection_log(ops.selection_log(), online=online)
+        snap = rt.telemetry(online=online)
         if snap.n_events == 0:
             return None
         # Drift is detected per (device, family, shape): every family with
@@ -274,7 +281,7 @@ class ServingEngine:
             # aggregate.
             ev = RetuneEvent(self.steps, worst.score, worst.unseen_fraction,
                              False, any(r.triggered for r in reports.values()),
-                             worst.n_events, len(dep.configs), ops.policy_epoch())
+                             worst.n_events, len(dep.configs), rt.policy_epoch())
             self.retune_events.append(ev)
             return ev
         new_dep = dep
@@ -283,16 +290,16 @@ class ServingEngine:
                 new_dep, snap, family=fam, report=reports[fam],
                 threshold=self.drift_threshold, min_events=self.retune_min_events,
             ).deployment
-        if self.device is not None and ops.active_device() == self.device:
-            ops.set_kernel_policy_for_device(self.device, new_dep)  # registry hot-swap
+        if self.device is not None and rt.active_device() == self.device:
+            rt.install_for_device(self.device, new_dep)  # registry hot-swap
         else:
-            ops.set_kernel_policy(new_dep)
+            rt.install(new_dep)
         if online is not None and hasattr(online, "set_prior"):
             # A hybrid-mode OnlinePolicy must adopt the retuned deployment as
             # its prior (and drop its prior-derived attention cache with it).
             online.set_prior(new_dep)
         self.deployment = new_dep
-        ops.clear_selection_log()  # fresh telemetry window for the new policy
+        rt.clear_selection_log()  # fresh telemetry window for the new policy
         # Invalidate this engine's compiled programs so the next admission /
         # decode trace re-runs kernel selection under the swapped-in policy.
         # Engine state (cache pool, slots, positions) survives: in-flight
@@ -302,7 +309,7 @@ class ServingEngine:
         worst_retuned = max((reports[f] for f in to_retune), key=lambda r: r.score)
         ev = RetuneEvent(self.steps, worst_retuned.score, worst_retuned.unseen_fraction,
                          True, any(r.triggered for r in reports.values()),
-                         worst_retuned.n_events, len(new_dep.configs), ops.policy_epoch(),
+                         worst_retuned.n_events, len(new_dep.configs), rt.policy_epoch(),
                          tuple(to_retune))
         self.retune_events.append(ev)
         return ev

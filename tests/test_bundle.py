@@ -17,13 +17,15 @@ from repro.core.dispatch import Deployment, train_deployment
 from repro.core.selection import select_from_dataset
 from repro.core.tuner import save_fleet, tune_fleet
 from repro.kernels import ops
+from repro.core.runtime import default_runtime as rt
+from repro.core.runtime import reset_default_runtime
 
 
 @pytest.fixture(autouse=True)
 def _clean_policy():
+    # Fresh default runtime per test: no hand-maintained clear_* choreography.
     yield
-    ops.clear_device_policies()
-    ops.set_kernel_policy(None)
+    reset_default_runtime()
 
 
 def _mini_deployment(device_name: str, n_kernels: int = 5, seed: int = 0) -> Deployment:
@@ -152,7 +154,7 @@ def test_install_bundle_untuned_host_falls_back(monkeypatch, bundle2):
 def test_install_bundle_replaces_stale_registrations(monkeypatch, bundle2):
     """A prior install's policies must not shadow this bundle's resolution."""
     stale = _mini_deployment("tpu_v5e", n_kernels=3, seed=7)
-    ops.set_kernel_policy_for_device("tpu_v5p", stale)  # from an earlier install
+    rt().install_for_device("tpu_v5p", stale)  # from an earlier install
     monkeypatch.setenv(DEVICE_ENV_VAR, "tpu_v5p")
     dep = install_bundle(bundle2)  # bundle2 has no tpu_v5p entry
     # resolution happened within the bundle: fallback to tpu_v4, not stale
@@ -166,13 +168,13 @@ def test_clear_device_policies_deactivates_live_policy(monkeypatch, bundle2):
     monkeypatch.setenv(DEVICE_ENV_VAR, "tpu_v5e")
     install_bundle(bundle2)
     assert ops.get_kernel_policy() is not None
-    ops.clear_device_policies()
+    rt().clear_device_policies()
     # the registry-owned live policy is uninstalled with the registry
     assert ops.get_kernel_policy() is None and ops.active_device() is None
     # a manual (non-registry) install survives a registry clear
     manual = bundle2.deployments["tpu_v4"]
-    ops.set_kernel_policy(manual)
-    ops.clear_device_policies()
+    rt().install(manual)
+    rt().clear_device_policies()
     assert ops.get_kernel_policy() is manual
 
 
@@ -188,26 +190,26 @@ def test_install_bundle_strict_raises(monkeypatch, bundle2):
 def test_ops_device_registry_semantics(bundle2):
     v5e = bundle2.deployments["tpu_v5e"]
     v4 = bundle2.deployments["tpu_v4"]
-    ops.set_kernel_policy_for_device("tpu_v5e", v5e)
-    ops.set_kernel_policy_for_device("tpu_v4", v4)
+    rt().install_for_device("tpu_v5e", v5e)
+    rt().install_for_device("tpu_v4", v4)
     assert ops.get_kernel_policy() is None  # registration does not activate
-    assert ops.activate_device("tpu_v5e") == "tpu_v5e"
+    assert rt().activate_device("tpu_v5e") == "tpu_v5e"
     assert ops.get_kernel_policy() is v5e
     # re-registering the active device refreshes the live policy
-    ops.set_kernel_policy_for_device("tpu_v5e", v4)
+    rt().install_for_device("tpu_v5e", v4)
     assert ops.get_kernel_policy() is v4
     # dropping the live device's policy deactivates it — no stale marker
-    ops.set_kernel_policy_for_device("tpu_v5e", None)
+    rt().install_for_device("tpu_v5e", None)
     assert ops.active_device() is None and ops.get_kernel_policy() is None
     assert ops.device_resolution() == (None, None)
-    ops.set_kernel_policy_for_device("tpu_v5e", v5e)
-    ops.activate_device("tpu_v5e")
+    rt().install_for_device("tpu_v5e", v5e)
+    rt().activate_device("tpu_v5e")
     # a manual single-device install detaches from the registry
-    ops.set_kernel_policy(v5e)
+    rt().install(v5e)
     assert ops.active_device() is None
-    ops.clear_device_policies()
+    rt().clear_device_policies()
     with pytest.raises(KeyError):
-        ops.activate_device("tpu_v5e")
+        rt().activate_device("tpu_v5e")
 
 
 def test_serving_engine_consumes_bundle(monkeypatch, bundle2):

@@ -24,17 +24,17 @@ from repro.kernels import ops
 from repro.kernels.ops import FixedPolicy
 from repro.kernels.ssm import DEFAULT_SSM_CONFIG, SsmConfig
 from repro.kernels.wkv import DEFAULT_WKV_CONFIG, WkvConfig
+from repro.core.runtime import default_runtime as rt
+from repro.core.runtime import reset_default_runtime
 
 DATA = Path(__file__).parent / "data"
 
 
 @pytest.fixture(autouse=True)
 def _clean_policy():
+    # Fresh default runtime per test: no hand-maintained clear_* choreography.
     yield
-    ops.clear_device_policies()
-    ops.set_kernel_policy(None)
-    ops.set_selection_logging(False)
-    ops.clear_selection_log()
+    reset_default_runtime()
 
 
 @pytest.fixture(scope="module")
@@ -156,7 +156,7 @@ def test_tune_skips_families_foreign_to_archs():
 # ---------------------------------------------------------------------------
 def test_fixed_policy_covers_every_family():
     pol = FixedPolicy(wkv_config=WkvConfig(64), ssm_config=SsmConfig(64, 16))
-    ops.set_kernel_policy(pol)
+    rt().install(pol)
     assert ops.select_wkv_config(2048, 64) == WkvConfig(64)
     assert ops.select_ssm_config(2048, 1600) == SsmConfig(64, 16)
 
@@ -168,7 +168,7 @@ def test_partial_policy_falls_back_to_default():
         def select_matmul(self, m, k, n, batch):
             return "mm"
 
-    ops.set_kernel_policy(MatmulOnly())
+    rt().install(MatmulOnly())
     assert ops.select_wkv_config(2048, 64) is None  # op runs its default config
     assert ops.select_ssm_config(2048, 1600) is None
 
@@ -176,9 +176,9 @@ def test_partial_policy_falls_back_to_default():
 def test_family_qualified_cache_and_log(tuned):
     """An ssm (s, d) problem can never alias a matmul (m, k) tuple."""
     dep = tuned.deployment
-    ops.set_kernel_policy(dep)
-    ops.set_selection_logging(True)
-    ops.clear_selection_log()
+    rt().install(dep)
+    rt().set_selection_logging(True)
+    rt().clear_selection_log()
     ops.select_ssm_config(512, 784)
     ops.select_matmul_config(512, 784, 512, 16)
     ops.select_wkv_config(512, 784)
@@ -199,9 +199,9 @@ def test_ssm_wkv_ops_dispatch_through_policy(tuned):
     import jax.numpy as jnp
 
     dep = tuned.deployment
-    ops.set_kernel_policy(dep)
-    ops.set_selection_logging(True)
-    ops.clear_selection_log()
+    rt().install(dep)
+    rt().set_selection_logging(True)
+    rt().clear_selection_log()
     b, s, h, hd = 1, 8, 2, 16
     r = jnp.ones((b, s, h, hd), jnp.float32)
     ops.wkv(r, r, r, -jnp.ones_like(r), jnp.ones((h, hd)), None)
@@ -309,9 +309,9 @@ def _ssm_snapshot(n=60):
 
 
 def test_snapshot_buckets_per_family(tuned):
-    ops.set_kernel_policy(tuned.deployment)
-    ops.set_selection_logging(True)
-    ops.clear_selection_log()
+    rt().install(tuned.deployment)
+    rt().set_selection_logging(True)
+    rt().clear_selection_log()
     ops.select_matmul_config(512, 784, 512, 16)
     ops.select_ssm_config(512, 784)
     ops.select_wkv_config(2048, 64)
@@ -355,10 +355,10 @@ def test_engine_maybe_retune_handles_ssm_only_traffic(tuned):
 
     from repro.serve.engine import ServingEngine
 
-    ops.set_kernel_policy(tuned.deployment)
+    rt().install(tuned.deployment)
     eng = ServingEngine(_ToyModel(), params={}, max_batch=1, cache_len=16,
                         retune_interval=10_000, retune_min_events=8)
-    ops.clear_selection_log()
+    rt().clear_selection_log()
     for _ in range(40):
         ops.select_ssm_config(96, 48)
     ev = eng.maybe_retune()

@@ -13,14 +13,15 @@ from repro.core.online import OnlinePolicy
 from repro.core.tuner import tune
 from repro.kernels import ops
 from repro.kernels.matmul import config_space
+from repro.core.runtime import default_runtime as rt
+from repro.core.runtime import reset_default_runtime
 
 
 @pytest.fixture(autouse=True)
 def _clean_ops_state():
+    # Fresh default runtime per test: no hand-maintained clear_* choreography.
     yield
-    ops.set_kernel_policy(None)
-    ops.set_selection_logging(False)
-    ops.clear_selection_log()
+    reset_default_runtime()
 
 
 def _fit_random_tree(seed, n=120, d=4, k=5, **kw):
@@ -163,7 +164,7 @@ def test_flat_blob_structural_validation():
 def test_shape_cache_hits_on_repeated_dispatch():
     ds = build_model_dataset(synthetic_problems(60))
     res = tune(ds, n_kernels=5)
-    ops.set_kernel_policy(res.deployment)
+    rt().install(res.deployment)
     cfg0 = ops.select_matmul_config(512, 784, 512, 16)
     stats = ops.shape_cache_stats()
     assert stats["misses"] == 1 and stats["hits"] == 0
@@ -174,7 +175,7 @@ def test_shape_cache_hits_on_repeated_dispatch():
     # a different shape misses, and a policy swap clears the cache
     ops.select_matmul_config(1, 4096, 1024, 1)
     assert ops.shape_cache_stats()["misses"] == 2
-    ops.set_kernel_policy(res.deployment)
+    rt().install(res.deployment)
     assert ops.shape_cache_stats() == {"hits": 0, "misses": 0, "size": 0,
                                        "cap": ops.DEFAULT_SHAPE_CACHE_CAP,
                                        "per_family": {}}
@@ -183,8 +184,8 @@ def test_shape_cache_hits_on_repeated_dispatch():
 def test_shape_cache_lru_eviction():
     ds = build_model_dataset(synthetic_problems(40))
     res = tune(ds, n_kernels=4)
-    ops.set_kernel_policy(res.deployment)
-    ops.set_shape_cache_cap(4)
+    rt().install(res.deployment)
+    rt().set_shape_cache_cap(4)
     try:
         for m in (8, 16, 32, 64, 128, 256):
             ops.select_matmul_config(m, 512, 512, 1)
@@ -194,14 +195,14 @@ def test_shape_cache_lru_eviction():
         ops.select_matmul_config(8, 512, 512, 1)
         assert ops.shape_cache_stats()["misses"] == 7
     finally:
-        ops.set_shape_cache_cap(ops.DEFAULT_SHAPE_CACHE_CAP)
+        rt().set_shape_cache_cap(ops.DEFAULT_SHAPE_CACHE_CAP)
 
 
 def test_online_policy_is_not_shape_cached():
     cands = list(config_space())[:4]
     times = iter(np.linspace(1.0, 0.1, 100))
     pol = OnlinePolicy(lambda p, c: next(times), cands, trials_per_arm=1)
-    ops.set_kernel_policy(pol)
+    rt().install(pol)
     picks = [ops.select_matmul_config(512, 784, 512, 16) for _ in range(4)]
     assert picks == cands  # every call explored a fresh arm — no memoization
     assert ops.shape_cache_stats()["size"] == 0
@@ -210,14 +211,14 @@ def test_online_policy_is_not_shape_cached():
 def test_selection_log_opt_in_and_bounded():
     ds = build_model_dataset(synthetic_problems(40))
     res = tune(ds, n_kernels=4)
-    ops.set_kernel_policy(res.deployment)
+    rt().install(res.deployment)
     ops.select_matmul_config(64, 64, 64, 1)
     assert ops.selection_log() == []  # off by default
-    ops.set_selection_logging(True, cap=8)
+    rt().set_selection_logging(True, cap=8)
     for m in range(1, 21):
         ops.select_matmul_config(m, 64, 64, 1)
     log = ops.selection_log()
     assert len(log) == 8  # ring buffer keeps only the newest cap entries
     assert log[-1][1] == (20, 64, 64, 1)
     assert all(op == "matmul" for op, _, _ in log)
-    ops.set_selection_logging(False, cap=ops.DEFAULT_LOG_CAP)
+    rt().set_selection_logging(False, cap=ops.DEFAULT_LOG_CAP)

@@ -14,15 +14,15 @@ from repro.core.tuner import tune
 from repro.kernels import ops
 from repro.kernels.matmul import config_space
 from repro.kernels.ops import FixedPolicy
+from repro.core.runtime import default_runtime as rt
+from repro.core.runtime import reset_default_runtime
 
 
 @pytest.fixture(autouse=True)
 def _clean_policy():
+    # Fresh default runtime per test: no hand-maintained clear_* choreography.
     yield
-    ops.clear_device_policies()
-    ops.set_kernel_policy(None)
-    ops.set_selection_logging(False)
-    ops.clear_selection_log()
+    reset_default_runtime()
 
 
 @pytest.fixture(scope="module")
@@ -109,9 +109,9 @@ def test_no_provenance_means_everything_unseen(tuned):
 
 def test_snapshot_from_selection_log_counts_cache_hits(tuned):
     res, _ = tuned
-    ops.set_kernel_policy(res.deployment)
-    ops.set_selection_logging(True)
-    ops.clear_selection_log()
+    rt().install(res.deployment)
+    rt().set_selection_logging(True)
+    rt().clear_selection_log()
     for _ in range(5):  # 1 miss + 4 cache hits: all must count as traffic
         ops.select_matmul_config(512, 784, 512, 16)
     snap = retune.TelemetrySnapshot.from_selection_log(ops.selection_log())
@@ -265,24 +265,24 @@ def _two_policies():
 
 def test_hot_swap_invalidates_same_thread_shape_cache():
     pol_a, pol_b, cfg_a, cfg_b = _two_policies()
-    ops.set_kernel_policy_for_device("tpu_v5e", pol_a)
-    ops.activate_device("tpu_v5e")
+    rt().install_for_device("tpu_v5e", pol_a)
+    rt().activate_device("tpu_v5e")
     assert ops.select_matmul_config(256, 256, 256, 1) == cfg_a
     assert ops.select_matmul_config(256, 256, 256, 1) == cfg_a  # cache hit
     assert ops.shape_cache_stats()["hits"] >= 1
-    ops.set_kernel_policy_for_device("tpu_v5e", pol_b)  # hot swap
+    rt().install_for_device("tpu_v5e", pol_b)  # hot swap
     # the shape-memo entry from pol_a must not answer for pol_b
     assert ops.select_matmul_config(256, 256, 256, 1) == cfg_b
 
 
 def test_hot_swap_epoch_bumps_only_on_live_device():
     pol_a, pol_b, *_ = _two_policies()
-    ops.set_kernel_policy_for_device("tpu_v5e", pol_a)
-    ops.activate_device("tpu_v5e")
+    rt().install_for_device("tpu_v5e", pol_a)
+    rt().activate_device("tpu_v5e")
     e0 = ops.policy_epoch()
-    ops.set_kernel_policy_for_device("tpu_v4", pol_b)  # inactive: registration only
+    rt().install_for_device("tpu_v4", pol_b)  # inactive: registration only
     assert ops.policy_epoch() == e0
-    ops.set_kernel_policy_for_device("tpu_v5e", pol_b)  # live: swap
+    rt().install_for_device("tpu_v5e", pol_b)  # live: swap
     assert ops.policy_epoch() > e0
 
 
@@ -291,8 +291,8 @@ def test_concurrent_dispatch_never_sees_stale_policy_cache():
     has observed the new policy it may never fall back to a cached config of
     the old one, and every thread converges to the new policy."""
     pol_a, pol_b, cfg_a, cfg_b = _two_policies()
-    ops.set_kernel_policy_for_device("tpu_v5e", pol_a)
-    ops.activate_device("tpu_v5e")
+    rt().install_for_device("tpu_v5e", pol_a)
+    rt().activate_device("tpu_v5e")
 
     stop = threading.Event()
     picks: dict[int, list] = {}
@@ -314,7 +314,7 @@ def test_concurrent_dispatch_never_sees_stale_policy_cache():
     import time
 
     time.sleep(0.05)
-    ops.set_kernel_policy_for_device("tpu_v5e", pol_b)  # the hot swap
+    rt().install_for_device("tpu_v5e", pol_b)  # the hot swap
     time.sleep(0.05)
     stop.set()
     for t in threads:
@@ -359,11 +359,11 @@ def test_engine_maybe_retune_swaps_policy(tuned):
     from repro.serve.engine import ServingEngine
 
     res, _ = tuned
-    ops.set_kernel_policy(res.deployment)
+    rt().install(res.deployment)
     eng = ServingEngine(_ToyModel(), params={}, max_batch=1, cache_len=16,
                         retune_interval=10_000, retune_min_events=8)
     assert ops.selection_logging_enabled()
-    ops.clear_selection_log()
+    rt().clear_selection_log()
     rng = np.random.default_rng(2)
     for _ in range(50):  # shifted live traffic through the dispatch layer
         ops.select_matmul_config(int(rng.choice([1, 2])), 16384, 2048, 1)
@@ -382,12 +382,12 @@ def test_engine_maybe_retune_propagates_prior_to_online_policy(tuned):
     from repro.serve.engine import ServingEngine
 
     res, _ = tuned
-    ops.set_kernel_policy(res.deployment)
+    rt().install(res.deployment)
     pol = OnlinePolicy(lambda p, c: 1.0, res.deployment.configs, prior=res.deployment)
     pol.select_attention(128, 2048, 128)  # populate the prior-derived cache
     eng = ServingEngine(_ToyModel(), params={}, max_batch=1, cache_len=16,
                         retune_interval=10_000, retune_min_events=8)
-    ops.clear_selection_log()
+    rt().clear_selection_log()
     for _ in range(40):
         ops.select_matmul_config(1, 16384, 2048, 1)
     ev = eng.maybe_retune(online=pol)
@@ -400,10 +400,10 @@ def test_engine_maybe_retune_no_events_is_noop(tuned):
     from repro.serve.engine import ServingEngine
 
     res, _ = tuned
-    ops.set_kernel_policy(res.deployment)
+    rt().install(res.deployment)
     eng = ServingEngine(_ToyModel(), params={}, max_batch=1, cache_len=16,
                         retune_interval=10_000)
-    ops.clear_selection_log()
+    rt().clear_selection_log()
     assert eng.maybe_retune() is None
     assert ops.get_kernel_policy() is res.deployment
 

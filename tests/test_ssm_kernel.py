@@ -7,6 +7,7 @@ import pytest
 from repro.kernels import ops
 from repro.kernels.ref import ssm_scan_ref
 from repro.kernels.ssm import DEFAULT_SSM_CONFIG, SsmConfig, ssm_config_space, ssm_scan_pallas
+from repro.core.runtime import default_runtime as rt
 
 
 def _inputs(bsz, s, d, n, seed=0, with_state=True):
@@ -48,11 +49,11 @@ def test_ssm_config_sweep(cfg):
 def test_ops_ssm_paths_agree():
     args = _inputs(2, 33, 48, 16, seed=4)
     y_ref, s_ref = ops.ssm_scan(*args)
-    ops.set_pallas_enabled(True, interpret=True)
+    rt().set_pallas_enabled(True, interpret=True)
     try:
         y_p, s_p = ops.ssm_scan(*args)
     finally:
-        ops.set_pallas_enabled(False)
+        rt().set_pallas_enabled(False)
     np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_ref), rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_ref), rtol=1e-4, atol=1e-5)
 
@@ -69,11 +70,11 @@ def test_hymba_model_both_paths():
     batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
     loss_ref, _ = model.loss_fn(params, batch)
     assert np.isfinite(float(loss_ref))
-    ops.set_pallas_enabled(True, interpret=True)
+    rt().set_pallas_enabled(True, interpret=True)
     try:
         loss_p, _ = model.loss_fn(params, batch)
     finally:
-        ops.set_pallas_enabled(False)
+        rt().set_pallas_enabled(False)
     np.testing.assert_allclose(float(loss_p), float(loss_ref), rtol=1e-4)
 
 

@@ -20,6 +20,7 @@ from repro.core.selection import achievable_fraction, select_from_dataset
 from repro.core.tuner import tune, tune_for_archs
 from repro.kernels import ops
 from repro.kernels.matmul import MatmulConfig, config_space
+from repro.core.runtime import default_runtime as rt
 
 
 # ---------------------------------------------------------------------------
@@ -167,9 +168,9 @@ def test_classifier_fraction_bounds():
 def test_ops_matmul_uses_policy():
     ds = build_model_dataset(synthetic_problems(60))
     res = tune(ds, n_kernels=5)
-    ops.set_kernel_policy(res.deployment)
-    ops.set_selection_logging(True)
-    ops.clear_selection_log()
+    rt().install(res.deployment)
+    rt().set_selection_logging(True)
+    rt().clear_selection_log()
     try:
         a = jnp.ones((4, 64, 128))
         b = jnp.ones((128, 256))
@@ -189,18 +190,18 @@ def test_ops_matmul_uses_policy():
         assert stats1["hits"] == stats0["hits"] + 1
         assert stats1["misses"] == stats0["misses"]
     finally:
-        ops.set_kernel_policy(None)
-        ops.set_selection_logging(False)
-        ops.clear_selection_log()
+        rt().install(None)
+        rt().set_selection_logging(False)
+        rt().clear_selection_log()
 
 
 def test_ops_matmul_batch_featurization():
     """2-D -> batch 1; 3-D -> leading batch; 4-D -> product of lead dims."""
     ds = build_model_dataset(synthetic_problems(60))
     res = tune(ds, n_kernels=5)
-    ops.set_kernel_policy(res.deployment)
-    ops.set_selection_logging(True)
-    ops.clear_selection_log()
+    rt().install(res.deployment)
+    rt().set_selection_logging(True)
+    rt().clear_selection_log()
     try:
         b = jnp.ones((32, 64))
         ops.matmul(jnp.ones((16, 32)), b)
@@ -209,20 +210,20 @@ def test_ops_matmul_batch_featurization():
         problems = [p for op, p, _ in ops.selection_log() if op == "matmul"]
         assert problems == [(16, 32, 64, 1), (16, 32, 64, 8), (16, 32, 64, 6)]
     finally:
-        ops.set_kernel_policy(None)
-        ops.set_selection_logging(False)
-        ops.clear_selection_log()
+        rt().install(None)
+        rt().set_selection_logging(False)
+        rt().clear_selection_log()
 
 
 def test_ops_matmul_pallas_path_matches_xla():
     a = jnp.linspace(-1, 1, 64 * 96, dtype=jnp.float32).reshape(64, 96)
     b = jnp.linspace(1, -1, 96 * 128, dtype=jnp.float32).reshape(96, 128)
     want = ops.matmul(a, b)
-    ops.set_pallas_enabled(True, interpret=True)
+    rt().set_pallas_enabled(True, interpret=True)
     try:
         got = ops.matmul(a, b)
     finally:
-        ops.set_pallas_enabled(False)
+        rt().set_pallas_enabled(False)
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 

@@ -7,6 +7,7 @@ import pytest
 from repro.kernels import ops
 from repro.kernels.ref import wkv_ref
 from repro.kernels.wkv import DEFAULT_WKV_CONFIG, WkvConfig, wkv_config_space, wkv_pallas
+from repro.core.runtime import default_runtime as rt
 
 
 def _inputs(b, s, h, hd, seed=0, with_state=True):
@@ -62,11 +63,11 @@ def test_wkv_state_chaining_equals_full_run():
 def test_ops_wkv_pallas_path_matches_ref():
     args = _inputs(2, 40, 2, 64, seed=7)
     o_ref, s_ref = ops.wkv(*args)  # xla/jnp path
-    ops.set_pallas_enabled(True, interpret=True)
+    rt().set_pallas_enabled(True, interpret=True)
     try:
         o_p, s_p = ops.wkv(*args)
     finally:
-        ops.set_pallas_enabled(False)
+        rt().set_pallas_enabled(False)
     np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_ref), rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_ref), rtol=1e-4, atol=1e-4)
 
@@ -82,9 +83,9 @@ def test_rwkv_model_uses_ops_wkv():
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, cfg.vocab)
     batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
     loss_ref, _ = model.loss_fn(params, batch)
-    ops.set_pallas_enabled(True, interpret=True)
+    rt().set_pallas_enabled(True, interpret=True)
     try:
         loss_p, _ = model.loss_fn(params, batch)
     finally:
-        ops.set_pallas_enabled(False)
+        rt().set_pallas_enabled(False)
     np.testing.assert_allclose(float(loss_p), float(loss_ref), rtol=1e-4)
