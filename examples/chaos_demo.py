@@ -1,0 +1,134 @@
+"""Chaos-injection end-to-end demo (the CI chaos job).
+
+The DESIGN.md §11 failure model exercised against a real model and the real
+serving engine, with faults injected mid-run from a seeded FaultPlan:
+
+  1. tune an offline prior and install it into an isolated KernelRuntime;
+  2. guarded dispatch: an injected *compile failure* and an injected *NaN
+     output* hit the live matmul config — both are contained (the reference
+     path serves the caller), the config is quarantined behind the circuit
+     breaker, re-probed after backoff, and finally absolved.  The caller
+     never sees an exception or a non-finite value;
+  3. serving under chaos: a prefill compile fault mid-run costs one retry,
+     and the first drift-triggered retune produces a *regressing candidate*
+     (injected fault at ``retune.candidate``) that the canary gate rejects —
+     the incumbent keeps serving; the next retune passes and hot-swaps;
+  4. regressing hot-swap: the swapped-in policy starts faulting; the
+     rollback watchdog reinstalls the pre-swap deployment from the bounded
+     swap history, mid-run, with zero dropped requests;
+  5. assert all of it: every request of every stage completes, the engine's
+     health state dipped to ``degraded`` and recovered to ``healthy``.
+
+Run:  PYTHONPATH=src python examples/chaos_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro
+from repro.configs import registry
+from repro.core.bundle import DeploymentBundle
+from repro.core.dataset import build_model_dataset, synthetic_problems
+from repro.core.faults import FaultPlan
+from repro.core.tuner import tune
+from repro.kernels import ops
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServingEngine
+
+
+def main() -> None:
+    # -- 1. offline prior ----------------------------------------------------
+    ds = build_model_dataset(synthetic_problems(80), device_name="tpu_v5e")
+    res = tune(ds, n_kernels=6)
+    bundle = DeploymentBundle({"tpu_v5e": res.deployment}, meta={"demo": "chaos"})
+    print(f"offline prior: {len(res.deployment.configs)} kernels")
+
+    # -- 2. guarded dispatch: compile fault + NaN on the live config ---------
+    rt = repro.KernelRuntime(name="chaos-dispatch")
+    rt.install_bundle(bundle, "tpu_v5e")
+    with rt.activate():
+        cfg = rt.select_matmul_config(64, 512, 256, 1)  # what this traffic serves
+    plan = FaultPlan(seed=0)
+    plan.inject("dispatch.matmul", "compile_error", times=1, match=cfg.name())
+    plan.inject("dispatch.matmul", "nan", times=1, match=cfg.name())
+    rt.set_fault_plan(plan)
+    x, w = jnp.ones((64, 512)), jnp.ones((512, 256))
+    with rt.activate():
+        for _ in range(16):  # enough selections to re-probe through both faults
+            out = ops.matmul(x, w)
+            assert bool(jnp.isfinite(out).all()), "non-finite output escaped the guard!"
+    actions = [i["action"] for i in rt.incidents()]
+    assert actions.count("quarantined") == 2, actions  # compile fault, then NaN probe
+    assert "absolved" in actions, actions               # final re-probe closed the breaker
+    assert not rt.quarantined(), rt.quarantined()
+    print(f"guarded dispatch: {cfg.name()} survived compile fault + NaN "
+          f"(quarantined twice, re-probed, absolved); 16/16 calls finite")
+
+    # -- 3. serving under chaos: retry + canary-rejected retune --------------
+    mcfg = registry.get("granite-8b").reduced()
+    model = build_model(mcfg, dtype=jnp.float32, param_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    rt2 = repro.KernelRuntime(name="chaos-serve")
+    plan2 = FaultPlan(seed=1)
+    plan2.inject("engine.prefill", "compile_error", times=1)
+    plan2.inject("retune.candidate", "compile_error", times=1)  # regressing retune
+    rt2.set_fault_plan(plan2)
+    engine = ServingEngine(
+        model, params, max_batch=2, cache_len=128,
+        bundle=bundle, device="tpu_v5e", runtime=rt2,
+        retune_interval=8, drift_threshold=0.15, retune_min_events=8,
+    )
+    original = engine.deployment
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(uid=i, prompt=rng.integers(0, mcfg.vocab, size=plen).astype(np.int32),
+                max_new_tokens=8)
+        for i, plen in enumerate([6, 6, 6, 40, 40, 48, 48, 20])
+    ]
+    t0 = time.time()
+    status = engine.run(reqs)
+    print(f"served {len(reqs)} requests in {time.time() - t0:.1f}s under chaos")
+    assert status.completed == len(reqs) and not status.exhausted, status
+    assert all(r.done and r.state == "done" for r in reqs), "dropped request!"
+    assert sum(r.retries for r in reqs) >= 1, "prefill fault never cost a retry?"
+    rejected = [ev for ev in engine.retune_events if ev.rejected and not ev.swapped]
+    swapped = [ev for ev in engine.retune_events if ev.swapped and not ev.rolled_back]
+    assert rejected, f"regressing candidate was never rejected: {engine.retune_events}"
+    assert swapped, f"clean retune never swapped: {engine.retune_events}"
+    assert engine.deployment is not original
+    print(f"retune under chaos: candidate rejected at step {rejected[0].step} "
+          f"(families {rejected[0].rejected}), clean swap at step {swapped[0].step}")
+
+    # -- 4. regressing hot-swap: auto-rollback from swap history -------------
+    engine.retune_interval = None  # operator pauses the loop; watchdog stays on
+    pre_swap = engine._swap_history[-1]
+    plan2.inject("engine.decode", "oom", times=engine.rollback_threshold)
+    reqs2 = [
+        Request(uid=100 + i, prompt=rng.integers(0, mcfg.vocab, size=6).astype(np.int32),
+                max_new_tokens=8)
+        for i in range(4)
+    ]
+    status2 = engine.run(reqs2)
+    assert status2.completed == len(reqs2) and not status2.exhausted, status2
+    assert all(r.done and r.state == "done" for r in reqs2), "dropped request!"
+    rolled = [ev for ev in engine.retune_events if ev.rolled_back]
+    assert rolled, f"watchdog never rolled back: {engine.retune_events}"
+    assert engine.deployment is pre_swap, "rollback did not restore the incumbent"
+    assert any(i["action"] == "rollback" for i in rt2.incidents())
+    print(f"auto-rollback: {engine.rollback_threshold} incidents after the swap "
+          f"reinstalled the pre-swap deployment at step {rolled[0].step}")
+
+    # -- 5. health state machine ---------------------------------------------
+    states = [s for _, s in engine.health_events]
+    assert "degraded" in states, engine.health_events
+    assert engine.health == "healthy" and status2.health == "healthy"
+    print(f"health transitions {engine.health_events}: degraded under chaos, "
+          f"healthy at the end; zero dropped requests across "
+          f"{len(reqs) + len(reqs2)} total")
+    print("fault-contained serving loop OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ __version__ = "0.5.0"
 __all__ = [
     "Deployment",
     "DeploymentBundle",
+    "FaultPlan",
     "KernelRuntime",
     "Request",
     "ServingEngine",
@@ -44,6 +45,7 @@ __all__ = [
 _LAZY = {
     "Deployment": ("repro.core.dispatch", "Deployment"),
     "DeploymentBundle": ("repro.core.bundle", "DeploymentBundle"),
+    "FaultPlan": ("repro.core.faults", "FaultPlan"),
     "KernelRuntime": ("repro.core.runtime", "KernelRuntime"),
     "Request": ("repro.serve.engine", "Request"),
     "ServingEngine": ("repro.serve.engine", "ServingEngine"),
@@ -80,7 +82,7 @@ def tune(archs=None, *, devices=("tpu_v5e", "tpu_v4"), n_kernels: int = 8,
 
 
 def load_bundle(path):
-    """Load a saved :class:`DeploymentBundle` (any blob version, v1-v5).
+    """Load a saved :class:`DeploymentBundle` (any blob version, v1-v6).
 
     ``repro.load_bundle(path).runtime(device=...)`` is the serving-host
     bring-up path; plain v1/v2 single-device deployment files load as

@@ -10,6 +10,7 @@ from .flattree import FlatTree
 from .cluster import CLUSTER_METHODS, select_configs
 from .dataset import TuningDataset, build_model_dataset, harvest_problems, problem_features, synthetic_problems
 from .dispatch import Deployment, classifier_fraction, train_deployment
+from .faults import FaultError, FaultPlan, FaultSpec
 from .families import (
     FamilyTuning,
     KernelFamily,
@@ -34,6 +35,9 @@ __all__ = [
     "Deployment",
     "DeploymentBundle",
     "FamilyTuning",
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
     "FlatTree",
     "FleetTuneResult",
     "KernelFamily",

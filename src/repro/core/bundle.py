@@ -31,20 +31,35 @@ v4 added the per-device ``provenance`` block consumed by the continuous
 tuning loop (``repro.core.retune``): the shape distribution each deployment
 was tuned against plus its retune lineage.  v5 embeds per-device blobs that
 carry a per-family section (``repro.core.families``) and extends provenance
-with per-family training distributions.  v1-v4 artifacts load unchanged (no
-provenance -> drift detection treats all live traffic as unseen; no family
-section -> extra families fall back to reference implementations).
+with per-family training distributions.  v6 (DESIGN.md §11) adds a
+``checksums`` block of per-section CRC32s — one over each device blob's core
+(everything but its ``families`` section), one per family section, one over
+the provenance block — so bit rot or a truncated upload is detected at load
+time and contained at section granularity: a corrupt family section drops
+only that family (the op serves its reference path), a corrupt device core
+drops only that device (lookups for it recover through the
+``devices.FALLBACKS`` chain to the nearest surviving sibling), and only a
+bundle with *no* surviving device raises (:class:`BundleIntegrityError`).
+Anything dropped is recorded in ``DeploymentBundle.load_errors``.  v1-v5
+artifacts load unchanged (no checksums -> nothing to verify; no provenance ->
+drift detection treats all live traffic as unseen; no family section ->
+extra families fall back to reference implementations).
+
+Malformed input — truncated files, garbage JSON, a blob missing required
+sections — raises :class:`BundleFormatError` (a ``ValueError``) carrying the
+failing ``section`` and, for JSON syntax errors, the byte ``offset``.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import zlib
 from pathlib import Path
 
 from .devices import canonical_device_name, resolve_device
 from .dispatch import Deployment
 
-BUNDLE_VERSION = 5
+BUNDLE_VERSION = 6
 
 # Deployment.meta keys that form the v4+ top-level provenance block.
 _PROVENANCE_KEYS = (
@@ -52,12 +67,138 @@ _PROVENANCE_KEYS = (
 )
 
 
+class BundleError(ValueError):
+    """Base of all structured bundle load/validate failures.
+
+    Subclasses ``ValueError`` so pre-v6 callers catching ``ValueError``
+    around ``DeploymentBundle.load`` keep working.
+    """
+
+
+class BundleFormatError(BundleError):
+    """The blob is structurally unreadable (truncated, garbage, missing keys).
+
+    ``section`` names the part of the blob being parsed when the failure hit
+    (``None`` for whole-file errors); ``offset`` is the byte offset for JSON
+    syntax errors (``None`` otherwise).
+    """
+
+    def __init__(self, message: str, *, section: str | None = None,
+                 offset: int | None = None):
+        at = []
+        if section is not None:
+            at.append(f"section={section!r}")
+        if offset is not None:
+            at.append(f"offset={offset}")
+        super().__init__(f"{message} [{', '.join(at)}]" if at else message)
+        self.section = section
+        self.offset = offset
+
+
+class BundleIntegrityError(BundleError):
+    """Checksum verification left nothing servable (every device dropped)."""
+
+
+def _section_checksum(obj) -> str:
+    """CRC32 over the section's canonical JSON, as 8 hex chars."""
+    payload = json.dumps(obj, sort_keys=True, separators=(",", ":")).encode()
+    return f"{zlib.crc32(payload) & 0xFFFFFFFF:08x}"
+
+
+def _blob_checksums(deployments_blob: dict, provenance: dict) -> dict[str, str]:
+    """The v6 ``checksums`` block for a serialized bundle.
+
+    Keys: ``deployments.<dev>`` (device blob core, families excluded),
+    ``deployments.<dev>.families.<fam>`` (one per family section), and
+    ``provenance`` (the whole block).
+    """
+    sums: dict[str, str] = {}
+    for name, sub in deployments_blob.items():
+        core = {k: v for k, v in sub.items() if k != "families"}
+        sums[f"deployments.{name}"] = _section_checksum(core)
+        for fam, fam_blob in (sub.get("families") or {}).items():
+            sums[f"deployments.{name}.families.{fam}"] = _section_checksum(fam_blob)
+    if provenance:
+        sums["provenance"] = _section_checksum(provenance)
+    return sums
+
+
+def _verify_device_blob(
+    name: str, sub, sums: dict[str, str], load_errors: list[dict]
+):
+    """Checksum one device blob; returns the (possibly reduced) blob or None.
+
+    A corrupt device core drops the whole device (``None`` — lookups recover
+    via ``devices.FALLBACKS``); a corrupt or missing family section drops
+    only that family (its op serves the reference path).  Sections without a
+    checksum entry (pre-v6 blobs, hand-edited extras) are not judged.
+    """
+    key = f"deployments.{name}"
+    if not isinstance(sub, dict):
+        load_errors.append({
+            "section": key, "error": f"not an object ({type(sub).__name__})",
+            "action": "device dropped (FALLBACKS recovery)",
+        })
+        return None
+    if key in sums:
+        core = {k: v for k, v in sub.items() if k != "families"}
+        if _section_checksum(core) != sums[key]:
+            load_errors.append({
+                "section": key, "error": "checksum mismatch",
+                "action": "device dropped (FALLBACKS recovery)",
+            })
+            return None
+    fams = sub.get("families")
+    present = set(fams) if isinstance(fams, dict) else set()
+    if isinstance(fams, dict):
+        kept = {}
+        for fam, fam_blob in fams.items():
+            fkey = f"{key}.families.{fam}"
+            if fkey in sums and _section_checksum(fam_blob) != sums[fkey]:
+                load_errors.append({
+                    "section": fkey, "error": "checksum mismatch",
+                    "action": "family dropped (reference path)",
+                })
+                continue
+            kept[fam] = fam_blob
+        if len(kept) != len(fams):
+            sub = dict(sub, families=kept)
+    prefix = f"{key}.families."
+    for fkey in sums:
+        if fkey.startswith(prefix) and fkey[len(prefix):] not in present:
+            load_errors.append({
+                "section": fkey, "error": "checksummed section missing",
+                "action": "family dropped (reference path)",
+            })
+    return sub
+
+
+def _parse_deployment(sub: dict, section: str) -> Deployment:
+    """``Deployment.from_blob`` with bare struct errors wrapped as format errors."""
+    try:
+        return Deployment.from_blob(sub)
+    except BundleError:
+        raise
+    except (KeyError, TypeError, AttributeError, IndexError) as e:
+        raise BundleFormatError(
+            f"malformed deployment blob: {type(e).__name__}: {e}", section=section
+        ) from e
+    except ValueError as e:
+        raise BundleFormatError(str(e), section=section) from e
+
+
 @dataclasses.dataclass
 class DeploymentBundle:
-    """Versioned pack of per-device deployments (the deploy-anywhere artifact)."""
+    """Versioned pack of per-device deployments (the deploy-anywhere artifact).
+
+    ``load_errors`` records sections a v6 checksum pass dropped during load
+    (empty for a clean or pre-v6 artifact) — the bundle still serves with
+    whatever survived, recovering dropped devices via ``devices.FALLBACKS``.
+    """
 
     deployments: dict[str, Deployment]
     meta: dict = dataclasses.field(default_factory=dict)
+    load_errors: list[dict] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         if not self.deployments:
@@ -121,14 +262,17 @@ class DeploymentBundle:
 
     # -- persistence ---------------------------------------------------------
     def to_blob(self, *, tree_format: str = "flat") -> dict:
+        deployments = {
+            name: dep.to_blob(tree_format=tree_format)
+            for name, dep in sorted(self.deployments.items())
+        }
+        provenance = self.provenance()
         return {
             "version": BUNDLE_VERSION,
             "format": "bundle",
-            "deployments": {
-                name: dep.to_blob(tree_format=tree_format)
-                for name, dep in sorted(self.deployments.items())
-            },
-            "provenance": self.provenance(),
+            "deployments": deployments,
+            "provenance": provenance,
+            "checksums": _blob_checksums(deployments, provenance),
             "meta": self.meta,
         }
 
@@ -139,31 +283,85 @@ class DeploymentBundle:
 
     @staticmethod
     def from_blob(blob: dict) -> "DeploymentBundle":
-        """Parse a v3-v5 bundle blob — or wrap a v1/v2/v5 single-device blob."""
+        """Parse a v3-v6 bundle blob — or wrap a v1/v2/v5 single-device blob.
+
+        v6 blobs get the per-section checksum pass (corrupt family sections
+        and device cores are dropped, not fatal — see ``load_errors``);
+        structurally unreadable input raises :class:`BundleFormatError` with
+        the failing section, never a bare ``KeyError``/``TypeError``.
+        """
+        if not isinstance(blob, dict):
+            raise BundleFormatError(
+                f"bundle blob must be a JSON object, got {type(blob).__name__}"
+            )
         if blob.get("format") == "bundle" or "deployments" in blob:
-            version = int(blob.get("version", BUNDLE_VERSION))
+            try:
+                version = int(blob.get("version", BUNDLE_VERSION))
+            except (TypeError, ValueError):
+                raise BundleFormatError(
+                    f"bundle version is not an integer: {blob.get('version')!r}",
+                    section="version") from None
             if version > BUNDLE_VERSION:
-                raise ValueError(f"bundle version {version} is newer than supported v{BUNDLE_VERSION}")
-            deps = {
-                name: Deployment.from_blob(sub)
-                for name, sub in blob["deployments"].items()
-            }
+                raise BundleFormatError(
+                    f"bundle version {version} is newer than supported v{BUNDLE_VERSION}",
+                    section="version")
+            dep_blobs = blob.get("deployments")
+            if not isinstance(dep_blobs, dict) or not dep_blobs:
+                raise BundleFormatError(
+                    "bundle has no readable 'deployments' section",
+                    section="deployments")
+            sums = blob.get("checksums") or {}
+            load_errors: list[dict] = []
+            deps: dict[str, Deployment] = {}
+            for name, sub in dep_blobs.items():
+                sub = _verify_device_blob(name, sub, sums, load_errors)
+                if sub is None:
+                    continue
+                deps[name] = _parse_deployment(sub, f"deployments.{name}")
+            if not deps:
+                raise BundleIntegrityError(
+                    "no deployment in the bundle survived checksum verification: "
+                    + "; ".join(e["section"] for e in load_errors)
+                )
+            provenance = blob.get("provenance") or {}
+            if provenance and "provenance" in sums and (
+                _section_checksum(provenance) != sums["provenance"]
+            ):
+                load_errors.append({
+                    "section": "provenance", "error": "checksum mismatch",
+                    "action": "provenance dropped",
+                })
+                provenance = {}
             # v4: reattach the top-level provenance block to each deployment
             # (authoritative for tooling that rewrote it without touching the
             # embedded per-device blobs; older per-device meta wins nothing).
             by_canonical = {canonical_device_name(n): d for n, d in deps.items()}
-            for name, ent in (blob.get("provenance") or {}).items():
+            for name, ent in provenance.items():
                 dep = by_canonical.get(canonical_device_name(name))
-                if dep is not None:
+                if dep is not None and isinstance(ent, dict):
                     dep.meta.update(ent)
-            return DeploymentBundle(deployments=deps, meta=blob.get("meta", {}))
+            bundle = DeploymentBundle(deployments=deps, meta=blob.get("meta", {}))
+            bundle.load_errors = load_errors
+            return bundle
         # v1/v2 single-device file: a degenerate one-entry bundle.
-        dep = Deployment.from_blob(blob)
+        dep = _parse_deployment(blob, "deployment")
         return DeploymentBundle(deployments={dep.device: dep}, meta=dict(dep.meta))
 
     @staticmethod
     def load(path: str | Path) -> "DeploymentBundle":
-        return DeploymentBundle.from_blob(json.loads(Path(path).read_text()))
+        text = Path(path).read_text()
+        from .runtime import current_runtime
+
+        plan = current_runtime().fault_plan
+        if plan is not None:  # chaos site: simulate bit rot on the wire
+            text = plan.corrupt_text("bundle.load", text, key=str(path))
+        try:
+            blob = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise BundleFormatError(
+                f"bundle file {path} is not valid JSON: {e.msg}", offset=e.pos
+            ) from e
+        return DeploymentBundle.from_blob(blob)
 
 
 def install_bundle(

@@ -1,0 +1,436 @@
+"""Fault containment: deterministic chaos injection + the failure-model types.
+
+The paper's premise is that a general-purpose library must serve *every*
+input a user throws at it.  The tuned path built in PRs 1-5 quietly assumed
+the opposite: every deployed Pallas config compiles, fits in memory, and
+returns finite numbers on every shape, and every retune hot-swap is an
+improvement.  A production selection system (the model-driven-library line,
+arXiv:1806.07060, and the paper's own successor, arXiv:2003.06795) needs a
+misbehaving kernel config, a corrupt bundle, or a regressed retune to degrade
+gracefully to the reference path — never to take down serving.
+
+This module is the substrate of that failure model (DESIGN.md §11):
+
+  * :class:`FaultPlan` — a seeded, runtime-scoped fault-injection registry.
+    A plan is attached to one :class:`~repro.core.runtime.KernelRuntime`
+    (``rt.set_fault_plan(plan)``) and fires *deterministically* at named
+    sites: kernel compile errors, simulated OOM, NaN/Inf output corruption,
+    latency spikes, and corrupt bundle bytes.  Every firing is recorded in
+    ``plan.events`` so a chaos test can assert exactly what was injected.
+  * Structured fault types (:class:`FaultError` and friends) that the ops
+    guard, the serving engine, and the bundle loader agree on.
+  * The incident record schema (:func:`incident`) shared by the guard and
+    the engine's health state machine.
+  * Training-side fault tolerance, folded in from the former
+    ``repro.ft.runtime`` module: :class:`PreemptionGuard`,
+    :class:`StragglerDetector` (also consulted by the dispatch guard for
+    latency-spike incidents), and :func:`elastic_plan`.
+
+Sites are dotted names; the registered injection points are::
+
+    dispatch.<family>    ops-layer guarded kernel execution (per dispatch)
+    canary.<family>      retune canary's numeric-agreement probe
+    retune.candidate     incremental_retune output (degrade the candidate)
+    bundle.load          bundle text corruption at install time
+    engine.prefill       whole-program prefill trace (engine-level retry)
+    engine.decode        whole-program decode trace (engine-level retry)
+
+Determinism: a spec fires on its matching-call counter (``after`` skips, then
+``times`` firings) — no wall clock, no global RNG.  ``p < 1`` draws from the
+plan's own seeded generator, so a given (seed, call sequence) always injects
+the same faults.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+__all__ = [
+    "FAULT_KINDS",
+    "ElasticPlan",
+    "FaultError",
+    "FaultEvent",
+    "FaultPlan",
+    "FaultSpec",
+    "GUARDED_EXCEPTIONS",
+    "InjectedCompileError",
+    "InjectedOOMError",
+    "NonFiniteOutputError",
+    "PreemptionGuard",
+    "StragglerDetector",
+    "elastic_plan",
+    "incident",
+]
+
+
+# ---------------------------------------------------------------------------
+# fault types (what the guard catches and what injection raises)
+# ---------------------------------------------------------------------------
+class FaultError(RuntimeError):
+    """Base class for injected (and injection-shaped) kernel faults."""
+
+
+class InjectedCompileError(FaultError):
+    """Simulated Pallas compile/lowering failure for one kernel config."""
+
+
+class InjectedOOMError(FaultError):
+    """Simulated out-of-memory: the config's tiles do not fit this device."""
+
+
+class NonFiniteOutputError(FaultError):
+    """A guarded kernel call produced NaN/Inf on a concrete output."""
+
+
+def _guarded_exceptions() -> tuple[type[BaseException], ...]:
+    """Exception types the dispatch guard may contain (fall back to ref).
+
+    Injected faults always; real XLA/Pallas runtime errors when the jaxlib
+    types are importable.  Deliberately excludes TypeError/ValueError — a
+    shape mismatch is a caller bug the ref path would reproduce anyway.
+    """
+    kinds: list[type[BaseException]] = [FaultError]
+    try:  # pragma: no cover - depends on jaxlib version
+        from jax.errors import JaxRuntimeError
+
+        kinds.append(JaxRuntimeError)
+    except Exception:
+        pass
+    try:  # pragma: no cover - depends on jaxlib version
+        from jaxlib.xla_extension import XlaRuntimeError
+
+        kinds.append(XlaRuntimeError)
+    except Exception:
+        pass
+    return tuple(kinds)
+
+
+GUARDED_EXCEPTIONS: tuple[type[BaseException], ...] = _guarded_exceptions()
+
+FAULT_KINDS = ("compile_error", "oom", "nan", "inf", "latency", "corrupt")
+
+
+# ---------------------------------------------------------------------------
+# fault plan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FaultSpec:
+    """One deterministic injection rule.
+
+    ``site`` is the dotted injection point (exact match, or a prefix when it
+    ends with ``.``); ``match`` optionally restricts firing to context keys
+    (config names, device slugs) containing the substring.  The spec skips
+    its first ``after`` matching calls, then fires ``times`` times (``None``
+    = unlimited), each firing subject to probability ``p`` from the plan's
+    seeded generator.  ``value`` parameterizes the kind (sleep seconds for
+    ``latency``, corrupted-character count for ``corrupt``).
+    """
+
+    site: str
+    kind: str
+    times: int | None = 1
+    after: int = 0
+    p: float = 1.0
+    match: str | None = None
+    value: float = 0.0
+    # mutable firing state (owned by the plan's lock)
+    seen: int = 0
+    fired: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; known: {FAULT_KINDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One firing of one spec (the plan's audit record)."""
+
+    seq: int
+    site: str
+    kind: str
+    key: str
+
+
+class FaultPlan:
+    """Seeded, deterministic fault-injection schedule for one runtime.
+
+    Thread-safe: dispatch may consult the plan from many threads; firing
+    counters and the event log are lock-protected.  The plan itself is inert
+    until attached to a runtime (``rt.set_fault_plan(plan)``) — nothing in
+    the library consults a free-standing plan.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self._specs: list[FaultSpec] = []
+        self._seq = 0
+        self.events: list[FaultEvent] = []
+
+    def __repr__(self) -> str:
+        return (f"FaultPlan(seed={self.seed}, specs={len(self._specs)}, "
+                f"fired={len(self.events)})")
+
+    # -- authoring -----------------------------------------------------------
+    def inject(self, site: str, kind: str, *, times: int | None = 1, after: int = 0,
+               p: float = 1.0, match: str | None = None, value: float = 0.0) -> FaultSpec:
+        """Register one injection rule; returns the live spec (counters visible)."""
+        spec = FaultSpec(site=site, kind=kind, times=times, after=after, p=p,
+                         match=match, value=value)
+        with self._lock:
+            self._specs.append(spec)
+        return spec
+
+    @staticmethod
+    def parse(text: str, *, seed: int = 0) -> "FaultPlan":
+        """Build a plan from a compact CLI spec string.
+
+        ``"site:kind[:times[:after]]"`` entries joined by ``,`` — e.g.
+        ``"dispatch.matmul:nan:2,engine.prefill:compile_error:1:3"``.
+        """
+        plan = FaultPlan(seed=seed)
+        for entry in filter(None, (e.strip() for e in text.split(","))):
+            parts = entry.split(":")
+            if len(parts) < 2:
+                raise ValueError(f"bad fault spec {entry!r} (want site:kind[:times[:after]])")
+            site, kind = parts[0], parts[1]
+            times = int(parts[2]) if len(parts) > 2 else 1
+            after = int(parts[3]) if len(parts) > 3 else 0
+            plan.inject(site, kind, times=None if times < 0 else times, after=after)
+        return plan
+
+    def specs(self) -> list[FaultSpec]:
+        with self._lock:
+            return list(self._specs)
+
+    @property
+    def active(self) -> bool:
+        """True while any spec can still fire (cheap armed check)."""
+        with self._lock:
+            return any(s.times is None or s.fired < s.times for s in self._specs)
+
+    # -- firing --------------------------------------------------------------
+    def _matches(self, spec: FaultSpec, site: str, key: str) -> bool:
+        if spec.site.endswith("."):
+            if not site.startswith(spec.site) and site != spec.site[:-1]:
+                return False
+        elif spec.site != site:
+            return False
+        return spec.match is None or spec.match in key
+
+    def fire(self, site: str, key: str = "") -> FaultSpec | None:
+        """The first eligible spec for (site, key), advancing its counters.
+
+        Returns ``None`` when nothing fires.  At most one spec fires per
+        call — injection points are single-fault sites.
+        """
+        with self._lock:
+            for spec in self._specs:
+                if not self._matches(spec, site, key):
+                    continue
+                spec.seen += 1
+                if spec.seen <= spec.after:
+                    continue
+                if spec.times is not None and spec.fired >= spec.times:
+                    continue
+                if spec.p < 1.0 and self._rng.random() >= spec.p:
+                    continue
+                spec.fired += 1
+                self._seq += 1
+                self.events.append(FaultEvent(self._seq, site, spec.kind, key))
+                return spec
+        return None
+
+    # -- kind-specific helpers (what injection *does*) -----------------------
+    def raise_if(self, site: str, key: str = "") -> FaultSpec | None:
+        """Fire at ``site``; raising kinds raise, ``latency`` sleeps.
+
+        Returns the non-raising spec (``nan``/``inf``/``corrupt``) so the
+        caller can apply it to its own payload, or ``None``.
+        """
+        spec = self.fire(site, key)
+        if spec is None:
+            return None
+        if spec.kind == "compile_error":
+            raise InjectedCompileError(f"injected compile failure at {site} [{key}]")
+        if spec.kind == "oom":
+            raise InjectedOOMError(f"injected OOM at {site} [{key}]")
+        if spec.kind == "latency":
+            time.sleep(max(float(spec.value), 0.0))
+            return spec
+        return spec
+
+    @staticmethod
+    def corrupt_array(spec: FaultSpec, out):
+        """Poison one array (or pytree leaf-0) per the spec's kind.
+
+        Concrete arrays only: a tracer passes through untouched.  Poisoning
+        a traced value would bake the NaN into the compiled program for
+        every subsequent call — uncontainable by design (the §11 guard
+        cannot inspect values inside a trace), so injecting there would
+        silently break the containment contract instead of testing it.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        tracer = getattr(jax.core, "Tracer", None)
+        if tracer is not None and isinstance(out, tracer):
+            return out
+        bad = jnp.nan if spec.kind != "inf" else jnp.inf
+        if isinstance(out, tuple):
+            return (FaultPlan.corrupt_array(spec, out[0]),) + tuple(out[1:])
+        return jnp.asarray(out).at[...].set(bad) if hasattr(out, "at") else out
+
+    def corrupt_text(self, site: str, text: str, key: str = "") -> str:
+        """Deterministically mangle ``text`` when a ``corrupt`` spec fires.
+
+        Flips ``value`` characters (default 16) at seeded positions — the
+        "bit rot / truncated upload" shape a bundle checksum must catch.
+        """
+        spec = self.fire(site, key)
+        if spec is None or spec.kind != "corrupt":
+            return text
+        n = int(spec.value) or 16
+        chars = list(text)
+        # seeded positions away from the very start (keep it a JSON-ish blob)
+        positions = self._rng.integers(1, max(len(chars) - 1, 2), size=n)
+        for pos in positions:
+            chars[int(pos)] = "#"
+        return "".join(chars)
+
+
+# ---------------------------------------------------------------------------
+# incident records (guard -> telemetry -> engine health)
+# ---------------------------------------------------------------------------
+def incident(site: str, family: str, config, error: BaseException | str,
+             action: str, *, device: str | None = None, seq: int = 0) -> dict:
+    """The structured incident record the guard emits and telemetry carries.
+
+    ``action`` names what containment did: ``fallback_ref`` (this call served
+    the reference path), ``quarantined`` (the config entered the circuit
+    breaker), ``reprobe_failed``, ``absolved`` (a re-probe succeeded),
+    ``retry`` (engine-level request retry), ``rollback`` (policy rolled back).
+    """
+    name = config.name() if hasattr(config, "name") and callable(config.name) else (
+        None if config is None else str(config))
+    return {
+        "seq": int(seq),
+        "site": site,
+        "family": family,
+        "config": name,
+        "device": device,
+        "error": f"{type(error).__name__}: {error}" if isinstance(error, BaseException) else str(error),
+        "action": action,
+    }
+
+
+# ---------------------------------------------------------------------------
+# training-side fault tolerance (folded in from repro.ft.runtime)
+# ---------------------------------------------------------------------------
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> graceful 'save and exit' request (poll per step)."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._requested = threading.Event()
+        self._signals = signals
+        self._prev = {}
+
+    def __enter__(self):
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+        return False
+
+    def _handler(self, signum, frame):
+        self._requested.set()
+
+    def request(self) -> None:  # for tests / in-process triggers
+        self._requested.set()
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested.is_set()
+
+
+class StragglerDetector:
+    """Rolling step-time stats; flags steps slower than threshold x median.
+
+    Used two ways: the trainer times whole steps (``start``/``stop``), and
+    the dispatch guard feeds per-kernel wall times via :meth:`observe` to
+    turn injected/real latency spikes into incidents.
+    """
+
+    def __init__(self, window: int = 50, threshold: float = 2.0, warmup: int = 5):
+        self.window = window
+        self.threshold = threshold
+        self.warmup = warmup
+        self.times: deque[float] = deque(maxlen=window)
+        self.flagged: list[tuple[int, float, float]] = []  # (step, t, median)
+        self._step = 0
+        self._t0: float | None = None
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self) -> bool:
+        """Record the step; returns True if it was a straggler step."""
+        assert self._t0 is not None, "stop() without start()"
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        self._step += 1
+        is_straggler = self.observe(dt)
+        return is_straggler
+
+    def observe(self, dt: float) -> bool:
+        med = self.median()
+        straggler = (
+            len(self.times) >= self.warmup and med > 0 and dt > self.threshold * med
+        )
+        if straggler:
+            self.flagged.append((self._step, dt, med))
+        self.times.append(dt)
+        return straggler
+
+    def median(self) -> float:
+        if not self.times:
+            return 0.0
+        s = sorted(self.times)
+        return s[len(s) // 2]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    ok: bool
+    reason: str
+    data: object | None = None  # DataConfig on ok=True
+
+
+def elastic_plan(data, new_host_index: int, new_host_count: int) -> ElasticPlan:
+    """Resume plan after the fleet grows/shrinks.
+
+    The checkpoint needs no conversion (sharding-agnostic). The only
+    constraint is global-batch divisibility across the new host count.
+    """
+    from repro.data.pipeline import reshard
+
+    if new_host_count <= 0:
+        return ElasticPlan(False, "host count must be positive")
+    if data.global_batch % new_host_count != 0:
+        return ElasticPlan(
+            False,
+            f"global_batch={data.global_batch} not divisible by {new_host_count} hosts",
+        )
+    if not (0 <= new_host_index < new_host_count):
+        return ElasticPlan(False, f"host index {new_host_index} out of range")
+    return ElasticPlan(True, "ok", reshard(data, new_host_index, new_host_count))

@@ -131,6 +131,11 @@ class TelemetrySnapshot:
     family_problems: dict[str, dict[Bucket, tuple]] = dataclasses.field(default_factory=dict)
     observed: dict[Bucket, list] = dataclasses.field(default_factory=dict)
     n_events: int = 0
+    # Dispatch/serving incidents carried from the runtime (DESIGN.md §11):
+    # structured records from the fault guard, newest last.  Purely
+    # observational today — drift detection keys off the histograms — but the
+    # canary and the engine's health watchdog read them alongside the counts.
+    incidents: list[dict] = dataclasses.field(default_factory=list)
 
     # -- legacy views --------------------------------------------------------
     @property
@@ -172,9 +177,12 @@ class TelemetrySnapshot:
 
         The runtime handle owns the telemetry window (per-tenant, isolated
         from every other runtime in the process); this is
-        :meth:`from_selection_log` fed from ``runtime.selection_log()``.
+        :meth:`from_selection_log` fed from ``runtime.selection_log()``,
+        plus the runtime's recorded dispatch incidents.
         """
-        return TelemetrySnapshot.from_selection_log(runtime.selection_log(), online=online)
+        snap = TelemetrySnapshot.from_selection_log(runtime.selection_log(), online=online)
+        snap.incidents = runtime.incidents()
+        return snap
 
     def families(self) -> list[str]:
         """Families with at least one recorded event, matmul first."""
@@ -203,6 +211,7 @@ class TelemetrySnapshot:
             self.family_problems.setdefault(fname, {}).update(probs)
         for b, rows in other.observed.items():
             self.observed.setdefault(b, []).extend(rows)
+        self.incidents.extend(other.incidents)
         self.n_events += other.n_events
         return self
 
@@ -505,3 +514,185 @@ def _model_dataset_builder(problems: list[tuple], device: str) -> TuningDataset:
             f"(e.g. a cpubench-backed measurer) to incremental_retune"
         )
     return build_model_dataset(problems, device_name=device)
+
+
+# ---------------------------------------------------------------------------
+# canary: validate a retune candidate before it is installed (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CanaryReport:
+    """Verdict on one retune candidate for one family.
+
+    ``selection_score_*`` are traffic-weighted achieved-fraction scores on
+    the holdout (1.0 = every holdout problem gets its best deployable
+    config); ``None`` when no perf model covers the device, in which case
+    the selection check abstains (passes).  ``numeric_ok`` is the
+    ref-agreement probe.  ``ok`` is the installable verdict.
+    """
+
+    family: str
+    ok: bool
+    selection_ok: bool
+    numeric_ok: bool
+    selection_score_new: float | None = None
+    selection_score_old: float | None = None
+    reason: str = ""
+
+
+def _holdout_problems(
+    snapshot: TelemetrySnapshot, family: str, holdout: int
+) -> tuple[list[tuple], list[float]]:
+    """The ``holdout`` heaviest-traffic buckets' representative problems."""
+    live = snapshot.histogram(family)
+    probs = snapshot.family_problems.get(family, {})
+    buckets = sorted(live, key=lambda b: -live[b])[: max(int(holdout), 1)]
+    pairs = [(probs[b], live[b]) for b in buckets if b in probs]
+    return [p for p, _ in pairs], [w for _, w in pairs]
+
+
+def _selection_score(
+    deployment: Deployment, family: str, problems: list[tuple], weights: list[float]
+) -> float | None:
+    """Traffic-weighted achieved fraction of best deployable perf; None = no model."""
+    fam = get_family(family)
+    configs = list(fam.config_space())
+    model_device = deployment.device if fam.device_sensitive else None
+    try:
+        perf = np.asarray(fam.perf_matrix(problems, configs, model_device))
+    except Exception:
+        return None  # no analytic model for this device: the check abstains
+    best = perf.max(axis=1)
+    total = sum(weights) or 1.0
+    score = 0.0
+    for i, p in enumerate(problems):
+        cfg = deployment.select(family, p)
+        try:
+            j = configs.index(cfg)
+        except ValueError:
+            j = None
+        achieved = float(perf[i, j]) if j is not None else 0.0
+        score += weights[i] * (achieved / best[i] if best[i] > 0 else 0.0)
+    return score / total
+
+
+def _numeric_agreement(family: str, config, runtime) -> tuple[bool, str]:
+    """Tiny probe through the family kernel with ``config`` vs the reference.
+
+    Runs the candidate's selected config against the ``kernels.ref`` oracle
+    on seeded inputs.  The probe honors the runtime's ``canary.<family>``
+    fault-injection site (an injected failure rejects the candidate — the
+    dispatch guard is deliberately *not* in the loop here, so containment
+    cannot mask a canary failure) but detaches the plan around the kernel
+    call itself: dispatch-site faults belong to serving, not to the canary.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    if config is None:
+        return True, ""
+    plan = getattr(runtime, "fault_plan", None) if runtime is not None else None
+    key = config.name() if hasattr(config, "name") and callable(config.name) else str(config)
+    spec = None
+    if plan is not None:
+        from .faults import FaultError
+
+        try:
+            spec = plan.raise_if(f"canary.{family}", key)
+        except FaultError as e:
+            return False, f"canary probe failed: {e}"
+    rng = np.random.default_rng(0)
+    f32 = lambda *shape: jnp.asarray(rng.normal(size=shape), jnp.float32)
+    use_pallas = bool(getattr(runtime, "use_pallas", False))
+    interpret = bool(getattr(runtime, "interpret", False))
+    saved = getattr(runtime, "fault_plan", None) if runtime is not None else None
+    if runtime is not None:
+        runtime.fault_plan = None
+    try:
+        if family == "matmul":
+            a, b = f32(8, 16), f32(16, 8)
+            expect = ref.matmul_ref(a, b)
+            if use_pallas:
+                from repro.kernels.matmul import matmul_pallas
+
+                got = matmul_pallas(a, b, config, interpret=interpret)
+            else:
+                got = jnp.dot(a, b, preferred_element_type=jnp.float32)
+        elif family == "attention":
+            q, k, v = f32(8, 16), f32(8, 16), f32(8, 16)
+            expect = ref.flash_attention_ref(q, k, v)
+            if use_pallas:
+                from repro.kernels.attention import flash_attention_pallas
+
+                got = flash_attention_pallas(q, k, v, config, interpret=interpret)
+            else:
+                got = expect
+        elif family == "wkv":
+            r, k, v, logw = f32(1, 8, 1, 4), f32(1, 8, 1, 4), f32(1, 8, 1, 4), f32(1, 8, 1, 4)
+            u = f32(1, 4)
+            expect = ref.wkv_ref(r, k, v, -jnp.abs(logw), u)[0]
+            got = expect  # Pallas wkv probe rides the vmapped ops path only
+        elif family == "ssm_scan":
+            dtx, dta = f32(1, 8, 4), f32(1, 8, 4, 2)
+            b_in, c_in = f32(1, 8, 2), f32(1, 8, 2)
+            expect = ref.ssm_scan_ref(dtx, -jnp.abs(dta), b_in, c_in)[0]
+            got = expect
+        else:
+            return True, ""
+    except Exception as e:  # a real compile/lowering failure on this config
+        return False, f"canary probe raised: {type(e).__name__}: {e}"
+    finally:
+        if runtime is not None:
+            runtime.fault_plan = saved
+    if spec is not None and spec.kind in ("nan", "inf"):
+        from .faults import FaultPlan
+
+        got = FaultPlan.corrupt_array(spec, got)
+    if not bool(jnp.isfinite(got).all()):
+        return False, "canary probe produced non-finite output"
+    if not bool(jnp.allclose(got, expect, rtol=1e-3, atol=1e-3)):
+        return False, "canary probe disagrees with reference"
+    return True, ""
+
+
+def canary_deployment(
+    old: Deployment,
+    new: Deployment,
+    snapshot: TelemetrySnapshot,
+    *,
+    family: str = "matmul",
+    holdout: int = 8,
+    tolerance: float = 0.05,
+    runtime=None,
+) -> CanaryReport:
+    """Gate a retune candidate on a holdout of recent telemetry.
+
+    Two checks, both of which must pass before ``install_for_device``:
+
+      * **selection quality** — on the ``holdout`` heaviest live buckets,
+        the candidate's traffic-weighted achieved fraction (per the family's
+        perf model) must not regress more than ``tolerance`` below the
+        incumbent's.  Abstains (passes) when no perf model covers the
+        device — a measured-path retune validates numerically only.
+      * **numeric agreement** — the config the candidate selects for the
+        heaviest bucket must reproduce the ``kernels.ref`` oracle on a
+        seeded probe; honors the ``canary.<family>`` injection site.
+    """
+    problems, weights = _holdout_problems(snapshot, family, holdout)
+    if not problems:
+        return CanaryReport(family, True, True, True, reason="no holdout traffic")
+    s_new = _selection_score(new, family, problems, weights)
+    s_old = _selection_score(old, family, problems, weights)
+    selection_ok = True
+    reason = ""
+    if s_new is not None and s_old is not None and s_new < s_old - tolerance:
+        selection_ok = False
+        reason = (
+            f"selection quality regressed: {s_new:.4f} < {s_old:.4f} - {tolerance}"
+        )
+    probe_cfg = new.select(family, problems[0])
+    numeric_ok, num_reason = _numeric_agreement(family, probe_cfg, runtime)
+    ok = selection_ok and numeric_ok
+    return CanaryReport(
+        family, ok, selection_ok, numeric_ok, s_new, s_old, reason or num_reason
+    )

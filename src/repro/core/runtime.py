@@ -44,6 +44,13 @@ from collections import OrderedDict, deque
 
 DEFAULT_LOG_CAP = 4096
 DEFAULT_SHAPE_CACHE_CAP = 1024
+DEFAULT_INCIDENT_CAP = 256
+DEFAULT_SWAP_HISTORY = 4
+# Circuit breaker re-probe cadence, counted in selections of the quarantined
+# config: first re-probe after QUARANTINE_BACKOFF skipped selections, doubling
+# per failed probe up to the cap.
+QUARANTINE_BACKOFF = 4
+QUARANTINE_MAX_BACKOFF = 256
 
 _MISS = object()
 
@@ -98,6 +105,15 @@ class KernelRuntime:
         self._selection_log: deque[tuple] = deque(maxlen=DEFAULT_LOG_CAP)
         self._shape_cache_cap: int = DEFAULT_SHAPE_CACHE_CAP
         self._local = _RuntimeLocal()
+        # -- failure containment (DESIGN.md §11) --
+        self.fault_plan = None  # repro.core.faults.FaultPlan, or None
+        self._validate_outputs: bool = False
+        self._quarantine: dict[tuple[str, str], dict] = {}
+        self._incidents: deque[dict] = deque(maxlen=DEFAULT_INCIDENT_CAP)
+        self._incident_count: int = 0
+        self._swap_history: deque[tuple[str, object, int]] = deque(
+            maxlen=DEFAULT_SWAP_HISTORY
+        )
 
     def __repr__(self) -> str:
         with self._lock:
@@ -159,6 +175,11 @@ class KernelRuntime:
                     self._requested_device = None
                     self._epoch += 1
             else:
+                prev = self._device_policies.get(name)
+                if prev is not None and prev is not policy:
+                    # Bounded swap history: rollback_device() restores the
+                    # most recent predecessor after a regressing hot-swap.
+                    self._swap_history.append((name, prev, self._epoch))
                 self._device_policies[name] = policy
                 if name == self._active_device:
                     self._policy = policy
@@ -249,6 +270,183 @@ class KernelRuntime:
         """Route ops through the Pallas kernels (interpret=True on CPU)."""
         self.use_pallas = enabled
         self.interpret = interpret
+
+    # -- failure containment (DESIGN.md §11) -----------------------------------
+    def set_fault_plan(self, plan) -> None:
+        """Attach (or with ``None``, detach) a chaos-injection plan.
+
+        An attached plan arms the ops-layer guard's injection sites *and* its
+        non-finite output validation — injected NaN/Inf must be caught, and a
+        chaos run should exercise the same validation a hardened production
+        deployment would enable via :meth:`set_output_validation`.
+        """
+        self.fault_plan = plan
+
+    def set_output_validation(self, enabled: bool) -> None:
+        """Opt dispatch into checking kernel outputs for NaN/Inf.
+
+        Only concrete (non-tracer) outputs are checked — inside a ``jit``
+        trace there is nothing to inspect.  Always on while a fault plan is
+        attached.
+        """
+        self._validate_outputs = bool(enabled)
+
+    def output_validation_enabled(self) -> bool:
+        return self._validate_outputs or self.fault_plan is not None
+
+    def record_incident(self, rec: dict) -> dict:
+        """Append one structured incident (see ``repro.core.faults.incident``).
+
+        Stamps the monotonic incident sequence number; the bounded deque
+        keeps the newest :data:`DEFAULT_INCIDENT_CAP` records while
+        :meth:`incident_count` keeps counting — the engine's health watchdog
+        compares counts, not buffer lengths.
+        """
+        with self._lock:
+            self._incident_count += 1
+            rec = dict(rec, seq=self._incident_count)
+            self._incidents.append(rec)
+        return rec
+
+    def incidents(self) -> list[dict]:
+        """Newest-last snapshot of recorded dispatch/serving incidents."""
+        with self._lock:
+            return list(self._incidents)
+
+    def incident_count(self) -> int:
+        """Monotonic count of incidents ever recorded on this runtime."""
+        return self._incident_count
+
+    def quarantine_config(self, family: str, config, error=None) -> dict:
+        """Open (or re-open) the circuit breaker for ``(device, family, config)``.
+
+        While open, selections that would serve ``config`` are redirected to
+        the family default; every :data:`QUARANTINE_BACKOFF` (doubling per
+        failed re-probe, capped at :data:`QUARANTINE_MAX_BACKOFF`) redirected
+        selections the breaker goes half-open and serves the quarantined
+        config once so the guard can re-probe it.  The epoch bump makes every
+        dispatching thread drop its shape cache on its next selection — a
+        cached entry from before the quarantine can never be served after it.
+        """
+        name = config.name() if hasattr(config, "name") and callable(config.name) else str(config)
+        with self._lock:
+            entry = self._quarantine.get((family, name))
+            if entry is None:
+                entry = {
+                    "family": family,
+                    "config": config,
+                    "name": name,
+                    "device": self._active_device,
+                    "failures": 0,
+                    "backoff": QUARANTINE_BACKOFF,
+                    "countdown": QUARANTINE_BACKOFF,
+                    "skipped": 0,
+                    "probes": 0,
+                    "state": "open",
+                    "error": None,
+                }
+                self._quarantine[(family, name)] = entry
+            else:
+                entry["backoff"] = min(entry["backoff"] * 2, QUARANTINE_MAX_BACKOFF)
+                entry["countdown"] = entry["backoff"]
+                entry["state"] = "open"
+            entry["failures"] += 1
+            if error is not None:
+                entry["error"] = f"{type(error).__name__}: {error}" if isinstance(
+                    error, BaseException) else str(error)
+            self._epoch += 1
+        self.clear_shape_cache()
+        return dict(entry)
+
+    def absolve(self, family: str, config) -> bool:
+        """Close the breaker after a successful re-probe (config healthy again)."""
+        name = config.name() if hasattr(config, "name") and callable(config.name) else str(config)
+        with self._lock:
+            entry = self._quarantine.pop((family, name), None)
+            if entry is not None:
+                self._epoch += 1
+        if entry is not None:
+            self.clear_shape_cache()
+        return entry is not None
+
+    def quarantined(self) -> list[dict]:
+        """Snapshot of open/half-open breaker entries (shallow copies)."""
+        with self._lock:
+            return [dict(e) for e in self._quarantine.values()]
+
+    def _apply_quarantine(self, family: str, cfg):
+        """Selection-time breaker: redirect a quarantined config, or probe it.
+
+        Called only when the quarantine table is non-empty (the happy path
+        pays one falsy-dict check).  Counting happens per *selection*, so a
+        shape-cache hit still advances the re-probe countdown — the breaker
+        sits after the cache, on the served value.
+        """
+        if cfg is None:
+            return cfg
+        name = cfg.name() if hasattr(cfg, "name") and callable(cfg.name) else str(cfg)
+        with self._lock:
+            entry = self._quarantine.get((family, name))
+            if entry is None:
+                return cfg
+            if entry["device"] not in (None, self._active_device):
+                return cfg
+            entry["countdown"] -= 1
+            if entry["countdown"] <= 0:
+                # Half-open: serve the quarantined config once as a probe.
+                # The countdown resets immediately so an unexecuted selection
+                # (launcher-side select_* with no kernel run) cannot wedge
+                # the breaker in half-open.
+                entry["countdown"] = entry["backoff"]
+                entry["probes"] += 1
+                entry["state"] = "half_open"
+                return cfg
+            entry["skipped"] += 1
+            entry["state"] = "open"
+        from .families import get_family
+
+        fallback = get_family(family).default_config
+        return fallback if fallback is not None else cfg
+
+    def probing(self, family: str, config) -> bool:
+        """True when ``config`` is a half-open breaker's live probe."""
+        name = config.name() if hasattr(config, "name") and callable(config.name) else str(config)
+        with self._lock:
+            entry = self._quarantine.get((family, name))
+            return entry is not None and entry["state"] == "half_open"
+
+    def swap_history(self) -> list[tuple[str, object, int]]:
+        """Bounded (device, previous_policy, epoch) history of hot-swaps."""
+        with self._lock:
+            return list(self._swap_history)
+
+    def rollback_device(self, device: str | None = None):
+        """Reinstall the most recent pre-swap policy for ``device``.
+
+        The auto-rollback path for an installed-but-regressing retune: pops
+        the newest swap-history entry for the device (default: the active
+        one) and restores it, with the usual epoch bump when the device is
+        live.  Returns the restored policy, or ``None`` with no history.
+        """
+        from .devices import canonical_device_name
+
+        name = canonical_device_name(device) if device else self._active_device
+        if name is None:
+            return None
+        with self._lock:
+            prev = None
+            for i in range(len(self._swap_history) - 1, -1, -1):
+                if self._swap_history[i][0] == name:
+                    prev = self._swap_history[i][1]
+                    del self._swap_history[i]
+                    break
+            if prev is None:
+                return None
+            self._device_policies[name] = prev
+            if name == self._active_device:
+                self._policy = prev
+                self._epoch += 1
+        return prev
 
     # -- selection log (telemetry) ---------------------------------------------
     def set_selection_logging(self, enabled: bool, *, cap: int | None = None) -> None:
@@ -380,6 +578,11 @@ class KernelRuntime:
                 loc.cache_hits += 1
                 loc.family_stats.setdefault(op, [0, 0])[0] += 1
                 loc.shape_cache.move_to_end(key)
+                if self._quarantine:
+                    # Breaker sits after the cache (cache holds the policy's
+                    # raw choice): counting per served selection keeps the
+                    # re-probe countdown advancing on cache hits too.
+                    cfg = self._apply_quarantine(op, cfg)
                 if self._log_enabled:
                     self._selection_log.append((op, problem, cfg))
                 return cfg
@@ -390,6 +593,8 @@ class KernelRuntime:
             loc.shape_cache[key] = cfg
             if len(loc.shape_cache) > loc.shape_cache_cap:
                 loc.shape_cache.popitem(last=False)
+        if self._quarantine:
+            cfg = self._apply_quarantine(op, cfg)
         if self._log_enabled:
             self._selection_log.append((op, problem, cfg))
         return cfg

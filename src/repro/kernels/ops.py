@@ -28,6 +28,12 @@ from typing import Protocol
 import jax
 import jax.numpy as jnp
 
+from repro.core.faults import (
+    GUARDED_EXCEPTIONS,
+    FaultPlan,
+    NonFiniteOutputError,
+    incident,
+)
 from repro.core.runtime import (
     DEFAULT_LOG_CAP,
     DEFAULT_SHAPE_CACHE_CAP,
@@ -253,6 +259,73 @@ def select_ssm_config(s: int, d: int) -> SsmConfig | None:
 
 
 # ---------------------------------------------------------------------------
+# guarded execution (DESIGN.md §11: fault containment at the dispatch site)
+# ---------------------------------------------------------------------------
+_TRACER = getattr(jax.core, "Tracer", None)
+
+
+def _raise_non_finite(family: str, out) -> None:
+    """Raise :class:`NonFiniteOutputError` if a concrete output leaf has NaN/Inf.
+
+    Tracer leaves are skipped — inside a ``jit`` trace there is no value to
+    inspect (validation then happens on the eager/chaos path, which is where
+    fault plans run).
+    """
+    leaves = out if isinstance(out, tuple) else (out,)
+    for leaf in leaves:
+        if _TRACER is not None and isinstance(leaf, _TRACER):
+            return
+        if not hasattr(leaf, "dtype") or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        if not bool(jnp.isfinite(leaf).all()):
+            raise NonFiniteOutputError(f"{family} kernel call produced non-finite output")
+
+
+def _guarded_call(rt, family: str, config, run_tuned, run_ref):
+    """Execute one kernel call under the fault guard.
+
+    Happy-path cost is one try frame plus two attribute checks (the perf gate
+    bounds it at <5%, ``guarded_dispatch_overhead`` in bench_selection).  On
+    an injected or real compile/lowering/runtime failure — or a non-finite
+    concrete output while validation is armed — the guard records the
+    incident, quarantines ``(device, family, config)`` behind the runtime's
+    circuit breaker, and re-runs the reference path (which a second failure
+    would escape from: a broken oracle is a caller-visible bug, not a
+    containment case).  A successful run of a half-open breaker's probe
+    config closes the breaker (absolve).
+    """
+    plan = rt.fault_plan
+    try:
+        spec = None
+        if plan is not None:
+            key = config.name() if config is not None and hasattr(config, "name") else ""
+            spec = plan.raise_if(f"dispatch.{family}", key)
+        out = run_tuned()
+        if spec is not None and spec.kind in ("nan", "inf"):
+            out = FaultPlan.corrupt_array(spec, out)
+        if plan is not None or rt._validate_outputs:
+            _raise_non_finite(family, out)
+        if spec is not None and spec.kind == "latency":
+            rt.record_incident(incident(
+                f"dispatch.{family}", family, config, "injected latency spike",
+                "latency_spike", device=rt.active_device()))
+        if config is not None and rt._quarantine and rt.probing(family, config):
+            rt.absolve(family, config)
+            rt.record_incident(incident(
+                f"dispatch.{family}", family, config, "re-probe succeeded",
+                "absolved", device=rt.active_device()))
+        return out
+    except GUARDED_EXCEPTIONS as e:
+        if config is not None:
+            rt.quarantine_config(family, config, e)
+        rt.record_incident(incident(
+            f"dispatch.{family}", family, config, e,
+            "quarantined" if config is not None else "fallback_ref",
+            device=rt.active_device()))
+        return run_ref()
+
+
+# ---------------------------------------------------------------------------
 # matmul
 # ---------------------------------------------------------------------------
 def matmul(lhs: jax.Array, rhs: jax.Array, *, out_dtype=None, config: MatmulConfig | None = None) -> jax.Array:
@@ -275,12 +348,16 @@ def matmul(lhs: jax.Array, rhs: jax.Array, *, out_dtype=None, config: MatmulConf
         batch *= d
     if config is None:
         config = rt.select_matmul_config(m, k, n, batch)
+    run_ref = lambda: jnp.dot(lhs, rhs, preferred_element_type=jnp.float32).astype(
+        out_dtype or lhs.dtype
+    )
     if not rt.use_pallas:
-        out = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
-        return out.astype(out_dtype or lhs.dtype)
+        return _guarded_call(rt, "matmul", config, run_ref, run_ref)
     lhs2 = lhs.reshape(m * batch, k)
-    out = matmul_pallas(lhs2, rhs, config or DEFAULT_CONFIG, out_dtype=out_dtype, interpret=rt.interpret)
-    return out.reshape(*lead, n)
+    run_tuned = lambda: matmul_pallas(
+        lhs2, rhs, config or DEFAULT_CONFIG, out_dtype=out_dtype, interpret=rt.interpret
+    ).reshape(*lead, n)
+    return _guarded_call(rt, "matmul", config, run_tuned, run_ref)
 
 
 # ---------------------------------------------------------------------------
@@ -304,16 +381,23 @@ def attention(
     rt = current_runtime()
     if config is None:
         config = rt.select_attention_config(sq, skv, d)
+
+    def _apply(fn):
+        for _ in range(q.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(q, k, v)
+
+    ref_fn = lambda q_, k_, v_: flash_attention_ref(q_, k_, v_, causal=causal, scale=scale)
     if not rt.use_pallas:
-        fn = lambda q_, k_, v_: flash_attention_ref(q_, k_, v_, causal=causal, scale=scale)
-    else:
-        cfg = config or DEFAULT_ATTN_CONFIG
-        fn = lambda q_, k_, v_: flash_attention_pallas(
-            q_, k_, v_, cfg, causal=causal, scale=scale, interpret=rt.interpret
-        )
-    for _ in range(q.ndim - 2):
-        fn = jax.vmap(fn)
-    return fn(q, k, v)
+        run_ref = lambda: _apply(ref_fn)
+        return _guarded_call(rt, "attention", config, run_ref, run_ref)
+    cfg = config or DEFAULT_ATTN_CONFIG
+    tuned_fn = lambda q_, k_, v_: flash_attention_pallas(
+        q_, k_, v_, cfg, causal=causal, scale=scale, interpret=rt.interpret
+    )
+    return _guarded_call(
+        rt, "attention", config, lambda: _apply(tuned_fn), lambda: _apply(ref_fn)
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -329,21 +413,26 @@ def wkv(r, k, v, logw, u, state=None, *, config: WkvConfig | None = None):
     rt = current_runtime()
     if config is None:
         config = rt.select_wkv_config(s, hd)
-    if not rt.use_pallas:
-        from .ref import wkv_ref
+    from .ref import wkv_ref
 
-        return wkv_ref(r, k, v, logw, u, state)
+    run_ref = lambda: wkv_ref(r, k, v, logw, u, state)
+    if not rt.use_pallas:
+        return _guarded_call(rt, "wkv", config, run_ref, run_ref)
     if state is None:
         import jax.numpy as _jnp
 
         state = _jnp.zeros((b, h, hd, hd), _jnp.float32)
     cfg = config or DEFAULT_WKV_CONFIG
-    one = lambda rr, kk, vv, ww, uu, ss: wkv_pallas(
-        rr, kk, vv, ww, uu, ss, cfg, interpret=rt.interpret
-    )
-    fn = jax.vmap(jax.vmap(one, in_axes=(1, 1, 1, 1, 0, 0)), in_axes=(0, 0, 0, 0, None, 0))
-    o, s_out = fn(r, k, v, logw, u, state)
-    return o.transpose(0, 2, 1, 3), s_out  # (B,H,S,hd) -> (B,S,H,hd)
+
+    def run_tuned():
+        one = lambda rr, kk, vv, ww, uu, ss: wkv_pallas(
+            rr, kk, vv, ww, uu, ss, cfg, interpret=rt.interpret
+        )
+        fn = jax.vmap(jax.vmap(one, in_axes=(1, 1, 1, 1, 0, 0)), in_axes=(0, 0, 0, 0, None, 0))
+        o, s_out = fn(r, k, v, logw, u, state)
+        return o.transpose(0, 2, 1, 3), s_out  # (B,H,S,hd) -> (B,S,H,hd)
+
+    return _guarded_call(rt, "wkv", config, run_tuned, run_ref)
 
 
 # ---------------------------------------------------------------------------
@@ -359,17 +448,22 @@ def ssm_scan(dtx, dta, b, v_c, state=None, *, config: SsmConfig | None = None):
     rt = current_runtime()
     if config is None:
         config = rt.select_ssm_config(dtx.shape[1], dtx.shape[2])
-    if not rt.use_pallas:
-        from .ref import ssm_scan_ref
+    from .ref import ssm_scan_ref
 
-        return ssm_scan_ref(dtx, dta, b, v_c, state)
+    run_ref = lambda: ssm_scan_ref(dtx, dta, b, v_c, state)
+    if not rt.use_pallas:
+        return _guarded_call(rt, "ssm_scan", config, run_ref, run_ref)
     cfg = config or DEFAULT_SSM_CONFIG
-    one = lambda x_, a_, b_, c_, s_: ssm_scan_pallas(
-        x_, a_, b_, c_, s_, cfg, interpret=rt.interpret
-    )
     if state is None:
         import jax.numpy as _jnp
 
         bsz, _, d = dtx.shape
         state = _jnp.zeros((bsz, d, b.shape[-1]), _jnp.float32)
-    return jax.vmap(one)(dtx, dta, b, v_c, state)
+
+    def run_tuned():
+        one = lambda x_, a_, b_, c_, s_: ssm_scan_pallas(
+            x_, a_, b_, c_, s_, cfg, interpret=rt.interpret
+        )
+        return jax.vmap(one)(dtx, dta, b, v_c, state)
+
+    return _guarded_call(rt, "ssm_scan", config, run_tuned, run_ref)

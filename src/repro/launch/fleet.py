@@ -15,7 +15,7 @@ DataConfig.  Env contract (GKE/JobSet-style; SLURM variables are mapped):
 Elastic restarts re-enter through the same path: after the scheduler
 replaces a host, every process re-initializes with the new topology and the
 trainer resumes from the latest committed checkpoint with a re-derived
-``DataConfig`` (see ft.elastic_plan) — the checkpoint format is
+``DataConfig`` (see core.faults.elastic_plan) — the checkpoint format is
 sharding-agnostic, so no conversion step exists.
 """
 from __future__ import annotations
@@ -74,7 +74,7 @@ def fleet_data_config(base: DataConfig, topo: FleetTopology) -> DataConfig:
     if base.global_batch % topo.num_processes != 0:
         raise ValueError(
             f"global_batch={base.global_batch} not divisible by "
-            f"{topo.num_processes} hosts (see ft.elastic_plan)"
+            f"{topo.num_processes} hosts (see core.faults.elastic_plan)"
         )
     return dataclasses.replace(
         base, host_index=topo.process_id, host_count=topo.num_processes

@@ -39,12 +39,25 @@ def main(argv=None) -> None:
                     help="Jensen-Shannon divergence (0-1) that triggers a retune")
     ap.add_argument("--retune-min-events", type=int, default=DEFAULT_MIN_EVENTS,
                     help="telemetry floor before a drift check may trigger")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="fault-injection plan 'site:kind[:times[:after]],...' — e.g. "
+                         "'dispatch.matmul:compile_error,engine.prefill:compile_error'; "
+                         "injected faults are contained by the dispatch guard "
+                         "(DESIGN.md §11) and reported after the run (nan/inf "
+                         "kinds poison concrete values only, so they are no-ops "
+                         "inside jit-traced serving programs)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the fault plan's probabilistic specs")
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch).reduced()
     # The launcher owns an explicit runtime handle: every policy, cache, and
     # telemetry mutation below is scoped to it (nothing process-global).
     rt = KernelRuntime(name=f"serve[{args.arch}]")
+    if args.chaos:
+        from repro.core.faults import FaultPlan
+
+        rt.set_fault_plan(FaultPlan.parse(args.chaos, seed=args.chaos_seed))
     bundle = None
     if args.bundle:
         from repro.core.bundle import DeploymentBundle
@@ -102,6 +115,14 @@ def main(argv=None) -> None:
         print(f"  retune check @ step {ev.step}: drift {ev.drift_score:.3f} "
               f"(unseen {ev.unseen_fraction:.1%}) -> {verdict} "
               f"[{ev.n_configs} kernels, policy epoch {ev.epoch}]")
+    if args.chaos:
+        plan = rt.fault_plan
+        print(f"chaos: {len(plan.events)} faults fired, {rt.incident_count()} "
+              f"incidents contained, {len(rt.quarantined())} configs in "
+              f"quarantine, engine health {status.health!r}")
+        for inc in rt.incidents()[-5:]:
+            print(f"  incident #{inc['seq']} {inc['site']} [{inc['config']}] "
+                  f"-> {inc['action']}: {inc['error']}")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.output[:10]}...")
 

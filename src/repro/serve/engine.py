@@ -18,6 +18,7 @@ caches stay on device.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +38,7 @@ class Request:
     done: bool = False
     state: str = "queued"  # queued | active | done | starved
     truncated_tokens: int = 0  # prompt tokens dropped by sliding-window admit
+    retries: int = 0  # kernel-fault retries this request survived
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +51,9 @@ class RetuneEvent:
     per kernel family: ``families`` names the families whose tunings were
     refreshed by this event (empty when nothing triggered), and
     ``drift_score`` / ``unseen_fraction`` report the worst family observed.
+    ``rejected`` names families whose retune candidate failed the canary and
+    was never installed; ``rolled_back`` marks the auto-rollback event of a
+    previously installed policy that regressed in service (DESIGN.md §11).
     """
 
     step: int
@@ -60,6 +65,8 @@ class RetuneEvent:
     n_configs: int
     epoch: int
     families: tuple[str, ...] = ()
+    rejected: tuple[str, ...] = ()
+    rolled_back: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +77,9 @@ class EngineStatus:
     requests hold slots mid-decode, ``queued`` never got a slot.  Both carry
     ``done=False`` and a non-``"done"`` per-request ``state`` — checking
     ``output`` alone cannot distinguish them once prefill has emitted tokens.
+    ``health`` is the engine's final serving-health state (``"healthy"`` /
+    ``"degraded"``): degraded while dispatch incidents are arriving or
+    configs sit in quarantine, healthy again once the window is clean.
     """
 
     completed: int
@@ -77,6 +87,7 @@ class EngineStatus:
     queued: int
     steps: int
     exhausted: bool
+    health: str = "healthy"
 
 
 def _bucket(n: int, buckets: tuple[int, ...]) -> int:
@@ -102,6 +113,9 @@ class ServingEngine:
         retune_interval: int | None = None,
         drift_threshold: float = DEFAULT_DRIFT_THRESHOLD,
         retune_min_events: int = DEFAULT_MIN_EVENTS,
+        canary: bool = True,
+        rollback_threshold: int = 3,
+        swap_history: int = 4,
     ):
         from repro.core.runtime import current_runtime
 
@@ -142,6 +156,16 @@ class ServingEngine:
         self.retune_min_events = retune_min_events
         self.retune_events: list[RetuneEvent] = []
         self._last_retune_check = 0
+        # -- failure containment (DESIGN.md §11) -----------------------------
+        self.canary = canary
+        self.rollback_threshold = max(int(rollback_threshold), 1)
+        self.health = "healthy"
+        self.health_events: list[tuple[int, str]] = []  # (step, new state)
+        self._incidents_seen = self.runtime.incident_count()
+        # Previous deployments, newest last; maybe_retune pushes the incumbent
+        # before installing a candidate, the rollback watchdog pops it.
+        self._swap_history: deque = deque(maxlen=max(int(swap_history), 1))
+        self._incidents_at_swap: int | None = None
         if retune_interval is not None:
             # Telemetry source: the runtime's selection log (cache hits
             # included, so the histogram reflects real traffic frequencies).
@@ -188,7 +212,12 @@ class ServingEngine:
         for k, v in self.extra_inputs.items():
             batch[k] = _batch_extra(k, v)
         with self.runtime.activate():  # trace-time selections hit OUR runtime
-            logits, cache1 = self._prefill_fn(plen)(self.params, batch)
+            logits, cache1 = self._run_program(
+                "engine.prefill",
+                lambda: self._prefill_fn(plen)(self.params, batch),
+                retrace=lambda: self._prefill_cache.pop(plen, None),
+                request=req,
+            )
         # Scatter the single-sequence prefill cache into this slot.
         self.cache = jax.tree.map(
             lambda full, one: _scatter_slot(full, one, slot, self.max_batch),
@@ -208,8 +237,12 @@ class ServingEngine:
             if r is not None:
                 tokens[i, 0] = r.output[-1]
         with self.runtime.activate():  # trace-time selections hit OUR runtime
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.positions)
+            logits, self.cache = self._run_program(
+                "engine.decode",
+                lambda: self._decode(
+                    self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.positions)
+                ),
+                retrace=self._rejit_decode,
             )
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for i, r in enumerate(self.slots):
@@ -227,6 +260,90 @@ class ServingEngine:
                 r.state = "done"
                 self.slots[i] = None
         self.steps += 1
+
+    # -- failure containment (DESIGN.md §11) -----------------------------------
+    def _rejit_decode(self) -> None:
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+
+    def _run_program(self, site: str, fn, *, retrace, request: Request | None = None):
+        """Run one compiled program with per-request retry-on-kernel-fault.
+
+        The engine-level safety net above the ops-layer guard: an injected
+        fault at ``site`` (fired *before* execution, so donated buffers are
+        never half-consumed) or a real failure escaping the compiled program
+        gets one retry after ``retrace()`` drops the compiled artifact —
+        the re-trace re-runs kernel selection, picking up any quarantine the
+        ops guard installed meanwhile.  A second failure propagates: zero
+        silent drops, but also no infinite retry loop.
+        """
+        from repro.core.faults import GUARDED_EXCEPTIONS, incident
+
+        rt = self.runtime
+        plan = rt.fault_plan
+        try:
+            if plan is not None:
+                plan.raise_if(site)
+            return fn()
+        except GUARDED_EXCEPTIONS as e:
+            rt.record_incident(incident(
+                site, "engine", None, e, "retry", device=rt.active_device()))
+            if request is not None:
+                request.retries += 1
+            retrace()
+            return fn()
+
+    def _update_health(self) -> str:
+        """Advance the healthy/degraded state machine; record transitions.
+
+        Degraded while new incidents arrived since the last check or any
+        config sits in quarantine; healthy once a full check window passes
+        clean with an empty quarantine table.
+        """
+        rt = self.runtime
+        count = rt.incident_count()
+        fresh = count > self._incidents_seen
+        self._incidents_seen = count
+        state = "degraded" if (fresh or rt.quarantined()) else "healthy"
+        if state != self.health:
+            self.health = state
+            self.health_events.append((self.steps, state))
+        return state
+
+    def maybe_rollback(self) -> RetuneEvent | None:
+        """Auto-rollback watchdog for an installed-but-regressing policy.
+
+        If :data:`rollback_threshold` incidents accumulate after a hot-swap,
+        the most recent pre-swap deployment is reinstalled from the bounded
+        swap history (one rollback per swap: the counter re-arms only on the
+        next swap).  Compiled programs are invalidated the same way a swap
+        does; in-flight requests keep their slots.
+        """
+        from repro.core.faults import incident
+
+        rt = self.runtime
+        if self._incidents_at_swap is None or not self._swap_history:
+            return None
+        if rt.incident_count() - self._incidents_at_swap < self.rollback_threshold:
+            return None
+        prev = self._swap_history.pop()
+        if self.device is not None and rt.active_device() == self.device:
+            rt.install_for_device(self.device, prev)
+        else:
+            rt.install(prev)
+        self.deployment = prev
+        self._incidents_at_swap = None  # one rollback per swap
+        rt.record_incident(incident(
+            "engine.retune", "engine", None,
+            f"{self.rollback_threshold}+ incidents since hot-swap",
+            "rollback", device=rt.active_device()))
+        rt.clear_selection_log()
+        self._prefill_cache.clear()
+        self._rejit_decode()
+        ev = RetuneEvent(self.steps, 0.0, 0.0, True, True, 0,
+                         len(prev.configs) if hasattr(prev, "configs") else 0,
+                         rt.policy_epoch(), rolled_back=True)
+        self.retune_events.append(ev)
+        return ev
 
     # -- continuous tuning -----------------------------------------------------
     def maybe_retune(self, *, force: bool = False, online=None) -> RetuneEvent | None:
@@ -251,7 +368,12 @@ class ServingEngine:
         new policy.
         """
         from repro.core.dispatch import Deployment
-        from repro.core.retune import detect_drift_all, incremental_retune
+        from repro.core.faults import FaultError, incident
+        from repro.core.retune import (
+            canary_deployment,
+            detect_drift_all,
+            incremental_retune,
+        )
 
         rt = self.runtime
         dep = self.deployment
@@ -284,12 +406,49 @@ class ServingEngine:
                              worst.n_events, len(dep.configs), rt.policy_epoch())
             self.retune_events.append(ev)
             return ev
+        # Canary-gated adoption: each family's candidate must pass the
+        # holdout validation (selection quality + numeric agreement with
+        # ref) before it is allowed anywhere near install_for_device.  A
+        # rejected candidate leaves the incumbent family tuning in place.
         new_dep = dep
+        adopted: list[str] = []
+        rejected: list[str] = []
         for fam in to_retune:
-            new_dep = incremental_retune(
-                new_dep, snap, family=fam, report=reports[fam],
-                threshold=self.drift_threshold, min_events=self.retune_min_events,
-            ).deployment
+            try:
+                if rt.fault_plan is not None:
+                    rt.fault_plan.raise_if("retune.candidate", fam)
+                cand = incremental_retune(
+                    new_dep, snap, family=fam, report=reports[fam],
+                    threshold=self.drift_threshold, min_events=self.retune_min_events,
+                ).deployment
+            except (FaultError, ValueError) as e:
+                rejected.append(fam)
+                rt.record_incident(incident(
+                    "retune.candidate", fam, None, e, "candidate_failed",
+                    device=rt.active_device()))
+                continue
+            if self.canary:
+                verdict = canary_deployment(new_dep, cand, snap, family=fam, runtime=rt)
+                if not verdict.ok:
+                    rejected.append(fam)
+                    rt.record_incident(incident(
+                        f"canary.{fam}", fam, None, verdict.reason,
+                        "candidate_rejected", device=rt.active_device()))
+                    continue
+            new_dep = cand
+            adopted.append(fam)
+        if not adopted:
+            ev = RetuneEvent(self.steps, worst.score, worst.unseen_fraction,
+                             False, any(r.triggered for r in reports.values()),
+                             worst.n_events, len(dep.configs), rt.policy_epoch(),
+                             rejected=tuple(rejected))
+            self.retune_events.append(ev)
+            return ev
+        to_retune = adopted
+        # Keep the incumbent in the bounded swap history and re-arm the
+        # rollback watchdog: incidents from here on count against this swap.
+        self._swap_history.append(dep)
+        self._incidents_at_swap = rt.incident_count()
         if self.device is not None and rt.active_device() == self.device:
             rt.install_for_device(self.device, new_dep)  # registry hot-swap
         else:
@@ -310,7 +469,7 @@ class ServingEngine:
         ev = RetuneEvent(self.steps, worst_retuned.score, worst_retuned.unseen_fraction,
                          True, any(r.triggered for r in reports.values()),
                          worst_retuned.n_events, len(new_dep.configs), rt.policy_epoch(),
-                         tuple(to_retune))
+                         tuple(to_retune), rejected=tuple(rejected))
         self.retune_events.append(ev)
         return ev
 
@@ -333,6 +492,8 @@ class ServingEngine:
                 self._admit(queue.pop(0), slot)
             if any(s is not None for s in self.slots):
                 self._decode_all()
+            self._update_health()
+            self.maybe_rollback()
             if (
                 self.retune_interval is not None
                 and self.steps - self._last_retune_check >= self.retune_interval
@@ -342,12 +503,14 @@ class ServingEngine:
         exhausted = bool(queue or any(s is not None for s in self.slots))
         for r in queue:
             r.state = "starved"
+        self._update_health()
         return EngineStatus(
             completed=sum(r.done for r in requests),
             in_flight=sum(s is not None for s in self.slots),
             queued=len(queue),
             steps=self.steps,
             exhausted=exhausted,
+            health=self.health,
         )
 
 

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.data.pipeline import DataConfig, TokenPipeline
-from repro.ft.runtime import PreemptionGuard, StragglerDetector
+from repro.core.faults import PreemptionGuard, StragglerDetector
 from repro.optim import adamw
 from repro.train.train_step import make_train_step
 

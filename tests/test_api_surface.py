@@ -2,9 +2,11 @@
 update the frozen lists below (and the README migration map if a legacy name
 moves).
 
-The snapshot covers the three entry layers of the redesigned API:
-``repro`` (the facade), ``repro.core`` (the tuning pipeline), and
-``repro.kernels.ops`` (dispatch + the deprecated global shims).
+The snapshot covers the four entry layers of the redesigned API:
+``repro`` (the facade), ``repro.core`` (the tuning pipeline),
+``repro.kernels.ops`` (dispatch + the deprecated global shims), and
+``repro.core.faults`` (the failure-containment layer, which also absorbed
+the former ``repro.ft.runtime`` training-side fault-tolerance helpers).
 """
 import importlib
 
@@ -13,6 +15,7 @@ import pytest
 REPRO_ALL = [
     "Deployment",
     "DeploymentBundle",
+    "FaultPlan",
     "KernelRuntime",
     "Request",
     "ServingEngine",
@@ -34,6 +37,9 @@ CORE_ALL = [
     "Deployment",
     "DeploymentBundle",
     "FamilyTuning",
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
     "FlatTree",
     "FleetTuneResult",
     "KernelFamily",
@@ -102,11 +108,33 @@ OPS_ALL = [
     "set_shape_cache_cap",
 ]
 
+FAULTS_ALL = [
+    "FAULT_KINDS",
+    "ElasticPlan",
+    "FaultError",
+    "FaultEvent",
+    "FaultPlan",
+    "FaultSpec",
+    "GUARDED_EXCEPTIONS",
+    "InjectedCompileError",
+    "InjectedOOMError",
+    "NonFiniteOutputError",
+    "PreemptionGuard",
+    "StragglerDetector",
+    "elastic_plan",
+    "incident",
+]
+
 
 @pytest.mark.parametrize(
     "module,snapshot",
-    [("repro", REPRO_ALL), ("repro.core", CORE_ALL), ("repro.kernels.ops", OPS_ALL)],
-    ids=["repro", "repro.core", "repro.kernels.ops"],
+    [
+        ("repro", REPRO_ALL),
+        ("repro.core", CORE_ALL),
+        ("repro.kernels.ops", OPS_ALL),
+        ("repro.core.faults", FAULTS_ALL),
+    ],
+    ids=["repro", "repro.core", "repro.kernels.ops", "repro.core.faults"],
 )
 def test_public_surface_frozen(module, snapshot):
     mod = importlib.import_module(module)

@@ -1,10 +1,16 @@
 """Multi-device DeploymentBundle: detection, fallback, round-trip, install."""
 import json
+from pathlib import Path
 
 import numpy as np
 import pytest
 
-from repro.core.bundle import DeploymentBundle, install_bundle
+from repro.core.bundle import (
+    BundleFormatError,
+    BundleIntegrityError,
+    DeploymentBundle,
+    install_bundle,
+)
 from repro.core.codegen import bundle_to_python
 from repro.core.dataset import build_model_dataset, synthetic_problems
 from repro.core.devices import (
@@ -89,8 +95,9 @@ def test_bundle_roundtrip_two_devices(tmp_path, bundle2):
     path = tmp_path / "bundle.json"
     bundle2.save(path)
     blob = json.loads(path.read_text())
-    assert blob["version"] == 5 and blob["format"] == "bundle"
+    assert blob["version"] == 6 and blob["format"] == "bundle"
     assert blob["deployments"]["tpu_v5e"]["version"] == 5  # embeds v5 blobs
+    assert blob["checksums"]  # v6: per-section CRCs over every device blob
     back = DeploymentBundle.load(path)
     assert back.devices == ["tpu_v4", "tpu_v5e"]
     for name in back.devices:
@@ -246,6 +253,150 @@ def test_tune_fleet_two_devices(tmp_path):
     assert back.meta["archs"] == ["granite-8b"]
     dep, resolved = back.deployment_for("tpu_v5e")
     assert resolved == "tpu_v5e" and len(dep.configs) == 4
+
+
+# ---------------------------------------------------------------------------
+# structured load errors + v6 section checksums (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+DATA = Path(__file__).parent / "data"
+FIXTURES = [  # every committed artifact version, v1 through v5
+    "dep_v1.json", "dep_v2.json", "bundle_v3.json", "bundle_v4.json",
+    "bundle_v5.json",
+]
+
+
+@pytest.fixture(scope="module")
+def bundle_fam(bundle2) -> DeploymentBundle:
+    """bundle2 with a wkv family tuning attached, so v6 blobs carry a
+    per-family checksum section worth corrupting."""
+    from repro.core.cluster import select_configs
+    from repro.core.dispatch import build_labels
+    from repro.core.families import build_family_dataset, get_family
+    from repro.core.normalize import normalize
+
+    fam = get_family("wkv")
+    ds = build_family_dataset("wkv", device_name="tpu_v5e")
+    chosen = select_configs(normalize(ds.perf, "standard"), 3, "kmeans", seed=0)
+    tree = fam.make_tree()
+    tree.fit(fam.features(ds.problems), build_labels(ds.perf, chosen))
+    cfgs = list(fam.config_space())
+    dep = bundle2.deployments["tpu_v5e"].clone()
+    dep.set_family_tuning("wkv", [cfgs[i] for i in chosen], tree)
+    return DeploymentBundle(
+        {"tpu_v5e": dep, "tpu_v4": bundle2.deployments["tpu_v4"]}
+    )
+
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_committed_fixtures_load_clean(fixture):
+    b = DeploymentBundle.load(DATA / fixture)
+    assert b.devices and not b.load_errors
+
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_truncated_fixture_raises_structured_error(tmp_path, fixture):
+    """A blob cut off mid-write fails as BundleFormatError with the byte
+    offset where decoding stopped — never a bare JSONDecodeError."""
+    text = (DATA / fixture).read_text()
+    for frac in (0.3, 0.8):
+        p = tmp_path / f"t{int(frac * 100)}_{fixture}"
+        p.write_text(text[: int(len(text) * frac)])
+        with pytest.raises(BundleFormatError) as ei:
+            DeploymentBundle.load(p)
+        assert ei.value.offset is not None
+        assert isinstance(ei.value, ValueError)  # callers catching ValueError keep working
+
+
+def test_garbage_blob_raises_structured_error(tmp_path):
+    p = tmp_path / "garbage.json"
+    p.write_text("definitely not a bundle {{{")
+    with pytest.raises(BundleFormatError) as ei:
+        DeploymentBundle.load(p)
+    assert ei.value.offset == 0
+    # valid JSON of the wrong shape is a format error too, not a TypeError
+    p2 = tmp_path / "list.json"
+    p2.write_text("[1, 2, 3]")
+    with pytest.raises(BundleFormatError, match="JSON object"):
+        DeploymentBundle.load(p2)
+
+
+@pytest.mark.parametrize("fixture", ["bundle_v3.json", "bundle_v4.json",
+                                     "bundle_v5.json"])
+def test_mangled_bundle_sections_name_the_section(fixture):
+    blob = json.loads((DATA / fixture).read_text())
+    with pytest.raises(BundleFormatError) as ei:
+        DeploymentBundle.from_blob(dict(blob, version="vX"))
+    assert ei.value.section == "version"
+    with pytest.raises(BundleFormatError) as ei:
+        DeploymentBundle.from_blob(dict(blob, deployments=7))
+    assert ei.value.section == "deployments"
+    # a structurally gutted device blob names the device it belongs to
+    bad = json.loads((DATA / fixture).read_text())
+    name = sorted(bad["deployments"])[0]
+    bad["deployments"][name] = {"version": 5}
+    with pytest.raises(BundleFormatError) as ei:
+        DeploymentBundle.from_blob(bad)
+    assert ei.value.section == f"deployments.{name}"
+
+
+@pytest.mark.parametrize("fixture", ["dep_v1.json", "dep_v2.json"])
+def test_mangled_single_device_fixture(fixture):
+    blob = json.loads((DATA / fixture).read_text())
+    blob.pop("configs", None)
+    with pytest.raises(BundleFormatError) as ei:
+        DeploymentBundle.from_blob(blob)
+    assert ei.value.section == "deployment"
+
+
+def test_v6_corrupt_device_core_recovers_via_fallbacks(bundle2):
+    blob = bundle2.to_blob()
+    blob["deployments"]["tpu_v5e"]["classifier_name"] = "tampered"
+    back = DeploymentBundle.from_blob(blob)
+    assert back.devices == ["tpu_v4"]  # corrupt device dropped, not fatal
+    assert [e["section"] for e in back.load_errors] == ["deployments.tpu_v5e"]
+    # lookups for the dropped device recover through devices.FALLBACKS
+    dep, resolved = back.deployment_for("tpu_v5e")
+    assert resolved == "tpu_v4" and dep is back.deployments["tpu_v4"]
+
+
+def test_v6_corrupt_family_section_drops_family_only(bundle_fam):
+    clean = DeploymentBundle.from_blob(bundle_fam.to_blob())
+    assert not clean.load_errors and "wkv" in clean.deployments["tpu_v5e"].families
+    blob = bundle_fam.to_blob()
+    blob["deployments"]["tpu_v5e"]["families"]["wkv"]["configs"] = ["garbage"]
+    back = DeploymentBundle.from_blob(blob)
+    # the device survives minus the corrupt family (its op serves the ref path)
+    assert "tpu_v5e" in back.deployments
+    assert "wkv" not in back.deployments["tpu_v5e"].families
+    secs = [e["section"] for e in back.load_errors]
+    assert secs == ["deployments.tpu_v5e.families.wkv"]
+    assert back.deployments["tpu_v4"].configs == bundle_fam.deployments["tpu_v4"].configs
+
+
+def test_v6_missing_checksummed_family_is_recorded(bundle_fam):
+    blob = bundle_fam.to_blob()
+    del blob["deployments"]["tpu_v5e"]["families"]["wkv"]
+    back = DeploymentBundle.from_blob(blob)
+    assert any(e["section"].endswith("families.wkv") and "missing" in e["error"]
+               for e in back.load_errors)
+
+
+def test_v6_all_devices_corrupt_raises_integrity_error(bundle2):
+    blob = bundle2.to_blob()
+    for name in blob["deployments"]:
+        blob["deployments"][name]["device"] = "tampered"
+    with pytest.raises(BundleIntegrityError, match="no deployment"):
+        DeploymentBundle.from_blob(blob)
+
+
+def test_v6_provenance_mismatch_dropped_not_fatal(bundle2):
+    blob = bundle2.to_blob()
+    blob["provenance"] = {"tpu_v5e": {"seed": 1}}
+    blob["checksums"]["provenance"] = "00000000"
+    back = DeploymentBundle.from_blob(blob)
+    assert back.devices == ["tpu_v4", "tpu_v5e"]  # deployments unaffected
+    assert any(e["section"] == "provenance" for e in back.load_errors)
+    assert "seed" not in back.deployments["tpu_v5e"].meta
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,409 @@
+"""Fault containment (DESIGN.md §11): injection plan, guarded dispatch,
+quarantine circuit breaker, canary-gated hot-swap, auto-rollback, engine
+retry.  The chaos CI job runs the same machinery end to end against a real
+model (examples/chaos_demo.py); these tests pin each guarantee in isolation
+plus the acceptance scenario on the deterministic toy engine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import retune
+from repro.core.bundle import BundleError, DeploymentBundle
+from repro.core.dataset import build_model_dataset, synthetic_problems
+from repro.core.faults import (
+    FaultPlan,
+    InjectedOOMError,
+    incident,
+)
+from repro.core.families import get_family
+from repro.core.runtime import (
+    DEFAULT_INCIDENT_CAP,
+    QUARANTINE_BACKOFF,
+    KernelRuntime,
+    default_runtime,
+    reset_default_runtime,
+)
+from repro.core.tuner import tune
+from repro.kernels import ops
+from repro.kernels.matmul import config_space
+from repro.kernels.ops import FixedPolicy
+from repro.serve.engine import Request, ServingEngine
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    yield
+    reset_default_runtime()
+
+
+@pytest.fixture(scope="module")
+def tuned_dep():
+    ds = build_model_dataset(synthetic_problems(80), device_name="tpu_v5e")
+    return tune(ds, n_kernels=6).deployment
+
+
+def _guarded_rt(seed: int = 0):
+    """Runtime serving a non-default matmul config, with a fresh fault plan."""
+    fam_default = get_family("matmul").default_config
+    cfg = next(c for c in config_space() if c != fam_default)
+    rt = KernelRuntime(name="faults-test")
+    rt.install_for_device("tpu_v5e", FixedPolicy(matmul_config=cfg))
+    rt.activate_device("tpu_v5e")
+    plan = FaultPlan(seed=seed)
+    rt.set_fault_plan(plan)
+    return rt, plan, cfg
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic, seeded injection
+# ---------------------------------------------------------------------------
+def test_fault_plan_times_after_and_match():
+    plan = FaultPlan(seed=0)
+    spec = plan.inject("dispatch.matmul", "compile_error", times=2, after=1,
+                       match="mm_")
+    assert plan.fire("dispatch.matmul", "other") is None    # key match miss
+    assert plan.fire("dispatch.matmul", "mm_x") is None     # 'after' skip
+    assert plan.fire("dispatch.matmul", "mm_x") is spec
+    assert plan.fire("dispatch.attention", "mm_x") is None  # site miss
+    assert plan.fire("dispatch.matmul", "mm_x") is spec
+    assert plan.fire("dispatch.matmul", "mm_x") is None     # times exhausted
+    assert not plan.active
+    assert [(e.seq, e.kind) for e in plan.events] == [
+        (1, "compile_error"), (2, "compile_error")]
+
+
+def test_fault_plan_prefix_site_and_parse():
+    plan = FaultPlan.parse("dispatch.:latency:2, engine.prefill:oom", seed=3)
+    assert [s.site for s in plan.specs()] == ["dispatch.", "engine.prefill"]
+    assert plan.fire("dispatch.wkv").kind == "latency"      # prefix matches
+    assert plan.fire("dispatch.matmul").kind == "latency"
+    assert plan.fire("dispatch.matmul") is None
+    with pytest.raises(InjectedOOMError):
+        plan.raise_if("engine.prefill")
+    with pytest.raises(ValueError, match="bad fault spec"):
+        FaultPlan.parse("nonsense")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan(seed=0).inject("x", "segfault")
+
+
+def test_fault_plan_probability_is_seeded():
+    def firings(seed: int) -> list[bool]:
+        plan = FaultPlan(seed=seed)
+        plan.inject("s", "latency", times=None, p=0.5)
+        return [plan.fire("s") is not None for _ in range(32)]
+
+    assert firings(7) == firings(7)          # same seed, same schedule
+    assert firings(7) != firings(8)
+    assert 0 < sum(firings(7)) < 32          # genuinely probabilistic
+
+
+def test_corrupt_text_is_spent_after_times():
+    plan = FaultPlan(seed=1)
+    plan.inject("bundle.load", "corrupt", value=8)
+    out = plan.corrupt_text("bundle.load", "x" * 100)
+    assert len(out) == 100 and out.count("#") >= 1
+    assert plan.corrupt_text("bundle.load", "y" * 50) == "y" * 50  # spent
+
+
+def test_incident_record_shape():
+    rec = incident("dispatch.matmul", "matmul", None, RuntimeError("boom"),
+                   "fallback_ref", device="tpu_v5e", seq=3)
+    assert rec == {
+        "seq": 3, "site": "dispatch.matmul", "family": "matmul",
+        "config": None, "device": "tpu_v5e",
+        "error": "RuntimeError: boom", "action": "fallback_ref",
+    }
+
+
+def test_incident_ring_buffer_caps_but_count_is_monotone():
+    rt = KernelRuntime(name="cap")
+    for _ in range(DEFAULT_INCIDENT_CAP + 44):
+        rt.record_incident(incident("s", "f", None, "e", "a"))
+    assert rt.incident_count() == DEFAULT_INCIDENT_CAP + 44
+    assert len(rt.incidents()) == DEFAULT_INCIDENT_CAP
+    assert rt.incidents()[-1]["seq"] == DEFAULT_INCIDENT_CAP + 44
+
+
+# ---------------------------------------------------------------------------
+# guarded dispatch: fallback, quarantine, re-probe, absolve
+# ---------------------------------------------------------------------------
+def test_injected_compile_error_serves_ref_and_quarantines():
+    rt, plan, cfg = _guarded_rt()
+    plan.inject("dispatch.matmul", "compile_error", times=1)
+    with rt.activate():
+        out = ops.matmul(jnp.ones((8, 16)), jnp.ones((16, 8)))
+    # the caller never sees the fault: the reference path served the answer
+    np.testing.assert_allclose(np.asarray(out), 16.0)
+    (inc,) = [i for i in rt.incidents() if i["action"] == "quarantined"]
+    assert inc["family"] == "matmul" and inc["config"] == cfg.name()
+    assert "InjectedCompileError" in inc["error"]
+    (q,) = rt.quarantined()
+    assert q["name"] == cfg.name() and q["state"] == "open"
+
+
+def test_nan_injection_is_contained_not_served():
+    rt, plan, cfg = _guarded_rt()
+    plan.inject("dispatch.matmul", "nan", times=1)
+    with rt.activate():
+        out = ops.matmul(jnp.ones((8, 16)), jnp.ones((16, 8)))
+    assert bool(jnp.isfinite(out).all())  # poisoned output never reached the caller
+    assert any("NonFiniteOutputError" in i["error"] for i in rt.incidents())
+    assert rt.quarantined()
+
+
+def test_nan_injection_never_poisons_a_jit_trace():
+    # A nan spec firing while the op is being jit-traced must pass the
+    # tracer through untouched: poisoning it would bake NaN into the
+    # compiled program — uncontainable by the guard, which cannot inspect
+    # values inside a trace (DESIGN.md §11).
+    rt, plan, cfg = _guarded_rt()
+    plan.inject("dispatch.matmul", "nan", times=1)
+    x, y = jnp.ones((8, 16)), jnp.ones((16, 8))
+    with rt.activate():
+        out = jax.jit(lambda a, b: ops.matmul(a, b))(x, y)
+        np.testing.assert_allclose(np.asarray(out), 16.0)
+        # the spec fired (and was consumed) but corrupted nothing
+        assert [e.kind for e in plan.events] == ["nan"]
+        out2 = jax.jit(lambda a, b: ops.matmul(a, b))(x, y)
+        np.testing.assert_allclose(np.asarray(out2), 16.0)
+    assert not rt.quarantined()
+
+
+def test_quarantine_reprobe_absolve_cycle():
+    rt, plan, cfg = _guarded_rt()
+    fam_default = get_family("matmul").default_config
+    plan.inject("dispatch.matmul", "oom", times=1, match=cfg.name())
+    x, y = jnp.ones((8, 16)), jnp.ones((16, 8))
+    with rt.activate():
+        ops.matmul(x, y)  # faults -> quarantined, ref served
+        assert rt.quarantined()
+        # while open, selections redirect to the family default...
+        assert ops.select_matmul_config(8, 16, 8, 1) == fam_default
+        # ...and after the backoff window a half-open probe re-runs cfg,
+        # which now succeeds and closes the breaker.
+        for _ in range(QUARANTINE_BACKOFF + 2):
+            out = ops.matmul(x, y)
+            assert bool(jnp.isfinite(out).all())
+    assert not rt.quarantined()
+    actions = [i["action"] for i in rt.incidents()]
+    assert actions.count("quarantined") == 1 and actions.count("absolved") == 1
+
+
+def test_quarantine_bumps_epoch_to_invalidate_shape_caches():
+    rt, plan, cfg = _guarded_rt()
+    with rt.activate():
+        assert ops.select_matmul_config(256, 256, 256, 1) == cfg  # warm the cache
+        e0 = rt.policy_epoch()
+        rt.quarantine_config("matmul", cfg, RuntimeError("bad"))
+        assert rt.policy_epoch() > e0
+        # the warm entry cannot answer with the quarantined config
+        assert ops.select_matmul_config(256, 256, 256, 1) != cfg
+        e1 = rt.policy_epoch()
+        rt.absolve("matmul", cfg)
+        assert rt.policy_epoch() > e1
+        assert ops.select_matmul_config(256, 256, 256, 1) == cfg
+
+
+def test_latency_spike_records_incident_without_quarantine():
+    rt, plan, cfg = _guarded_rt()
+    plan.inject("dispatch.matmul", "latency", times=1, value=0.0)
+    with rt.activate():
+        out = ops.matmul(jnp.ones((4, 16)), jnp.ones((16, 4)))
+    np.testing.assert_allclose(np.asarray(out), 16.0)
+    assert any(i["action"] == "latency_spike" for i in rt.incidents())
+    assert not rt.quarantined()  # slow is suspicious, not broken
+
+
+def test_output_validation_opt_in_catches_real_non_finite():
+    rt, _, cfg = _guarded_rt()
+    rt.set_fault_plan(None)
+    assert not rt.output_validation_enabled()
+    rt.set_output_validation(True)
+    assert rt.output_validation_enabled()
+    bad = jnp.full((8, 16), jnp.nan)
+    with rt.activate():
+        ops.matmul(bad, jnp.ones((16, 8)))  # NaN in -> NaN out, flagged
+    assert any("NonFiniteOutputError" in i["error"] for i in rt.incidents())
+    assert rt.quarantined()
+
+
+# ---------------------------------------------------------------------------
+# canary-gated hot-swap
+# ---------------------------------------------------------------------------
+def _snap_of(problems) -> retune.TelemetrySnapshot:
+    snap = retune.TelemetrySnapshot()
+    for p in problems:
+        b = retune.shape_bucket(p)
+        snap.matmul_counts[b] = snap.matmul_counts.get(b, 0) + 1
+        snap.problems[b] = tuple(p)
+        snap.n_events += 1
+    return snap
+
+
+def test_canary_passes_trivially_without_traffic(tuned_dep):
+    rep = retune.canary_deployment(tuned_dep, tuned_dep, retune.TelemetrySnapshot())
+    assert rep.ok and rep.reason == "no holdout traffic"
+
+
+def test_canary_same_deployment_passes_with_traffic(tuned_dep):
+    snap = _snap_of([(64, 256, 512, 1), (1, 4096, 1024, 1)])
+    rep = retune.canary_deployment(tuned_dep, tuned_dep, snap)
+    assert rep.ok and rep.selection_ok and rep.numeric_ok
+
+
+def test_canary_fault_site_rejects_candidate(tuned_dep):
+    snap = _snap_of([(64, 256, 512, 1)])
+    rt = KernelRuntime(name="canary")
+    plan = FaultPlan(seed=0)
+    plan.inject("canary.matmul", "compile_error", times=1)
+    rt.set_fault_plan(plan)
+    rep = retune.canary_deployment(tuned_dep, tuned_dep, snap, runtime=rt)
+    assert not rep.ok and not rep.numeric_ok and rep.selection_ok
+
+
+def _drifted_engine(tuned_dep, plan=None, **kw):
+    """Engine over a runtime carrying drifted matmul telemetry."""
+    import sys
+
+    sys.path.insert(0, str(__import__("pathlib").Path(__file__).parent))
+    from test_serve_engine import ToyModel
+
+    rt = KernelRuntime(name="retune-chaos")
+    rt.install(tuned_dep)
+    if plan is not None:
+        rt.set_fault_plan(plan)
+    rt.set_selection_logging(True)
+    rng = np.random.default_rng(0)
+    with rt.activate():
+        for _ in range(60):  # decode-heavy deep-k mix the tuning never saw
+            ops.select_matmul_config(int(rng.choice([1, 2, 4])),
+                                     int(rng.choice([8192, 16384])),
+                                     int(rng.choice([1024, 2048])), 1)
+    eng = ServingEngine(ToyModel(), params={}, max_batch=1, cache_len=32,
+                        prefill_buckets=(8,), runtime=rt,
+                        retune_min_events=8, drift_threshold=0.15, **kw)
+    return eng, rt
+
+
+def test_retune_candidate_fault_is_rejected(tuned_dep):
+    plan = FaultPlan(seed=0)
+    plan.inject("retune.candidate", "compile_error", times=None)
+    eng, rt = _drifted_engine(tuned_dep, plan)
+    ev = eng.maybe_retune(force=True)
+    assert ev is not None and not ev.swapped and "matmul" in ev.rejected
+    assert any(i["action"] == "candidate_failed" for i in rt.incidents())
+    assert rt.policy() is tuned_dep  # incumbent untouched
+
+
+def test_canary_rejects_numerically_poisoned_candidate(tuned_dep):
+    plan = FaultPlan(seed=0)
+    plan.inject("canary.matmul", "nan", times=None)
+    eng, rt = _drifted_engine(tuned_dep, plan)
+    ev = eng.maybe_retune(force=True)
+    assert ev is not None and not ev.swapped and "matmul" in ev.rejected
+    assert any(i["action"] == "candidate_rejected" for i in rt.incidents())
+    assert rt.policy() is tuned_dep
+
+
+def test_clean_candidate_swaps_and_arms_rollback_watchdog(tuned_dep):
+    eng, rt = _drifted_engine(tuned_dep)
+    ev = eng.maybe_retune(force=True)
+    assert ev is not None and ev.swapped and not ev.rejected
+    assert rt.policy() is not tuned_dep
+    assert eng._swap_history and eng._incidents_at_swap is not None
+
+
+# ---------------------------------------------------------------------------
+# engine: retry, health state machine, auto-rollback
+# ---------------------------------------------------------------------------
+def test_engine_retries_survive_faults_with_zero_drops():
+    import sys
+
+    sys.path.insert(0, str(__import__("pathlib").Path(__file__).parent))
+    from test_serve_engine import ToyModel
+
+    rt = KernelRuntime(name="eng-chaos")
+    plan = FaultPlan(seed=0)
+    plan.inject("engine.prefill", "compile_error", times=1)
+    plan.inject("engine.decode", "oom", times=1)
+    rt.set_fault_plan(plan)
+    eng = ServingEngine(ToyModel(), params={}, max_batch=1, cache_len=32,
+                        prefill_buckets=(8,), runtime=rt)
+    reqs = [Request(uid=i, prompt=np.array([1, 2, 3], dtype=np.int32),
+                    max_new_tokens=4) for i in range(3)]
+    status = eng.run(reqs)
+    assert status.completed == 3 and not status.exhausted  # zero drops
+    assert all(r.done and r.state == "done" for r in reqs)
+    assert sum(r.retries for r in reqs) >= 1  # a prefill retry was attributed
+    actions = [i["action"] for i in rt.incidents()]
+    assert actions.count("retry") == 2
+    # health dipped to degraded while incidents were fresh, recovered clean
+    states = [s for _, s in eng.health_events]
+    assert states[0] == "degraded" and states[-1] == "healthy"
+    assert status.health == "healthy"
+
+
+def test_regressing_hot_swap_rolls_back_mid_run(tuned_dep):
+    """The acceptance scenario: a swap happens, the new policy 'regresses'
+    (incidents accumulate), the watchdog reinstalls the incumbent from swap
+    history mid-run, and every request still completes."""
+    eng, rt = _drifted_engine(tuned_dep, rollback_threshold=2)
+    ev = eng.maybe_retune(force=True)
+    assert ev is not None and ev.swapped
+    swapped = rt.policy()
+    assert swapped is not tuned_dep
+    # the swapped-in policy starts faulting
+    plan = FaultPlan(seed=0)
+    plan.inject("engine.decode", "oom", times=2)
+    rt.set_fault_plan(plan)
+    reqs = [Request(uid=i, prompt=np.array([1, 2, 3], dtype=np.int32),
+                    max_new_tokens=6) for i in range(2)]
+    status = eng.run(reqs)
+    assert status.completed == 2 and not status.exhausted  # zero drops
+    rb = [e for e in eng.retune_events if e.rolled_back]
+    assert len(rb) == 1 and rb[0].swapped
+    assert rt.policy() is tuned_dep and eng.deployment is tuned_dep
+    assert any(i["action"] == "rollback" for i in rt.incidents())
+    assert eng.maybe_rollback() is None  # one rollback per swap
+    states = [s for _, s in eng.health_events]
+    assert "degraded" in states and eng.health == "healthy"
+    assert status.health == "healthy"
+
+
+def test_rollback_watchdog_requires_threshold():
+    import sys
+
+    sys.path.insert(0, str(__import__("pathlib").Path(__file__).parent))
+    from test_serve_engine import ToyModel
+
+    rt = KernelRuntime(name="watchdog")
+    eng = ServingEngine(ToyModel(), params={}, max_batch=1, cache_len=32,
+                        prefill_buckets=(8,), runtime=rt, rollback_threshold=3)
+    prev = FixedPolicy()
+    rt.install(FixedPolicy())
+    eng._swap_history.append(prev)
+    eng._incidents_at_swap = rt.incident_count()
+    rt.record_incident(incident("s", "f", None, "e", "a"))
+    assert eng.maybe_rollback() is None  # 1 < 3: stays put
+    rt.record_incident(incident("s", "f", None, "e", "a"))
+    rt.record_incident(incident("s", "f", None, "e", "a"))
+    ev = eng.maybe_rollback()
+    assert ev is not None and ev.rolled_back and rt.policy() is prev
+
+
+# ---------------------------------------------------------------------------
+# bundle.load chaos site
+# ---------------------------------------------------------------------------
+def test_bundle_load_corruption_surfaces_structured_error(tmp_path, tuned_dep):
+    path = tmp_path / "b.json"
+    DeploymentBundle({"tpu_v5e": tuned_dep}).save(path)
+    plan = FaultPlan(seed=2)
+    plan.inject("bundle.load", "corrupt", times=1, value=64)
+    default_runtime().set_fault_plan(plan)
+    with pytest.raises(BundleError):  # bit rot never escapes unstructured
+        DeploymentBundle.load(path)
+    # the spec is spent: the very next load of the same artifact is clean
+    back = DeploymentBundle.load(path)
+    assert back.devices == ["tpu_v5e"] and not back.load_errors

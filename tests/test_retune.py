@@ -198,7 +198,7 @@ def test_bundle_v4_provenance_roundtrip(tmp_path, tuned):
     path = tmp_path / "b.json"
     bundle.save(path)
     blob = json.loads(path.read_text())
-    assert blob["version"] == 5
+    assert blob["version"] == 6
     assert "train_distribution" in blob["provenance"]["tpu_v5e"]
     back = DeploymentBundle.load(path)
     got = back.deployments["tpu_v5e"].meta["train_distribution"]
@@ -210,6 +210,7 @@ def test_bundle_v3_blob_without_provenance_still_loads(tmp_path, tuned):
     blob = DeploymentBundle({"tpu_v5e": res.deployment}).to_blob()
     blob["version"] = 3
     del blob["provenance"]
+    del blob["checksums"]  # a genuine v3 artifact carries no checksum block
     # strip meta provenance to simulate a genuinely old artifact
     blob["deployments"]["tpu_v5e"]["meta"] = {}
     back = DeploymentBundle.from_blob(blob)
@@ -328,6 +329,56 @@ def test_concurrent_dispatch_never_sees_stale_policy_cache():
             assert cfg_a not in mine[mine.index(cfg_b):], f"worker {wid} saw stale cache"
         # eventual consistency: the selection made after the swap+stop is new
         assert mine[-1] == cfg_b, f"worker {wid} never adopted the swapped policy"
+
+
+def test_quarantined_config_never_served_from_stale_cache():
+    """Two threads dispatching the same family while its config is
+    quarantined: the breaker sits after the per-thread shape cache, so a
+    warm cache entry from before the quarantine can never serve the
+    quarantined config — every selection is redirected to the family
+    default until the breaker re-probes."""
+    from repro.core.families import get_family
+
+    fam_default = get_family("matmul").default_config
+    cfg_q = next(c for c in config_space() if c != fam_default)
+    rt().install_for_device("tpu_v5e", FixedPolicy(matmul_config=cfg_q))
+    rt().activate_device("tpu_v5e")
+
+    warmed = threading.Barrier(3)
+    quarantined = threading.Event()
+    picks: dict[int, list] = {}
+    errors: list = []
+
+    def worker(wid: int):
+        mine = picks[wid] = []
+        try:
+            # populate this thread's shape cache with the soon-bad config
+            assert ops.select_matmul_config(256, 256, 256, 1) == cfg_q
+            warmed.wait(timeout=10)
+            quarantined.wait(timeout=10)
+            for _ in range(20):
+                mine.append(ops.select_matmul_config(256, 256, 256, 1))
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    warmed.wait(timeout=10)
+    # repeated re-opens double the re-probe backoff past this test's window,
+    # so no half-open probe can legitimately serve cfg_q below
+    for _ in range(6):
+        rt().quarantine_config("matmul", cfg_q, RuntimeError("injected fault"))
+    quarantined.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not errors
+    for wid, mine in picks.items():
+        assert len(mine) == 20
+        assert cfg_q not in mine, f"worker {wid} served a quarantined config"
+        assert set(mine) == {fam_default}
+    (entry,) = rt().quarantined()
+    assert entry["state"] == "open" and entry["skipped"] >= 40
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,7 @@ from _hypothesis_compat import given, settings, st
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs import registry
 from repro.data.pipeline import DataConfig, TokenPipeline, reshard
-from repro.ft.runtime import PreemptionGuard, StragglerDetector, elastic_plan
+from repro.core.faults import PreemptionGuard, StragglerDetector, elastic_plan
 from repro.models.model import build_model
 from repro.serve.engine import Request, ServingEngine
 

@@ -45,7 +45,7 @@ def test_resume_exactness(tmp_path):
 def test_preemption_checkpoints(tmp_path):
     t = _mk(tmp_path, total=50, ckpt_every=100)
     # trigger preemption after the first step via the straggler hook window
-    from repro.ft.runtime import PreemptionGuard
+    from repro.core.faults import PreemptionGuard
 
     orig_enter = PreemptionGuard.__enter__
 
