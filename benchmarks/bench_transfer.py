@@ -1,0 +1,138 @@
+"""Tune-time vs quality frontier for the staged pipeline (DESIGN.md §12).
+
+For each family, compare the artifact a *full harvest* produces against the
+staged alternatives — model-guided pruning plus a measurement budget, and
+(for matmul) a true cross-device transfer warm-start: tune tpu_v5e from
+scratch, then bring up tpu_v4 measuring only where the roofline model and
+the v5e donor disagree.  Every artifact is scored on the same full textured
+benchmark table (the "ground truth" the full harvest saw), so the frontier
+is honest: quality_ratio = staged selection quality / full-tune selection
+quality, measured_fraction = measured cells / full-harvest cells.
+
+Gated rows (benchmarks/perf_gate.py holds hard bounds on both, beyond the
+usual baseline tolerance — the bring-up-new-hardware-cheaply contract):
+
+  * ``transfer_<family>_quality_ratio``      >= 0.95 (higher is better);
+  * ``transfer_<family>_measured_fraction``  <= 0.40 (lower is better).
+
+All numbers come from the analytic perf models, so they are fully
+deterministic and CI-gateable.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only transfer
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dataset import harvest_problems, problem_features
+from repro.core.families import get_family
+from repro.core.selection import geomean_fraction
+from repro.core.tuner import tune_family, tune_for_archs
+
+from .common import save_json
+
+DONOR_DEVICE = "tpu_v5e"
+TARGET_DEVICE = "tpu_v4"
+PRUNE_RATIO = 0.5
+MEASURE_BUDGET = 0.4
+
+
+def _matmul_quality(deployment, problems, perf, space) -> float:
+    """Geomean fraction-of-optimal of the artifact's picks on the full table."""
+    feats = problem_features(problems)
+    pred = np.clip(deployment.classifier.predict(feats), 0, len(deployment.configs) - 1)
+    cols = [space.index(c) for c in deployment.configs]
+    picked = perf[np.arange(len(problems)), [cols[i] for i in pred]]
+    return geomean_fraction(picked, perf.max(axis=1))
+
+
+def bench_matmul_transfer(quick: bool = False) -> dict:
+    """Full v4 harvest vs v5e-transfer-warm-started v4 bring-up."""
+    max_problems = 60 if quick else 160
+    donor = tune_for_archs(
+        None, device_name=DONOR_DEVICE, max_problems=max_problems, families=[]
+    )
+    full = tune_for_archs(
+        None, device_name=TARGET_DEVICE, max_problems=max_problems, families=[]
+    )
+    staged = tune_for_archs(
+        None, device_name=TARGET_DEVICE, max_problems=max_problems, families=[],
+        transfer_from=donor, prune_ratio=PRUNE_RATIO, measure_budget=MEASURE_BUDGET,
+    )
+    fam = get_family("matmul")
+    space = list(fam.config_space())
+    problems = harvest_problems(None, max_problems=max_problems)
+    perf = np.asarray(fam.perf_matrix(problems, space, TARGET_DEVICE))
+    q_full = _matmul_quality(full.deployment, problems, perf, space)
+    q_staged = _matmul_quality(staged.deployment, problems, perf, space)
+    lin = staged.deployment.meta["tuning_lineage"]["matmul"]
+    return {
+        "family": "matmul",
+        "donor_device": lin["source_device"],
+        "quality_full": q_full,
+        "quality_staged": q_staged,
+        "quality_ratio": q_staged / q_full,
+        "measured_fraction": lin["measured_fraction"],
+        "prune_ratio": lin["prune_ratio"],
+        "model_error": lin["model_error"],
+        "n_problems": len(problems),
+    }
+
+
+def bench_family_transfer(name: str, quick: bool = False) -> dict:
+    """Full harvest vs pruned+budgeted self-transfer for one registered family."""
+    fam = get_family(name)
+    full = tune_family(name)
+    staged = tune_family(
+        name, transfer_from=full, prune_ratio=PRUNE_RATIO, measure_budget=MEASURE_BUDGET
+    )
+    space = list(fam.config_space())
+    problems = fam.harvest(None)
+    if quick:
+        problems = problems[:: max(1, len(problems) // 8)]
+    perf = np.asarray(fam.perf_matrix(problems, space, DONOR_DEVICE))
+    feats = fam.features(problems)
+
+    def quality(res) -> float:
+        pred = np.clip(res.tree.predict(feats), 0, len(res.configs) - 1)
+        cols = [space.index(c) for c in res.configs]
+        picked = perf[np.arange(len(problems)), [cols[i] for i in pred]]
+        return geomean_fraction(picked, perf.max(axis=1))
+
+    q_full, q_staged = quality(full), quality(staged)
+    return {
+        "family": name,
+        "quality_full": q_full,
+        "quality_staged": q_staged,
+        "quality_ratio": q_staged / q_full,
+        "measured_fraction": staged.lineage["measured_fraction"],
+        "prune_ratio": staged.lineage["prune_ratio"],
+        "model_error": staged.lineage["model_error"],
+        "n_problems": len(problems),
+    }
+
+
+def main(quick: bool = False) -> list[tuple[str, float, str]]:
+    results = [bench_matmul_transfer(quick=quick)]
+    for name in ("wkv", "ssm_scan"):
+        results.append(bench_family_transfer(name, quick=quick))
+    rows: list[tuple[str, float, str]] = []
+    for r in results:
+        derived = (
+            f"staged {r['quality_staged'] * 100:.1f}% vs full "
+            f"{r['quality_full'] * 100:.1f}% of oracle over {r['n_problems']} problems"
+        )
+        rows.append((f"transfer_{r['family']}_quality_ratio",
+                     round(r["quality_ratio"], 4), derived))
+        rows.append((f"transfer_{r['family']}_measured_fraction",
+                     round(r["measured_fraction"], 4),
+                     f"kept {r['prune_ratio']:.0%} of config space; "
+                     f"model error {r['model_error']:.1%}" if r["model_error"] is not None
+                     else f"kept {r['prune_ratio']:.0%} of config space"))
+    save_json("bench_transfer.json", {"results": results, "quick": quick})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

@@ -51,6 +51,21 @@ FIG7_SUFFIX = "_tuned8_ms"
 # dispatch ratios from the family's analytic model: higher is better.
 FAMILIES_PREFIX = "families_"
 FAMILIES_SUFFIX = "_speedup"
+# bench_transfer rows: the staged-pipeline bring-up contract (DESIGN.md §12).
+# transfer_<family>_quality_ratio is staged/full selection quality (higher is
+# better); transfer_<family>_measured_fraction is measured cells over the
+# full-harvest cell count (lower is better).
+TRANSFER_PREFIX = "transfer_"
+TRANSFER_QUALITY_SUFFIX = "_quality_ratio"
+TRANSFER_COST_SUFFIX = "_measured_fraction"
+
+# Hard absolute bounds, independent of the committed baseline: a transfer
+# tune must reach >=95% of full-tune selection quality at <=40% of the
+# measurements, or bringing up new hardware cheaply is no longer true.
+HARD_BOUNDS = {
+    TRANSFER_QUALITY_SUFFIX: ("min", 0.95),
+    TRANSFER_COST_SUFFIX: ("max", 0.40),
+}
 
 # recorded in the artifact for trend-watching, never gated (machine-dependent)
 UNGATED_RECORD = ("dispatch_cold_per_s", "dispatch_cached_per_s",
@@ -77,7 +92,25 @@ def collect_metrics(selection: dict | None, fig7: dict | None) -> tuple[dict, di
                 gated[name] = (float(value), "lower")
             elif name.startswith(FAMILIES_PREFIX) and name.endswith(FAMILIES_SUFFIX):
                 gated[name] = (float(value), "higher")
+            elif name.startswith(TRANSFER_PREFIX) and name.endswith(TRANSFER_QUALITY_SUFFIX):
+                gated[name] = (float(value), "higher")
+            elif name.startswith(TRANSFER_PREFIX) and name.endswith(TRANSFER_COST_SUFFIX):
+                gated[name] = (float(value), "lower")
     return gated, recorded
+
+
+def check_hard_bounds(gated: dict) -> list[str]:
+    """Absolute-bound violations (baseline-independent design contracts)."""
+    violations: list[str] = []
+    for name, (value, _direction) in sorted(gated.items()):
+        for suffix, (kind, bound) in HARD_BOUNDS.items():
+            if not name.endswith(suffix):
+                continue
+            if kind == "min" and value < bound:
+                violations.append(f"{name}: {value:.4g} below hard minimum {bound:.4g}")
+            elif kind == "max" and value > bound:
+                violations.append(f"{name}: {value:.4g} above hard maximum {bound:.4g}")
+    return violations
 
 
 def gate(gated: dict, baseline: dict, tolerance: float) -> tuple[dict, list[str]]:
@@ -138,8 +171,16 @@ def main(argv=None) -> int:
     if not gated:
         print("perf-gate: no gated metrics found in inputs", file=sys.stderr)
         return 1
+    hard_violations = check_hard_bounds(gated)
 
     if args.update_baseline:
+        if hard_violations:
+            # A broken design contract must never be committed as the new normal.
+            print("perf-gate: refusing to update baseline, hard bounds violated:",
+                  file=sys.stderr)
+            for v in hard_violations:
+                print(f"  {v}", file=sys.stderr)
+            return 1
         Path(args.baseline).write_text(
             json.dumps({name: value for name, (value, _d) in sorted(gated.items())}, indent=1)
         )
@@ -148,6 +189,7 @@ def main(argv=None) -> int:
 
     baseline = json.loads(Path(args.baseline).read_text()) if Path(args.baseline).exists() else {}
     verdicts, regressions = gate(gated, baseline, args.tolerance)
+    regressions.extend(hard_violations)
     artifact = {
         "tolerance": args.tolerance,
         "metrics": verdicts,

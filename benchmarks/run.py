@@ -16,6 +16,7 @@ import time
 
 from . import (
     bench_families,
+    bench_transfer,
     fig2_best_counts,
     fig3_pca_variance,
     fig4_normalization,
@@ -36,6 +37,7 @@ MODULES = {
     "fig7": fig7_end_to_end,
     "fig8": fig8_attention_family,  # beyond-paper: attention kernel family
     "families": bench_families,  # beyond-paper: wkv/ssm via the family registry
+    "transfer": bench_transfer,  # staged pipeline: tune-time-vs-quality frontier
 }
 
 

@@ -22,6 +22,12 @@ from .families import (
 )
 from .normalize import NORMALIZATIONS, normalize
 from .pca import PCA
+from .pipeline import (
+    FamilyPipelineResult,
+    TransferPrior,
+    run_family_pipeline,
+    tune_dataset,
+)
 from .retune import TelemetrySnapshot
 from .runtime import KernelRuntime, current_runtime, default_runtime, reset_default_runtime
 from .selection import achievable_fraction, evaluate_methods, select_from_dataset
@@ -34,6 +40,7 @@ __all__ = [
     "PCA",
     "Deployment",
     "DeploymentBundle",
+    "FamilyPipelineResult",
     "FamilyTuning",
     "FaultError",
     "FaultPlan",
@@ -43,6 +50,7 @@ __all__ = [
     "KernelFamily",
     "KernelRuntime",
     "TelemetrySnapshot",
+    "TransferPrior",
     "TuneResult",
     "TuningDataset",
     "achievable_fraction",
@@ -65,12 +73,14 @@ __all__ = [
     "register_family",
     "reset_default_runtime",
     "resolve_device",
+    "run_family_pipeline",
     "save_fleet",
     "select_configs",
     "select_from_dataset",
     "synthetic_problems",
     "train_deployment",
     "tune",
+    "tune_dataset",
     "tune_family",
     "tune_fleet",
     "tune_for_archs",

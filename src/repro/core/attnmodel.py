@@ -42,6 +42,7 @@ def predict_attn_time(
     *,
     causal: bool = True,
     dtype_bytes: int = 2,
+    texture: bool = True,
 ) -> float:
     sq, skv, d = problem
     if _vmem_bytes(cfg, d, dtype_bytes) > device.vmem_bytes:
@@ -65,6 +66,8 @@ def predict_attn_time(
     traffic = (2.0 * sq * d + 2.0 * n_q * skv * d) * dtype_bytes
     t_mem = traffic / device.hbm_bw
     t = max(t_compute, t_mem) + live_tiles * device.grid_step_overhead + device.launch_overhead
+    if not texture:  # smooth roofline: the model-side view (see perfmodel)
+        return t
     return t / _texture(device, cfg, problem)
 
 
@@ -108,13 +111,14 @@ def harvest_attn_problems(arch_ids: list[str] | None = None) -> list[AttnProblem
 
 
 def build_attn_matrix(
-    problems: list[AttnProblem], configs=None, device: DeviceModel = TPU_V5E
+    problems: list[AttnProblem], configs=None, device: DeviceModel = TPU_V5E,
+    *, texture: bool = True,
 ) -> np.ndarray:
     configs = list(configs or attention_config_space())
     perf = np.zeros((len(problems), len(configs)))
     for i, p in enumerate(problems):
         for j, c in enumerate(configs):
-            perf[i, j] = predict_attn_gflops(p, c, device)
+            perf[i, j] = predict_attn_gflops(p, c, device, texture=texture)
     return perf
 
 

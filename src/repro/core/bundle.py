@@ -64,6 +64,7 @@ BUNDLE_VERSION = 6
 # Deployment.meta keys that form the v4+ top-level provenance block.
 _PROVENANCE_KEYS = (
     "train_distribution", "family_distributions", "retune_count", "retune", "retune_log",
+    "tuning_lineage",
 )
 
 

@@ -532,21 +532,28 @@ class MLPClassifier:
 # registry (paper Tables 1-2 rows)
 # ---------------------------------------------------------------------------
 CLASSIFIERS: dict[str, callable] = {
-    "DecisionTreeA": lambda: DecisionTreeClassifier(max_depth=None, min_samples_leaf=1),
-    "DecisionTreeB": lambda: DecisionTreeClassifier(max_depth=6, min_samples_leaf=3),
-    "DecisionTreeC": lambda: DecisionTreeClassifier(max_depth=3, min_samples_leaf=4),
-    "1NearestNeighbor": lambda: KNeighborsClassifier(k=1),
-    "3NearestNeighbor": lambda: KNeighborsClassifier(k=3),
-    "7NearestNeighbor": lambda: KNeighborsClassifier(k=7),
-    "LinearSVM": lambda: LinearSVM(),
-    "RadialSVM": lambda: RadialSVM(),
-    "RandomForest": lambda: RandomForestClassifier(n_trees=30),
-    "MLP": lambda: MLPClassifier(),
+    "DecisionTreeA": lambda seed=0: DecisionTreeClassifier(max_depth=None, min_samples_leaf=1, seed=seed),
+    "DecisionTreeB": lambda seed=0: DecisionTreeClassifier(max_depth=6, min_samples_leaf=3, seed=seed),
+    "DecisionTreeC": lambda seed=0: DecisionTreeClassifier(max_depth=3, min_samples_leaf=4, seed=seed),
+    "1NearestNeighbor": lambda seed=0: KNeighborsClassifier(k=1),
+    "3NearestNeighbor": lambda seed=0: KNeighborsClassifier(k=3),
+    "7NearestNeighbor": lambda seed=0: KNeighborsClassifier(k=7),
+    "LinearSVM": lambda seed=0: LinearSVM(seed=seed),
+    "RadialSVM": lambda seed=0: RadialSVM(seed=seed),
+    "RandomForest": lambda seed=0: RandomForestClassifier(n_trees=30, seed=seed),
+    "MLP": lambda seed=0: MLPClassifier(seed=seed),
 }
 
 
-def make_classifier(name: str):
+def make_classifier(name: str, seed: int = 0):
+    """A fresh classifier by registry name, seeded for reproducible fits.
+
+    ``seed`` reaches every stochastic classifier's RNG (tie-breaking,
+    SGD shuffling, forest bagging); the k-NN family has no randomness and
+    ignores it.  Threading the tune seed here is what makes
+    ``tune_for_archs``/``tune_fleet`` bit-reproducible run-to-run.
+    """
     try:
-        return CLASSIFIERS[name]()
+        return CLASSIFIERS[name](seed=seed)
     except KeyError:
         raise ValueError(f"unknown classifier {name!r}; expected one of {sorted(CLASSIFIERS)}") from None

@@ -385,8 +385,11 @@ def select_configs(
 
     ``perf`` is (n_problems, n_configs) *normalized* performance; ``features``
     (problem sizes) is required only by the ``tree`` method.  ``init_centers``
-    (perf-space centroids) warm-starts the ``kmeans`` method — the incremental
-    retune path; other methods ignore it.
+    (perf-space centroids) warm-starts the ``kmeans`` and ``pca_kmeans``
+    methods — the incremental-retune and transfer-tuning paths; for
+    ``pca_kmeans`` the centroids are projected through the fitted PCA so the
+    warm start happens in the same reduced space the clustering runs in.
+    Other methods ignore it.
     """
     perf = np.asarray(perf, dtype=np.float64)
     if method == "topn":
@@ -396,8 +399,10 @@ def select_configs(
         labels, centers = kmeans(perf, k, seed=seed, init_centers=init_centers)
         chosen = _configs_from_centers(perf, labels, centers, k)
     elif method == "pca_kmeans":
-        z = PCA(n_components=min(pca_components, perf.shape[1], perf.shape[0])).fit_transform(perf)
-        labels, _ = kmeans(z, k, seed=seed)
+        pca = PCA(n_components=min(pca_components, perf.shape[1], perf.shape[0])).fit(perf)
+        z = pca.transform(perf)
+        warm = pca.transform(init_centers) if init_centers is not None else None
+        labels, _ = kmeans(z, k, seed=seed, init_centers=warm)
         chosen = _configs_from_labels(perf, labels, k)
     elif method == "spectral":
         labels = spectral_labels(perf, k, seed=seed)

@@ -98,6 +98,78 @@ def _family(name: str) -> str:
     return name.split("_", 1)[0]
 
 
+def fallback_order(device: str) -> list[str]:
+    """Every sibling reachable from ``device`` through :data:`FALLBACKS`,
+    nearest first (breadth-first over the preference graph).
+
+    The direct chain comes first in its declared order, then each entry's own
+    chain, and so on transitively — so a v2 host with only a v5p artifact
+    still finds it (v2 -> v3 -> v4 -> v5p) instead of dropping straight to
+    the same-platform-family lottery.  Cycle-safe: the graph is deliberately
+    cyclic (v5e <-> v4) and every device is visited at most once; ``device``
+    itself never appears in its own order.
+    """
+    device = canonical_device_name(device)
+    seen = {device}
+    order: list[str] = []
+    frontier = [device]
+    while frontier:
+        nxt: list[str] = []
+        for d in frontier:
+            for cand in FALLBACKS.get(d, ()):
+                if cand in seen:
+                    continue
+                seen.add(cand)
+                order.append(cand)
+                nxt.append(cand)
+        frontier = nxt
+    return order
+
+
+def transfer_donor(device: str, tuned: "list[str] | set[str]") -> str | None:
+    """The nearest already-tuned sibling a new device can warm-start from.
+
+    Walks :func:`fallback_order` (so multi-hop siblings count), then any
+    tuned device of the same platform family.  Never crosses platform
+    families — a ``host_cpu`` tuning says nothing about a TPU's perf surface,
+    so unlike :func:`resolve_device` there is no serve-anything last resort.
+    """
+    device = canonical_device_name(device)
+    tuned_set = {canonical_device_name(t) for t in tuned} - {device}
+    for cand in fallback_order(device):
+        if cand in tuned_set:
+            return cand
+    fam = _family(device)
+    for cand in sorted(tuned_set):
+        if _family(cand) == fam:
+            return cand
+    return None
+
+
+def transfer_order(device_names: "list[str] | tuple[str, ...]") -> list[str]:
+    """Order a fleet so donors tune before the siblings that warm-start off
+    them (deterministic for a given input order).
+
+    Greedy: at each step prefer a device whose :func:`transfer_donor` is
+    already placed; when none qualifies (the bootstrap full-tune roots),
+    place the device that donates to the most still-pending peers, earliest
+    in the input on ties.  Duplicates (post-canonicalization) collapse to
+    their first occurrence.
+    """
+    pending = list(dict.fromkeys(canonical_device_name(n) for n in device_names))
+    placed: list[str] = []
+    while pending:
+        pick = next((d for d in pending if transfer_donor(d, placed)), None)
+        if pick is None:
+            def donates(d: str) -> int:
+                return sum(1 for o in pending if o != d and d in fallback_order(o))
+
+            pick = max(pending, key=lambda d: (donates(d), -pending.index(d)))
+        placed.append(pick)
+        pending.remove(pick)
+    return placed
+
+
 def resolve_device(
     requested: str, available: list[str], *, strict: bool = False
 ) -> str | None:
@@ -105,7 +177,8 @@ def resolve_device(
 
     Resolution order (DESIGN.md §7):
       1. exact match;
-      2. the :data:`FALLBACKS` chain for ``requested``, in order;
+      2. the :data:`FALLBACKS` graph for ``requested`` — the direct chain in
+         order, then transitive siblings breadth-first (:func:`fallback_order`);
       3. any available device of the same platform family (``tpu_*`` for a
          TPU, ...), lexicographically smallest for determinism;
       4. non-strict only: any available device at all (a tuned artifact still
@@ -118,7 +191,7 @@ def resolve_device(
     avail = sorted(dict.fromkeys(available))
     if requested in avail:
         return requested
-    for cand in FALLBACKS.get(requested, ()):
+    for cand in fallback_order(requested):
         if cand in avail:
             return cand
     fam = _family(requested)

@@ -254,9 +254,10 @@ def train_deployment(
     classifier_name: str = "DecisionTreeA",
     *,
     meta: dict | None = None,
+    seed: int = 0,
 ) -> Deployment:
     labels = build_labels(train.perf, chosen)
-    clf = make_classifier(classifier_name)
+    clf = make_classifier(classifier_name, seed=seed)
     clf.fit(train.features, labels)
     return Deployment(
         device=train.device,

@@ -73,13 +73,20 @@ class KernelFamily:
     # refits with the same capacity the offline tuning shipped.
     tree_max_depth: int = 6
     tree_min_samples_leaf: int = 1
+    # Model-side (measurement-free) perf predictor with the same signature as
+    # ``perf_matrix``.  The staged pipeline (repro.core.pipeline) prunes the
+    # config space and allocates its measurement budget from this table; a
+    # family without one tunes full-harvest only.  For the analytic-model
+    # families this is the untextured roofline (``texture=False``).
+    model_matrix: Callable[[list[tuple], Sequence, str | None], np.ndarray] | None = None
 
-    def make_tree(self):
+    def make_tree(self, seed: int = 0):
         """A fresh (unfit) runtime classifier for this family."""
         from .classify import DecisionTreeClassifier
 
         return DecisionTreeClassifier(
-            max_depth=self.tree_max_depth, min_samples_leaf=self.tree_min_samples_leaf
+            max_depth=self.tree_max_depth, min_samples_leaf=self.tree_min_samples_leaf,
+            seed=seed,
         )
 
 
@@ -144,6 +151,13 @@ def _matmul_perf(problems, configs, device_name):
     return build_perf_matrix(problems, list(configs), DEVICES[device_name])
 
 
+def _matmul_model(problems, configs, device_name):
+    from .perfmodel import DEVICES, TPU_V5E, build_perf_matrix
+
+    dev = DEVICES.get(device_name, TPU_V5E) if device_name else TPU_V5E
+    return build_perf_matrix(problems, list(configs), dev, texture=False)
+
+
 def _attn_features(problems):
     from .attnmodel import attn_problem_features
 
@@ -163,10 +177,24 @@ def _attn_perf(problems, configs, device_name):
     return build_attn_matrix(problems, list(configs), DEVICES.get(device_name, TPU_V5E))
 
 
+def _attn_model(problems, configs, device_name):
+    from .attnmodel import build_attn_matrix
+    from .perfmodel import DEVICES, TPU_V5E
+
+    dev = DEVICES.get(device_name, TPU_V5E)
+    return build_attn_matrix(problems, list(configs), dev, texture=False)
+
+
 def _wkv_perf(problems, configs, device_name):
     from .recmodel import build_wkv_matrix
 
     return build_wkv_matrix(problems, list(configs), device_name)
+
+
+def _wkv_model(problems, configs, device_name):
+    from .recmodel import build_wkv_matrix
+
+    return build_wkv_matrix(problems, list(configs), device_name, texture=False)
 
 
 def _wkv_features(problems):
@@ -185,6 +213,12 @@ def _ssm_perf(problems, configs, device_name):
     from .recmodel import build_ssm_matrix
 
     return build_ssm_matrix(problems, list(configs), device_name)
+
+
+def _ssm_model(problems, configs, device_name):
+    from .recmodel import build_ssm_matrix
+
+    return build_ssm_matrix(problems, list(configs), device_name, texture=False)
 
 
 def _ssm_features(problems):
@@ -218,6 +252,7 @@ MATMUL = register_family(
         reference="jnp.dot (XLA)",
         default_n_kernels=8,
         device_sensitive=True,
+        model_matrix=_matmul_model,
     )
 )
 
@@ -235,6 +270,7 @@ ATTENTION = register_family(
         problem_arity=3,
         reference="repro.kernels.ref.flash_attention_ref",
         default_n_kernels=4,
+        model_matrix=_attn_model,
     )
 )
 
@@ -252,6 +288,7 @@ WKV = register_family(
         problem_arity=2,
         reference="repro.kernels.ref.wkv_ref",
         default_n_kernels=3,
+        model_matrix=_wkv_model,
     )
 )
 
@@ -269,6 +306,7 @@ SSM_SCAN = register_family(
         problem_arity=2,
         reference="repro.kernels.ref.ssm_scan_ref",
         default_n_kernels=4,
+        model_matrix=_ssm_model,
     )
 )
 

@@ -85,8 +85,18 @@ def predict_time(
     cfg: MatmulConfig,
     device: DeviceModel = TPU_V5E,
     dtype_bytes: int = 2,
+    *,
+    texture: bool = True,
 ) -> float:
-    """Predicted seconds for one batched GEMM; inf if the config is invalid."""
+    """Predicted seconds for one batched GEMM; inf if the config is invalid.
+
+    ``texture=False`` returns the smooth analytic roofline — what a *model*
+    can know about a config before running it.  The textured default is the
+    simulated *measurement* (roofline + microarchitectural quirks), so the
+    gap between the two is exactly the information measuring buys.  The
+    staged tuning pipeline prunes on the untextured prediction and spends
+    its measurement budget only where that prediction is uncertain.
+    """
     m, k, n, batch = problem
     if cfg.vmem_bytes(dtype_bytes) > device.vmem_bytes:
         return float("inf")
@@ -126,6 +136,8 @@ def predict_time(
 
     per_call = max(t_compute, t_mem) + steps * device.grid_step_overhead
     t = batch * per_call + device.launch_overhead
+    if not texture:
+        return t
     return t / _texture(device, cfg, (m, k, n, batch))
 
 
@@ -153,9 +165,11 @@ def predict_gflops(
     cfg: MatmulConfig,
     device: DeviceModel = TPU_V5E,
     dtype_bytes: int = 2,
+    *,
+    texture: bool = True,
 ) -> float:
     """Useful (unpadded) gigaflops/s; 0 for invalid configs."""
-    t = predict_time(problem, cfg, device, dtype_bytes)
+    t = predict_time(problem, cfg, device, dtype_bytes, texture=texture)
     if not np.isfinite(t) or t <= 0:
         return 0.0
     m, k, n, batch = problem
@@ -167,12 +181,18 @@ def build_perf_matrix(
     configs: list[MatmulConfig],
     device: DeviceModel = TPU_V5E,
     dtype_bytes: int = 2,
+    *,
+    texture: bool = True,
 ) -> np.ndarray:
-    """(n_problems, n_configs) raw gflops/s table — the benchmark dataset."""
+    """(n_problems, n_configs) raw gflops/s table — the benchmark dataset.
+
+    ``texture=False`` yields the pure-roofline *model* table (free to
+    compute, never counted as a measurement by the staged pipeline).
+    """
     out = np.zeros((len(problems), len(configs)))
     for i, p in enumerate(problems):
         for j, c in enumerate(configs):
-            out[i, j] = predict_gflops(p, c, device, dtype_bytes)
+            out[i, j] = predict_gflops(p, c, device, dtype_bytes, texture=texture)
     return out
 
 

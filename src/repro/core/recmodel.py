@@ -77,7 +77,8 @@ def ssm_problem_features(problems: list[SsmProblem]) -> np.ndarray:
 # WKV (RWKV6 chunked recurrence)
 # ---------------------------------------------------------------------------
 def predict_wkv_time(
-    problem: WkvProblem, cfg: WkvConfig, device: DeviceModel = TPU_V5E, *, dtype_bytes: int = 4
+    problem: WkvProblem, cfg: WkvConfig, device: DeviceModel = TPU_V5E, *,
+    dtype_bytes: int = 4, texture: bool = True,
 ) -> float:
     """Predicted seconds for one (head, sequence) WKV pass; inf if invalid."""
     s, hd = problem
@@ -96,6 +97,8 @@ def predict_wkv_time(
     traffic = n_chunks * (4.0 * c * hd * dtype_bytes + c * hd * 4)
     t_mem = traffic / device.hbm_bw
     t = max(t_compute, t_mem) + n_chunks * device.grid_step_overhead + device.launch_overhead
+    if not texture:  # smooth roofline: the model-side view (see perfmodel)
+        return t
     return t / _texture(device, "wkv", (cfg.chunk,), problem)
 
 
@@ -111,7 +114,8 @@ def predict_wkv_gflops(
 
 
 def build_wkv_matrix(
-    problems: list[WkvProblem], configs=None, device: DeviceModel | str | None = TPU_V5E
+    problems: list[WkvProblem], configs=None, device: DeviceModel | str | None = TPU_V5E,
+    *, texture: bool = True,
 ) -> np.ndarray:
     if not isinstance(device, DeviceModel):
         device = _device(device)
@@ -119,7 +123,7 @@ def build_wkv_matrix(
     perf = np.zeros((len(problems), len(configs)))
     for i, p in enumerate(problems):
         for j, c in enumerate(configs):
-            perf[i, j] = predict_wkv_gflops(p, c, device)
+            perf[i, j] = predict_wkv_gflops(p, c, device, texture=texture)
     return perf
 
 
@@ -153,6 +157,7 @@ def predict_ssm_time(
     device: DeviceModel = TPU_V5E,
     *,
     n_state: int = SSM_STATE_N,
+    texture: bool = True,
 ) -> float:
     """Predicted seconds for one batched-sequence SSM scan; inf if invalid."""
     s, d = problem
@@ -173,6 +178,8 @@ def predict_ssm_time(
     traffic = steps * (c * bd * (2.0 + n_state) * 4 + 2.0 * c * n_state * 4)
     t_mem = traffic / device.hbm_bw
     t = max(t_compute, t_mem) + steps * device.grid_step_overhead + device.launch_overhead
+    if not texture:  # smooth roofline: the model-side view (see perfmodel)
+        return t
     return t / _texture(device, "ssm", (cfg.block_d, cfg.chunk), problem)
 
 
@@ -188,7 +195,8 @@ def predict_ssm_gflops(
 
 
 def build_ssm_matrix(
-    problems: list[SsmProblem], configs=None, device: DeviceModel | str | None = TPU_V5E
+    problems: list[SsmProblem], configs=None, device: DeviceModel | str | None = TPU_V5E,
+    *, texture: bool = True,
 ) -> np.ndarray:
     if not isinstance(device, DeviceModel):
         device = _device(device)
@@ -196,7 +204,7 @@ def build_ssm_matrix(
     perf = np.zeros((len(problems), len(configs)))
     for i, p in enumerate(problems):
         for j, c in enumerate(configs):
-            perf[i, j] = predict_ssm_gflops(p, c, device)
+            perf[i, j] = predict_ssm_gflops(p, c, device, texture=texture)
     return perf
 
 

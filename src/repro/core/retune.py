@@ -333,26 +333,13 @@ def _warm_start_centers(
 ) -> np.ndarray | None:
     """Perf-space centroids implied by the deployed kernel subset.
 
-    Problems are grouped by which *deployed* config is best for them (the
-    clustering the old deployment effectively shipped); each group's mean
-    normalized perf vector seeds one k-means center.  Deployed configs
-    missing from the config space are skipped (k-means++ tops up).
+    Shared with the staged pipeline's transfer warm-start — a retune is a
+    transfer from the deployment's own past (see ``pipeline.warm_start_centers``
+    for the grouping semantics).
     """
-    cols = []
-    for cfg in deployed_configs:
-        try:
-            cols.append(all_configs.index(cfg))
-        except ValueError:
-            continue
-    if not cols:
-        return None
-    owner = np.asarray(perf)[:, cols].argmax(axis=1)
-    centers = []
-    for j in range(len(cols)):
-        members = norm_perf[owner == j]
-        if len(members):
-            centers.append(members.mean(axis=0))
-    return np.stack(centers) if centers else None
+    from .pipeline import warm_start_centers
+
+    return warm_start_centers(norm_perf, all_configs, perf, deployed_configs)
 
 
 def _blend_problems(
@@ -467,9 +454,9 @@ def incremental_retune(
 
     labels = build_labels(perf, chosen)
     if family == "matmul":
-        clf = make_classifier(deployment.classifier_name)
+        clf = make_classifier(deployment.classifier_name, seed=seed)
     else:
-        clf = get_family(family).make_tree()
+        clf = get_family(family).make_tree(seed)
     fit_weighted(clf, feats, labels, w)
 
     new_dep = deployment.clone()

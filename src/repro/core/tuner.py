@@ -15,20 +15,24 @@ prune+classify loop for each other registered family (attention, wkv,
 ssm_scan, and anything registered later) from its declared harvest + perf
 model.  A new op needs only a ``register_family`` call to get tuned artifacts,
 serving dispatch, telemetry, and retuning for free.
+
+Since the staged-pipeline refactor (DESIGN.md §12) the implementation lives
+in ``repro.core.pipeline`` — candidate generation, model-guided pruning,
+transfer warm-start, measurement planning, cluster-select, and classify are
+separate composable stages.  The functions here are the stable entry points:
+``tune()``'s signature is unchanged, and ``tune_family`` / ``tune_for_archs``
+/ ``tune_fleet`` grew the stage knobs (``prune_ratio``, ``measure_budget``,
+``transfer_from`` / ``transfer``).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from pathlib import Path
 
-import numpy as np
-
-from .cluster import select_configs
 from .dataset import TuningDataset, build_model_dataset, harvest_problems
-from .dispatch import Deployment, classifier_fraction, train_deployment
+from .dispatch import Deployment
 from .families import KernelFamily, family_names, get_family
-from .normalize import normalize
-from .selection import achievable_fraction, geomean_fraction, select_from_dataset
 
 
 @dataclasses.dataclass
@@ -44,7 +48,12 @@ class TuneResult:
 
 @dataclasses.dataclass
 class FamilyTuneResult:
-    """One non-matmul family through the prune+classify pipeline."""
+    """One non-matmul family through the prune+classify pipeline.
+
+    ``lineage`` is the staged pipeline's cost record (source device, prune
+    ratio, measured fraction, model error) — ``None`` for results built
+    outside ``repro.core.pipeline``.
+    """
 
     family: str
     configs: list
@@ -52,9 +61,17 @@ class FamilyTuneResult:
     problems: list[tuple]
     oracle_fraction: float
     classifier_fraction: float
+    lineage: dict | None = None
 
-    # tuple-compat: ``configs, tree = tune_family(...)`` keeps working.
+    # Deprecated tuple-compat: ``configs, tree = tune_family(...)``.  Warns
+    # for one release (use ``.configs`` / ``.tree``); removed next release.
     def __iter__(self):
+        warnings.warn(
+            "tuple-unpacking FamilyTuneResult is deprecated; use the "
+            ".configs / .tree fields (shim removed next release)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return iter((self.configs, self.tree))
 
 
@@ -68,36 +85,36 @@ def tune_family(
     seed: int = 0,
     device_name: str | None = None,
     problems: list[tuple] | None = None,
+    prune_ratio: float | None = None,
+    measure_budget: float | None = None,
+    transfer_from=None,
 ) -> FamilyTuneResult:
     """Prune + classify one registered kernel family (the paper pipeline).
 
     Works for any family whose registry entry declares a harvest and a perf
     model; ``problems`` overrides the harvest (e.g. a retune's live shapes).
+    Implemented as ``pipeline.run_family_pipeline``; ``prune_ratio`` /
+    ``measure_budget`` / ``transfer_from`` are its stage knobs (defaults =
+    the legacy full-harvest tune, bit-for-bit).
     """
     fam = name if isinstance(name, KernelFamily) else get_family(name)
     if fam.name == "matmul":
         raise ValueError("the matmul family is tuned via tune()/tune_for_archs")
-    space = list(fam.config_space())
-    problems = list(problems if problems is not None else fam.harvest(arch_ids))
-    if not problems:
-        raise ValueError(f"no benchmark problems harvested for family {fam.name!r}")
-    perf = fam.perf_matrix(problems, space, device_name)
-    norm = normalize(perf, normalization)
-    feats = fam.features(problems)
-    k = min(n_kernels or fam.default_n_kernels, len(space))
-    chosen = select_configs(norm, k, method, features=feats, seed=seed)
-    labels = perf[:, chosen].argmax(axis=1)
-    tree = fam.make_tree().fit(feats, labels)
-    pred = np.clip(tree.predict(feats), 0, len(chosen) - 1)
-    picked = perf[np.arange(len(problems)), [chosen[i] for i in pred]]
-    return FamilyTuneResult(
-        family=fam.name,
-        configs=[space[i] for i in chosen],
-        tree=tree,
+    from .pipeline import run_family_pipeline
+
+    return run_family_pipeline(
+        fam,
+        arch_ids,
         problems=problems,
-        oracle_fraction=achievable_fraction(perf, chosen),
-        classifier_fraction=geomean_fraction(picked, perf.max(axis=1)),
-    )
+        device_name=device_name,
+        n_kernels=n_kernels,
+        method=method,
+        normalization=normalization,
+        seed=seed,
+        prune_ratio=prune_ratio,
+        measure_budget=measure_budget,
+        transfer_from=transfer_from,
+    ).to_family_result()
 
 
 def tune(
@@ -127,68 +144,27 @@ def tune(
     :class:`FamilyTuneResult`\\ s (or bare ``(configs, tree)`` tuples) —
     ``tune_fleet`` shares device-insensitive tunings across devices this
     way.  ``attn_tuning`` is the attention-only legacy spelling of the same.
-    """
-    from .retune import train_distribution
 
-    train, test = dataset.split(test_fraction=test_fraction, seed=seed)
-    chosen = select_from_dataset(train, n_kernels, method, normalization, seed=seed)
-    deployment = train_deployment(
-        train,
-        chosen,
-        classifier,
-        meta={
-            "method": method,
-            "normalization": normalization,
-            "n_kernels": n_kernels,
-            "seed": seed,
-            "source": dataset.source,
-            # Provenance for the continuous tuning loop (DESIGN.md §8): the
-            # shape distribution this artifact was tuned against, so a
-            # serving host can detect when live traffic drifts away from it.
-            "train_distribution": train_distribution(train.problems),
-        },
-    )
-    # Every other registered family through the same pipeline (the paper's
-    # future-work direction, generalized): attention, wkv, ssm_scan, ...
-    precomputed = dict(family_tunings or {})
-    if attn_tuning is not None:
-        precomputed.setdefault("attention", attn_tuning)
-    harvest_archs = arch_ids if arch_ids is not None else attn_arch_ids
-    wanted = [f for f in (families if families is not None else family_names()) if f != "matmul"]
-    family_results: dict[str, FamilyTuneResult] = {}
-    family_dists: dict[str, dict] = {}
-    for fname in wanted:
-        got = precomputed.get(fname)
-        if got is None:
-            fam = get_family(fname)
-            probs = fam.harvest(harvest_archs)
-            if not probs:
-                continue  # none of the assigned archs launch this op: stays untuned
-            got = tune_family(
-                fname, problems=probs, method=method, normalization=normalization,
-                seed=seed, n_kernels=n_attn_kernels if fname == "attention" else None,
-                # Device-insensitive families tune against their single model
-                # target everywhere (tune, fleet sharing, AND retune use the
-                # same perf surface); device-sensitive ones follow the dataset.
-                device_name=dataset.device if fam.device_sensitive else None,
-            )
-        if isinstance(got, FamilyTuneResult):
-            deployment.set_family_tuning(fname, got.configs, got.tree)
-            family_results[fname] = got
-            family_dists[fname] = train_distribution(got.problems)
-        else:  # bare (configs, tree): no problem list, so no provenance
-            configs, tree = got
-            deployment.set_family_tuning(fname, list(configs), tree)
-    if family_dists:
-        deployment.meta["family_distributions"] = family_dists
-    return TuneResult(
-        deployment=deployment,
-        chosen=chosen,
-        oracle_fraction=achievable_fraction(test.perf, chosen),
-        classifier_fraction=classifier_fraction(test, chosen, deployment),
-        train=train,
-        test=test,
-        family_results=family_results,
+    Implemented by ``pipeline.tune_dataset`` (the staged pipeline with every
+    stage knob at its default, which reproduces the legacy monolith exactly);
+    call that directly for transfer warm-starts and prune/measure budgets.
+    """
+    from .pipeline import tune_dataset
+
+    return tune_dataset(
+        dataset,
+        n_kernels=n_kernels,
+        method=method,
+        normalization=normalization,
+        classifier=classifier,
+        test_fraction=test_fraction,
+        seed=seed,
+        arch_ids=arch_ids,
+        attn_arch_ids=attn_arch_ids,
+        n_attn_kernels=n_attn_kernels,
+        attn_tuning=attn_tuning,
+        families=families,
+        family_tunings=family_tunings,
     )
 
 
@@ -225,11 +201,42 @@ def tune_for_archs(
     attn_tuning: tuple | None = None,
     families: list[str] | None = None,
     family_tunings: dict | None = None,
+    transfer_from=None,
+    prune_ratio: float | None = None,
+    measure_budget: float | None = None,
 ) -> TuneResult:
-    """Tune against the GEMM shapes the assigned architectures will launch."""
+    """Tune against the GEMM shapes the assigned architectures will launch.
+
+    With any staged-pipeline knob set (``transfer_from`` — anything
+    ``pipeline.as_transfer_prior`` accepts, e.g. a tuned sibling's
+    ``TuneResult`` or ``Deployment``; ``prune_ratio``; ``measure_budget``)
+    the matmul table comes from ``pipeline.staged_matmul_dataset`` — pruned,
+    measured only where model and donor disagree, model-filled elsewhere —
+    and the tuning lineage is stamped into the deployment.  All-defaults is
+    the legacy full-harvest tune, bit-for-bit.
+    """
+    from .pipeline import staged_matmul_dataset, tune_dataset
+
     problems = harvest_problems(arch_ids, max_problems=max_problems)
-    ds = build_model_dataset(problems, device_name=device_name)
-    return tune(
+    staged = (
+        transfer_from is not None
+        or (prune_ratio is not None and 0.0 < prune_ratio < 1.0)
+        or (measure_budget is not None and 0.0 < measure_budget < 1.0)
+    )
+    lineage = None
+    donor = transfer_from
+    if staged:
+        ds, matmul_lineage, donor = staged_matmul_dataset(
+            problems,
+            device_name,
+            prune_ratio=prune_ratio,
+            measure_budget=measure_budget,
+            transfer_from=transfer_from,
+        )
+        lineage = {"matmul": matmul_lineage}
+    else:
+        ds = build_model_dataset(problems, device_name=device_name)
+    return tune_dataset(
         ds,
         n_kernels=n_kernels,
         method=method,
@@ -240,6 +247,10 @@ def tune_for_archs(
         attn_tuning=attn_tuning,
         families=families,
         family_tunings=family_tunings,
+        transfer_from=donor,
+        prune_ratio=prune_ratio,
+        measure_budget=measure_budget,
+        lineage=lineage,
     )
 
 
@@ -274,6 +285,9 @@ def tune_fleet(
     cpu_problems: int = 8,
     seed: int = 0,
     families: list[str] | None = None,
+    transfer: bool = False,
+    prune_ratio: float | None = None,
+    measure_budget: float | None = None,
 ) -> FleetTuneResult:
     """Tune every device in one run and pack a :class:`DeploymentBundle`.
 
@@ -284,9 +298,17 @@ def tune_fleet(
     with ``repro.core.bundle.install_bundle``.  Device-insensitive families
     (attention, wkv, ssm_scan — their perf models have one target) are tuned
     once and shared across the fleet.
+
+    Devices tune in ``devices.transfer_order`` — donors before the siblings
+    that can warm-start off them — so with ``transfer=True`` each TPU device
+    after the first full-tunes only where the model and its nearest tuned
+    sibling (``devices.transfer_donor``) disagree; ``prune_ratio`` /
+    ``measure_budget`` apply to every staged tune including the shared
+    family tunings.  ``host_cpu`` always measures from scratch (a sibling
+    TPU's tuning says nothing about this host's cache hierarchy).
     """
     from .bundle import DeploymentBundle
-    from .devices import canonical_device_name
+    from .devices import canonical_device_name, transfer_donor, transfer_order
 
     if not device_names:
         raise ValueError("tune_fleet needs at least one device name")
@@ -298,11 +320,11 @@ def tune_fleet(
         probs = get_family(fname).harvest(arch_ids)
         if probs:
             shared[fname] = tune_family(
-                fname, problems=probs, method=method, normalization=normalization, seed=seed
+                fname, problems=probs, method=method, normalization=normalization, seed=seed,
+                prune_ratio=prune_ratio, measure_budget=measure_budget,
             )
     results: dict[str, TuneResult] = {}
-    for raw_name in device_names:
-        name = canonical_device_name(raw_name)
+    for name in transfer_order([canonical_device_name(n) for n in device_names]):
         if name in results:
             continue
         if name == "host_cpu":
@@ -316,28 +338,36 @@ def tune_fleet(
                 families=wanted, family_tunings=shared,
             )
         else:
+            donor = None
+            if transfer:
+                donor_name = transfer_donor(name, [d for d in results if d != "host_cpu"])
+                donor = results[donor_name] if donor_name is not None else None
             res = tune_for_archs(
                 arch_ids, device_name=name, n_kernels=n_kernels, method=method,
                 normalization=normalization, classifier=classifier,
                 max_problems=max_problems, seed=seed, families=wanted,
-                family_tunings=shared,
+                family_tunings=shared, transfer_from=donor,
+                prune_ratio=prune_ratio, measure_budget=measure_budget,
             )
         res.deployment.meta.update(
             oracle_fraction=res.oracle_fraction,
             classifier_fraction=res.classifier_fraction,
         )
         results[name] = res
+    meta = {
+        "devices": sorted(results),
+        "archs": list(arch_ids) if arch_ids else "all",
+        "families": ["matmul", *wanted],
+        "n_kernels": n_kernels,
+        "method": method,
+        "normalization": normalization,
+        "seed": seed,
+    }
+    if transfer:
+        meta["transfer"] = True
     bundle = DeploymentBundle(
         deployments={name: r.deployment for name, r in results.items()},
-        meta={
-            "devices": sorted(results),
-            "archs": list(arch_ids) if arch_ids else "all",
-            "families": ["matmul", *wanted],
-            "n_kernels": n_kernels,
-            "method": method,
-            "normalization": normalization,
-            "seed": seed,
-        },
+        meta=meta,
     )
     return FleetTuneResult(bundle=bundle, results=results)
 

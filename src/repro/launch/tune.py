@@ -14,6 +14,14 @@ its detected hardware:
 
   python -m repro.launch.tune --devices tpu_v5e,tpu_v4 --bundle bundle.json
 
+New hardware can be brought up cheaply through the staged pipeline
+(DESIGN.md §12): ``--transfer-from deploy_v5e.json`` warm-starts from a tuned
+sibling's artifact and measures only where model and sibling disagree,
+``--prune-ratio 0.5`` drops the half of the config space the perf model rules
+out before any measurement, and ``--measure-budget 0.3`` hard-caps measured
+cells at 30% of a full harvest.  Fleet mode chains transfers automatically
+with ``--transfer`` (donors tune first, siblings warm-start off them).
+
 Artifacts are consumed by trainers/servers via ``--deployment`` / ``--bundle``
 launcher flags or ``repro.core.bundle.install_bundle(path)``.
 """
@@ -44,12 +52,35 @@ def main(argv=None) -> None:
     ap.add_argument("--cpu-problems", type=int, default=24)
     ap.add_argument("--out", default=None, help="single-device deployment output path")
     ap.add_argument("--bundle", default=None, help="multi-device bundle output path")
+    ap.add_argument("--transfer-from", default=None, metavar="DEPLOY_JSON",
+                    help="warm-start from a tuned sibling's deployment artifact: reuse "
+                         "its kernel subset as clustering seeds and measure only where "
+                         "the perf model and the sibling disagree (single-device mode)")
+    ap.add_argument("--transfer", action="store_true",
+                    help="fleet mode: tune donors first and warm-start each remaining "
+                         "device from its nearest tuned sibling (devices.FALLBACKS)")
+    ap.add_argument("--prune-ratio", type=float, default=None, metavar="R",
+                    help="keep only the top R (0<R<1) of the config space by predicted "
+                         "perf before measuring anything")
+    ap.add_argument("--measure-budget", type=float, default=None, metavar="B",
+                    help="measure at most B (0<B<1) of the full harvest's cells; the "
+                         "rest is filled from the perf model")
     args = ap.parse_args(argv)
 
     if not args.out and not args.bundle:
         ap.error("one of --out / --bundle is required")
     if args.devices and not args.bundle:
         ap.error("--devices selects fleet mode and requires --bundle <path>")
+    for flag, val in (("--prune-ratio", args.prune_ratio), ("--measure-budget", args.measure_budget)):
+        if val is not None and not 0.0 < val < 1.0:
+            ap.error(f"{flag} must be a fraction in (0, 1), got {val}")
+    if args.transfer_from and args.device == "host_cpu":
+        ap.error("--transfer-from does not apply to host_cpu (it always measures)")
+    transfer_prior = None
+    if args.transfer_from:
+        from repro.core.dispatch import Deployment
+
+        transfer_prior = Deployment.load(args.transfer_from)
 
     archs = args.archs.split(",") if args.archs else None
     if archs:
@@ -72,6 +103,8 @@ def main(argv=None) -> None:
             method=args.method, normalization=args.normalization,
             classifier=args.classifier, max_problems=args.max_problems,
             cpu_problems=args.cpu_problems, families=families,
+            transfer=args.transfer, prune_ratio=args.prune_ratio,
+            measure_budget=args.measure_budget,
         )
         save_fleet(fleet, args.bundle)
         print(f"bundle ({len(fleet.results)} devices) -> {args.bundle}")
@@ -109,7 +142,8 @@ def main(argv=None) -> None:
             archs, device_name=args.device, n_kernels=args.n_kernels,
             method=args.method, normalization=args.normalization,
             classifier=args.classifier, max_problems=args.max_problems,
-            families=families,
+            families=families, transfer_from=transfer_prior,
+            prune_ratio=args.prune_ratio, measure_budget=args.measure_budget,
         )
     save_result(result, args.out)
     dep = result.deployment
@@ -118,6 +152,12 @@ def main(argv=None) -> None:
         configs, _tree = dep.family_tuning(fname)
         print(f"  {fname:9s} kernels: {[c.name() for c in configs]}")
     print(f"  oracle {result.oracle_fraction:.1%} / classifier {result.classifier_fraction:.1%}")
+    lineage = dep.meta.get("tuning_lineage") or {}
+    rec = lineage.get("matmul")
+    if rec and rec.get("measured_fraction", 1.0) < 1.0:
+        src = rec.get("source_device") or "model only"
+        print(f"  staged: measured {rec['measured_fraction']:.1%} of a full harvest "
+              f"(donor: {src}, kept {rec['prune_ratio']:.0%} of config space)")
 
 
 if __name__ == "__main__":

@@ -36,6 +36,7 @@ CORE_ALL = [
     "PCA",
     "Deployment",
     "DeploymentBundle",
+    "FamilyPipelineResult",
     "FamilyTuning",
     "FaultError",
     "FaultPlan",
@@ -45,6 +46,7 @@ CORE_ALL = [
     "KernelFamily",
     "KernelRuntime",
     "TelemetrySnapshot",
+    "TransferPrior",
     "TuneResult",
     "TuningDataset",
     "achievable_fraction",
@@ -67,12 +69,14 @@ CORE_ALL = [
     "register_family",
     "reset_default_runtime",
     "resolve_device",
+    "run_family_pipeline",
     "save_fleet",
     "select_configs",
     "select_from_dataset",
     "synthetic_problems",
     "train_deployment",
     "tune",
+    "tune_dataset",
     "tune_family",
     "tune_fleet",
     "tune_for_archs",

@@ -91,8 +91,11 @@ def test_register_custom_family_roundtrip():
         # one registry entry is enough to ride the whole tuning pipeline
         res = tune_family("toy_op")
         assert isinstance(res, FamilyTuneResult)
-        configs, tree = res  # tuple-unpack compat
+        # tuple-unpack compat shim warns for one release, then goes away
+        with pytest.warns(DeprecationWarning, match="configs"):
+            configs, tree = res
         assert configs and tree is not None
+        assert configs == res.configs and tree is res.tree
     finally:
         unregister_family("toy_op")
     assert not is_registered("toy_op")

@@ -1,0 +1,260 @@
+"""Staged tuning pipeline: stages, pruning, transfer warm-start, budgets,
+lineage provenance, fleet determinism, and the FALLBACKS transfer graph."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import devices as dev
+from repro.core import pipeline as pl
+from repro.core.bundle import DeploymentBundle
+from repro.core.dataset import harvest_problems
+from repro.core.devices import (
+    fallback_order,
+    resolve_device,
+    transfer_donor,
+    transfer_order,
+)
+from repro.core.families import get_family
+from repro.core.normalize import normalize
+from repro.core.tuner import tune_family, tune_fleet, tune_for_archs
+
+ARCHS = ["phi4-mini-3.8b"]
+
+
+# ---------------------------------------------------------------------------
+# stage results
+# ---------------------------------------------------------------------------
+def test_stages_compose_and_account():
+    cand = pl.generate_candidates("wkv")
+    assert cand.family == "wkv" and cand.problems and cand.configs
+    prune = pl.prune_candidates(cand, prune_ratio=0.5)
+    assert 0 < len(prune.kept) < len(cand.configs) or len(cand.configs) <= 2
+    assert list(prune.kept) == sorted(prune.kept)  # stable column order
+    plan = pl.plan_measurements(cand, prune, measure_budget=0.4)
+    meas = pl.run_measurements(cand, prune, plan)
+    assert meas.perf.shape == (len(cand.problems), len(prune.kept))
+    assert meas.full_cost == len(cand.problems) * len(cand.configs)
+    assert meas.n_measured == int(plan.mask.sum())
+    assert meas.measured_fraction <= 0.4 + 1e-9
+    assert np.all(meas.perf > 0)  # model-filled cells are real predictions
+
+
+def test_prune_always_keeps_default_and_donor_configs():
+    fam = get_family("ssm_scan")
+    cand = pl.generate_candidates("ssm_scan")
+    donor_cfg = cand.configs[-1]
+    prune = pl.prune_candidates(cand, prune_ratio=0.2, keep_configs=[donor_cfg])
+    kept_cfgs = [cand.configs[j] for j in prune.kept]
+    assert fam.default_config in kept_cfgs
+    assert donor_cfg in kept_cfgs
+
+
+def test_budget_ignored_without_model_table():
+    # No predicted table -> nothing can fill unmeasured cells, so the plan
+    # measures everything and the budget is (safely) inapplicable.
+    cand = pl.generate_candidates("wkv")
+    prune = pl.PruneStage(kept=tuple(range(len(cand.configs))), predicted=None, ratio=1.0)
+    plan = pl.plan_measurements(cand, prune, measure_budget=0.1)
+    assert plan.mask.all()
+
+
+def test_full_default_pipeline_is_bit_identical_to_legacy_monolith():
+    """No prune / no budget / no donor must reproduce the old tune_family."""
+    from repro.core.cluster import select_configs
+    from repro.core.selection import achievable_fraction, geomean_fraction
+
+    fam = get_family("ssm_scan")
+    space = list(fam.config_space())
+    problems = fam.harvest(None)
+    perf = fam.perf_matrix(problems, space, None)
+    norm = normalize(perf, "standard")
+    feats = fam.features(problems)
+    k = min(fam.default_n_kernels, len(space))
+    chosen = select_configs(norm, k, "pca_kmeans", features=feats, seed=0)
+    labels = perf[:, chosen].argmax(axis=1)
+    tree = fam.make_tree().fit(feats, labels)
+
+    res = pl.run_family_pipeline("ssm_scan")
+    assert res.chosen == [int(i) for i in chosen]
+    assert res.configs == [space[i] for i in chosen]
+    assert np.array_equal(res.tree.predict(feats), tree.predict(feats))
+    assert res.oracle_fraction == achievable_fraction(perf, chosen)
+    pred = np.clip(tree.predict(feats), 0, len(chosen) - 1)
+    picked = perf[np.arange(len(problems)), [chosen[i] for i in pred]]
+    assert res.classifier_fraction == geomean_fraction(picked, perf.max(axis=1))
+    assert res.lineage["measured_fraction"] == 1.0
+    assert res.lineage["source_device"] is None
+
+
+# ---------------------------------------------------------------------------
+# transfer warm-start
+# ---------------------------------------------------------------------------
+def test_transfer_measures_only_disagreements():
+    full = tune_family("wkv")
+    staged = tune_family("wkv", transfer_from=full, measure_budget=0.5)
+    assert staged.lineage["measured_fraction"] <= 0.5 + 1e-9
+    assert staged.lineage["measured_fraction"] < 1.0
+    # warm-started selection stays close to the full tune's quality
+    assert staged.classifier_fraction >= 0.9 * full.classifier_fraction
+
+
+def test_as_transfer_prior_accepts_all_artifact_shapes():
+    full = tune_family("wkv")
+    for obj in (
+        full,  # FamilyTuneResult
+        (full.configs, full.tree),  # bare tuple
+        pl.TransferPrior(full.configs, full.tree, "tpu_v4"),  # already normalized
+    ):
+        prior = pl.as_transfer_prior(obj, "wkv")
+        assert prior is not None and prior.configs == full.configs
+    assert pl.as_transfer_prior(None, "wkv") is None
+    assert pl.as_transfer_prior(pl.TransferPrior([], None), "wkv") is None
+
+
+def test_transfer_prior_from_deployment_records_source_device():
+    donor = tune_for_archs(ARCHS, device_name="tpu_v5e", max_problems=30, families=[])
+    prior = pl.as_transfer_prior(donor, "matmul")
+    assert prior.source_device == "tpu_v5e"
+    assert prior.configs == donor.deployment.configs
+
+
+def test_tune_for_archs_transfer_stamps_lineage_and_saves_measurements():
+    donor = tune_for_archs(ARCHS, device_name="tpu_v5e", max_problems=30, families=[])
+    target = tune_for_archs(
+        ARCHS, device_name="tpu_v4", max_problems=30, families=[],
+        transfer_from=donor, prune_ratio=0.5, measure_budget=0.4,
+    )
+    lin = target.deployment.meta["tuning_lineage"]["matmul"]
+    assert lin["source_device"] == "tpu_v5e"
+    assert lin["prune_ratio"] <= 0.75  # donor + default configs can push past 0.5
+    assert lin["measured_fraction"] <= 0.4 + 1e-9
+    assert lin["n_measured"] < lin["full_cost"]
+    assert lin["model_error"] is not None and lin["model_error"] < 0.5
+    # still a useful artifact
+    assert target.classifier_fraction > 0.7
+
+
+def test_untouched_tune_has_identity_lineage():
+    res = tune_for_archs(ARCHS, device_name="tpu_v5e", max_problems=30, families=[])
+    lin = res.deployment.meta["tuning_lineage"]["matmul"]
+    assert lin["measured_fraction"] == 1.0 and lin["prune_ratio"] == 1.0
+    assert lin["source_device"] is None
+
+
+def test_warm_start_centers_shared_with_retune():
+    from repro.core.retune import _warm_start_centers
+
+    rng = np.random.default_rng(0)
+    perf = rng.uniform(1, 2, size=(12, 5))
+    norm = normalize(perf, "standard")
+    configs = list("abcde")
+    centers = pl.warm_start_centers(norm, configs, perf, ["b", "d"])
+    assert centers is not None and centers.shape[1] == 5 and len(centers) <= 2
+    assert np.array_equal(
+        centers, _warm_start_centers(norm, configs, perf, ["b", "d"])
+    )
+    assert pl.warm_start_centers(norm, configs, perf, ["zz"]) is None
+
+
+# ---------------------------------------------------------------------------
+# lineage provenance through bundles
+# ---------------------------------------------------------------------------
+def test_fleet_transfer_lineage_survives_bundle_roundtrip(tmp_path):
+    fleet = tune_fleet(
+        ARCHS, device_names=("tpu_v5e", "tpu_v4"), max_problems=30,
+        families=["wkv"], transfer=True, measure_budget=0.4,
+    )
+    # devices tuned donor-first; the second one warm-started off the first
+    lineages = {
+        name: r.deployment.meta["tuning_lineage"]["matmul"]
+        for name, r in fleet.results.items()
+    }
+    donors = [lin["source_device"] for lin in lineages.values()]
+    assert donors.count(None) == 1  # exactly one bootstrap full tune
+    (transferred,) = [d for d in donors if d is not None]
+    assert transferred in lineages  # donor is a fleet member tuned earlier
+    saved = [lin for lin in lineages.values() if lin["measured_fraction"] < 1.0]
+    assert saved, "transfer tune should not re-measure the full table"
+
+    path = tmp_path / "bundle.json"
+    fleet.bundle.save(path)
+    loaded = DeploymentBundle.load(path)
+    for name, lin in lineages.items():
+        assert loaded.deployments[name].meta["tuning_lineage"]["matmul"] == lin
+
+
+# ---------------------------------------------------------------------------
+# fleet determinism (seed threading regression)
+# ---------------------------------------------------------------------------
+def _fleet_fingerprint(seed):
+    fleet = tune_fleet(
+        ARCHS, device_names=("tpu_v5e", "tpu_v4"), max_problems=30,
+        families=["wkv", "ssm_scan"], seed=seed,
+    )
+    return {
+        name: json.dumps(r.deployment.to_blob(), sort_keys=True)
+        for name, r in fleet.results.items()
+    }
+
+
+def test_fleet_tune_is_bit_reproducible_run_to_run():
+    a = _fleet_fingerprint(seed=3)
+    b = _fleet_fingerprint(seed=3)
+    assert a == b  # same seed -> byte-identical deployments, every device/family
+
+
+# ---------------------------------------------------------------------------
+# the FALLBACKS transfer graph (resolve_device fallback chains)
+# ---------------------------------------------------------------------------
+def test_resolve_device_unknown_falls_back_to_family_default():
+    # tpu_v9 has no FALLBACKS entry: family rule picks a tuned TPU
+    assert resolve_device("tpu_v9", ["host_cpu", "tpu_v4"]) == "tpu_v4"
+    # and only the serve-anything last resort crosses families
+    assert resolve_device("tpu_v9", ["host_cpu"]) == "host_cpu"
+    with pytest.raises(KeyError):
+        resolve_device("tpu_v9", ["host_cpu"], strict=True)
+
+
+def test_resolve_device_multi_hop_sibling_walk():
+    # v2 -> v3 -> v4 -> v5p is not in any direct chain; BFS finds it
+    assert "tpu_v5p" in fallback_order("tpu_v2")
+    assert resolve_device("tpu_v2", ["tpu_v5p"]) == "tpu_v5p"
+    # nearer hop still wins when available
+    assert resolve_device("tpu_v2", ["tpu_v5p", "tpu_v3"]) == "tpu_v3"
+
+
+def test_fallback_order_is_cycle_safe(monkeypatch):
+    monkeypatch.setattr(
+        dev, "FALLBACKS", {"a": ("b",), "b": ("c",), "c": ("a", "b")}
+    )
+    assert fallback_order("a") == ["b", "c"]  # terminates, no repeats
+    assert fallback_order("b") == ["c", "a"]
+    assert "a" not in fallback_order("a")  # never its own sibling
+
+
+def test_transfer_donor_never_crosses_platform_family():
+    assert transfer_donor("tpu_v4", ["tpu_v5e", "host_cpu"]) == "tpu_v5e"
+    assert transfer_donor("tpu_v4", ["host_cpu"]) is None
+    assert transfer_donor("tpu_v4", ["tpu_v4"]) is None  # self is not a donor
+    # multi-hop: v2's graph reaches v5p through v3/v4
+    assert transfer_donor("tpu_v2", ["tpu_v5p"]) == "tpu_v5p"
+
+
+def test_transfer_order_places_donors_first():
+    order = transfer_order(["tpu_v6e", "tpu_v4", "tpu_v5e"])
+    assert sorted(order) == ["tpu_v4", "tpu_v5e", "tpu_v6e"]
+    # everything after the bootstrap root has a donor among its predecessors
+    for i, name in enumerate(order[1:], start=1):
+        assert transfer_donor(name, order[:i]) is not None
+    # deterministic + dedupes canonicalized spellings
+    assert transfer_order(["TPU v4", "tpu_v4"]) == ["tpu_v4"]
+    assert transfer_order(["host_cpu"]) == ["host_cpu"]
+
+
+def test_measure_budget_zero_rows_still_yields_artifact():
+    # an absurdly small budget degrades to a pure model+donor tune, not a crash
+    full = tune_family("ssm_scan")
+    staged = tune_family("ssm_scan", transfer_from=full, measure_budget=0.01)
+    assert staged.configs and staged.tree is not None
+    assert staged.lineage["measured_fraction"] <= 0.01 + 1e-9
