@@ -58,13 +58,23 @@ FAMILIES_SUFFIX = "_speedup"
 TRANSFER_PREFIX = "transfer_"
 TRANSFER_QUALITY_SUFFIX = "_quality_ratio"
 TRANSFER_COST_SUFFIX = "_measured_fraction"
+# bench_serving rows: fully deterministic (simulated clock).  *_ms rows are
+# latencies (lower is better); everything else is a throughput or a ratio
+# (higher is better).
+SERVING_PREFIX = "serving_"
 
 # Hard absolute bounds, independent of the committed baseline: a transfer
 # tune must reach >=95% of full-tune selection quality at <=40% of the
 # measurements, or bringing up new hardware cheaply is no longer true.
+# The serving tier's contracts (DESIGN.md §13): paged continuous batching
+# beats the fixed-slot engine >=1.3x at equal KV memory, and SLO-aware
+# selection improves targeted p99 at <=5% throughput cost.
 HARD_BOUNDS = {
     TRANSFER_QUALITY_SUFFIX: ("min", 0.95),
     TRANSFER_COST_SUFFIX: ("max", 0.40),
+    "serving_paged_speedup": ("min", 1.3),
+    "serving_slo_p99_improvement": ("min", 1.0),
+    "serving_slo_throughput_ratio": ("min", 0.95),
 }
 
 # recorded in the artifact for trend-watching, never gated (machine-dependent)
@@ -96,6 +106,9 @@ def collect_metrics(selection: dict | None, fig7: dict | None) -> tuple[dict, di
                 gated[name] = (float(value), "higher")
             elif name.startswith(TRANSFER_PREFIX) and name.endswith(TRANSFER_COST_SUFFIX):
                 gated[name] = (float(value), "lower")
+            elif name.startswith(SERVING_PREFIX):
+                direction = "lower" if name.endswith("_ms") else "higher"
+                gated[name] = (float(value), direction)
     return gated, recorded
 
 

@@ -16,6 +16,7 @@ import time
 
 from . import (
     bench_families,
+    bench_serving,
     bench_transfer,
     fig2_best_counts,
     fig3_pca_variance,
@@ -38,6 +39,7 @@ MODULES = {
     "fig8": fig8_attention_family,  # beyond-paper: attention kernel family
     "families": bench_families,  # beyond-paper: wkv/ssm via the family registry
     "transfer": bench_transfer,  # staged pipeline: tune-time-vs-quality frontier
+    "serving": bench_serving,  # fleet tier: paged KV + SLO-aware batching
 }
 
 

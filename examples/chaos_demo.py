@@ -88,7 +88,9 @@ def main() -> None:
         for i, plen in enumerate([6, 6, 6, 40, 40, 48, 48, 20])
     ]
     t0 = time.time()
-    status = engine.run(reqs)
+    for r in reqs:
+        engine.submit_request(r)
+    status = engine.drain()
     print(f"served {len(reqs)} requests in {time.time() - t0:.1f}s under chaos")
     assert status.completed == len(reqs) and not status.exhausted, status
     assert all(r.done and r.state == "done" for r in reqs), "dropped request!"
@@ -110,7 +112,9 @@ def main() -> None:
                 max_new_tokens=8)
         for i in range(4)
     ]
-    status2 = engine.run(reqs2)
+    for r in reqs2:
+        engine.submit_request(r)
+    status2 = engine.drain()
     assert status2.completed == len(reqs2) and not status2.exhausted, status2
     assert all(r.done and r.state == "done" for r in reqs2), "dropped request!"
     rolled = [ev for ev in engine.retune_events if ev.rolled_back]

@@ -8,9 +8,9 @@ Fully on the redesigned explicit-handle API (DESIGN.md §10): nothing here
 touches process-global state, and the whole lifecycle is
 
     bundle = repro.tune(...)            # or core tune() on your own dataset
-    rt = bundle.runtime(device=...)     # isolated runtime handle
-    engine = rt.serve(model, params)    # serving engine on that runtime
-    engine.run(requests)
+    router = bundle.router(model, params)   # one engine per tuned device
+    ticket = router.submit(prompt)          # SLO-aware dispatch + admission
+    for tok in ticket.tokens(): ...         # streams while the fleet serves
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """

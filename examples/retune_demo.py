@@ -67,7 +67,9 @@ def main() -> None:
         for i, plen in enumerate([6, 6, 6, 40, 40, 48, 48, 20])
     ]
     t0 = time.time()
-    status = engine.run(reqs)
+    for r in reqs:
+        engine.submit_request(r)
+    status = engine.drain()
     dt = time.time() - t0
     print(f"served {len(reqs)} requests in {dt:.1f}s, {engine.steps} decode steps")
 

@@ -3,9 +3,9 @@
 Tunes a two-device DeploymentBundle in one run (``tune_fleet``), lets the
 serving engine auto-install the deployment for the *detected* host device
 (``REPRO_DEVICE`` overrides detection; an untuned host falls back to the
-nearest tuned sibling), serves a burst of requests with mixed lengths, and
-prints throughput + the trace-time kernel selections made for prefill vs
-decode GEMMs.
+nearest tuned sibling), submits a burst of mixed-length requests through the
+streaming Ticket API over a paged KV pool, and prints throughput + the
+trace-time kernel selections made for prefill vs decode GEMMs.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
       PYTHONPATH=src REPRO_DEVICE=tpu_v4 python examples/serve_lm.py
@@ -20,7 +20,7 @@ import repro
 from repro.configs import registry
 from repro.core.tuner import tune_fleet
 from repro.models.model import build_model
-from repro.serve.engine import Request, ServingEngine
+from repro.serve.engine import ServingEngine
 
 
 def main() -> None:
@@ -40,25 +40,33 @@ def main() -> None:
     # The engine installs the right per-device Deployment from the bundle
     # into ITS runtime (nothing process-global is touched).
     engine = ServingEngine(model, params, max_batch=4, cache_len=128,
-                           bundle=bundle, runtime=rt)
+                           block_size=32, bundle=bundle, runtime=rt)
     print(f"host resolved to device {engine.device!r} "
           f"(detected or REPRO_DEVICE; nearest tuned sibling when untuned)")
 
     rng = np.random.default_rng(0)
-    requests = [
-        Request(
-            uid=i,
-            prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(4, 24))).astype(np.int32),
+    t0 = time.time()
+    tickets = [
+        engine.submit(
+            rng.integers(0, cfg.vocab, size=int(rng.integers(4, 24))).astype(np.int32),
             max_new_tokens=int(rng.integers(8, 24)),
         )
         for i in range(12)
     ]
-    t0 = time.time()
-    status = engine.run(requests)
+    # Stream the first ticket token by token (the iterator steps the engine,
+    # so every resident request advances while we watch this one)...
+    first = list(tickets[0].tokens())
+    print(f"streamed ticket 0: {first[:8]}{'...' if len(first) > 8 else ''}")
+    # ...then drain the rest of the fleet's work.
+    status = engine.drain()
     dt = time.time() - t0
+    requests = [t.request for t in tickets]
     tokens = sum(len(r.output) for r in requests)
     print(f"served {status.completed}/{len(requests)} requests / {tokens} tokens "
           f"in {dt:.2f}s ({tokens / dt:.1f} tok/s, {engine.steps} batched decode steps)")
+    pool = engine.pool.stats()
+    print(f"kv pool: {pool['used_blocks']}/{pool['n_blocks']} blocks of "
+          f"{pool['block_size']} tokens in use at drain")
 
     decode_sel = {c.name() for op, p, c in rt.selection_log() if p[0] <= 4}
     prefill_sel = {c.name() for op, p, c in rt.selection_log() if p[0] > 4}

@@ -5,9 +5,13 @@ The whole tune → deploy → serve → retune lifecycle in four lines::
     import repro
 
     bundle = repro.tune(["granite-8b"], devices=("tpu_v5e", "tpu_v4"))
-    rt = bundle.runtime(device="tpu_v5e")       # isolated KernelRuntime
-    engine = rt.serve(model, params)            # ServingEngine on that runtime
-    engine.run(requests)                        # retunes itself under drift
+    router = bundle.router(model, params)       # one engine per tuned device
+    ticket = router.submit(prompt, latency_target_ms=8.0)
+    for tok in ticket.tokens(): ...             # streams while the fleet serves
+
+Single-engine serving is ``bundle.runtime(device=...).serve(model, params)``
+— an explicit :class:`KernelRuntime` plus a :class:`ServingEngine` with the
+same ``submit``/``step``/``drain`` surface (``repro.serve``).
 
 Everything selection-related that a process does — which tuned policy is
 live, the dispatch shape caches, the selection-telemetry log — belongs to an
@@ -22,16 +26,19 @@ nor the tuning stack until an attribute is touched.
 """
 from __future__ import annotations
 
-__version__ = "0.5.0"
+__version__ = "0.6.0"
 
 __all__ = [
     "Deployment",
     "DeploymentBundle",
+    "EngineStatus",
     "FaultPlan",
     "KernelRuntime",
     "Request",
+    "Router",
     "ServingEngine",
     "TelemetrySnapshot",
+    "Ticket",
     "__version__",
     "current_runtime",
     "default_runtime",
@@ -47,8 +54,11 @@ _LAZY = {
     "DeploymentBundle": ("repro.core.bundle", "DeploymentBundle"),
     "FaultPlan": ("repro.core.faults", "FaultPlan"),
     "KernelRuntime": ("repro.core.runtime", "KernelRuntime"),
+    "EngineStatus": ("repro.serve.engine", "EngineStatus"),
     "Request": ("repro.serve.engine", "Request"),
+    "Router": ("repro.serve.router", "Router"),
     "ServingEngine": ("repro.serve.engine", "ServingEngine"),
+    "Ticket": ("repro.serve.engine", "Ticket"),
     "TelemetrySnapshot": ("repro.core.retune", "TelemetrySnapshot"),
     "current_runtime": ("repro.core.runtime", "current_runtime"),
     "default_runtime": ("repro.core.runtime", "default_runtime"),

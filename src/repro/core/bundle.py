@@ -248,6 +248,38 @@ class DeploymentBundle:
         rt.install_bundle(self, device, strict=strict)
         return rt
 
+    def router(self, model, params, *, devices=None, strict: bool = False,
+               name: str | None = None, **engine_kwargs):
+        """A fleet :class:`~repro.serve.router.Router` over this bundle.
+
+        One isolated :class:`~repro.core.runtime.KernelRuntime` **per tuned
+        device** (or the given ``devices`` subset), each driving its own
+        :class:`~repro.serve.engine.ServingEngine` on that device's tuning —
+        SLO objectives, retunes, and quarantines on one engine never leak
+        into another.  The four-line fleet lifecycle::
+
+            bundle = repro.tune(["granite-8b"], devices=("tpu_v5e", "tpu_v4"))
+            router = bundle.router(model, params, max_batch=8, block_size=16)
+            ticket = router.submit(prompt, latency_target_ms=8.0)
+            print(ticket.result(), router.drain())
+
+        ``engine_kwargs`` flow to every engine ctor (``max_batch``,
+        ``cache_len``, ``block_size``, ``retune_interval``, ...).
+        """
+        from repro.serve.router import Router
+
+        devs = list(devices) if devices is not None else list(self.devices)
+        if not devs:
+            raise ValueError("bundle has no tuned devices to route across")
+        label = name or "router"
+        engines = {}
+        for dev in devs:
+            rt = self.runtime(device=dev, strict=strict, name=f"{label}[{dev}]")
+            engines[rt.active_device() or dev] = rt.serve(
+                model, params, device=rt.active_device(), **engine_kwargs
+            )
+        return Router(engines, name=label)
+
     def provenance(self) -> dict[str, dict]:
         """Per-device tuning provenance (the v4+ top-level block).
 

@@ -152,6 +152,32 @@ class Deployment:
     def select_ssm(self, s: int, d: int):
         return self.select("ssm_scan", (s, d))
 
+    def select_for_objective(self, family: str, problem: tuple, objective):
+        """SLO-aware selection: pick by predicted per-problem speed.
+
+        The classifier is trained to maximise aggregate throughput over the
+        train distribution; under a latency objective the serving tier wants
+        the config the family's analytic model predicts *fastest for this
+        problem* instead (max score == min predicted time at fixed work).
+        Falls back to the plain classifier path when the objective carries no
+        target, the family has nothing to choose between, or the family
+        declares no model.
+        """
+        if getattr(objective, "latency_target_ms", None) is None:
+            return self.select(family, tuple(problem))
+        configs, _tree = self.family_tuning(family)
+        if len(configs) <= 1:
+            return self.select(family, tuple(problem))
+        fam = get_family(family)
+        model = fam.model_matrix or fam.perf_matrix
+        if model is None:
+            return self.select(family, tuple(problem))
+        try:
+            scores = np.asarray(model([tuple(problem)], list(configs), self.device))
+        except Exception:
+            return self.select(family, tuple(problem))
+        return configs[int(np.argmax(scores[0]))]
+
     def _attention_bucket_fallback(self, sq: int, skv: int, d: int) -> AttentionConfig:
         # Pick by KV-length bucket (untuned deployments).
         best = self.attention_configs[0]

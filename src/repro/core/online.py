@@ -149,6 +149,44 @@ class OnlinePolicy:
 
         return get_family(family).default_config
 
+    def select_for_objective(self, family: str, problem: tuple, objective):
+        """SLO-aware selection: exploration pauses under a latency target.
+
+        Gambling a decode step on an unmeasured arm is exactly the tail-
+        latency spike an SLO forbids, so a constrained selection serves the
+        best *measured* arm for the bucket (committed or mid-exploration
+        leader); buckets with no evidence yet defer to the prior's
+        objective-aware pick (or its plain selection).  Measurements resume
+        unchanged once the objective is lifted.
+        """
+        problem = tuple(problem)
+        if family == "matmul":
+            b = _bucket(problem)
+            hit = self._committed.get(b)
+            if hit is not None:
+                self.stats["slo_commit"] += 1
+                return hit
+            measured = [a for a in self._arms.get(b, []) if a.trials > 0]
+            if measured:
+                self.stats["slo_commit"] += 1
+                return min(measured, key=lambda a: a.mean).config
+            if self.prior is not None:
+                slo = getattr(self.prior, "select_for_objective", None)
+                if slo is not None:
+                    return slo(family, problem, objective)
+                return self.prior.select_matmul(*problem)
+            return self.candidates[0]
+        if self.prior is not None:
+            slo = getattr(self.prior, "select_for_objective", None)
+            if slo is not None:
+                return slo(family, problem, objective)
+        if family == "attention":
+            return self.select_attention(*problem)
+        from repro.core.families import get_family
+
+        attr = get_family(family).policy_attr
+        return self._prior_family_select(family, attr, problem)
+
     # -- continuous tuning ----------------------------------------------------
     def set_prior(self, prior: object | None) -> None:
         """Hot-swap the offline prior (a new :class:`Deployment` from retune).

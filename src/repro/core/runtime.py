@@ -38,6 +38,7 @@ cross-talk.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import threading
 from collections import OrderedDict, deque
@@ -53,6 +54,25 @@ QUARANTINE_BACKOFF = 4
 QUARANTINE_MAX_BACKOFF = 256
 
 _MISS = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """A serving objective consulted at kernel-selection time.
+
+    ``latency_target_ms`` is a per-token SLO: while an objective with a
+    target is installed (:meth:`KernelRuntime.set_objective`), selection
+    routes through the policy's ``select_for_objective(family, problem,
+    objective)`` — typically trading peak throughput for predicted latency
+    (e.g. the analytic-model-fastest deployed config instead of the
+    classifier's throughput pick, or pausing online exploration).  Policies
+    without ``select_for_objective`` are unaffected.
+    """
+
+    latency_target_ms: float | None = None
+
+    def __bool__(self) -> bool:
+        return self.latency_target_ms is not None
 
 
 class _RuntimeLocal(threading.local):
@@ -114,6 +134,8 @@ class KernelRuntime:
         self._swap_history: deque[tuple[str, object, int]] = deque(
             maxlen=DEFAULT_SWAP_HISTORY
         )
+        # -- SLO-aware selection (serving tier) --
+        self._objective: Objective | None = None
 
     def __repr__(self) -> str:
         with self._lock:
@@ -192,6 +214,30 @@ class KernelRuntime:
         """Snapshot of the registered per-device policies (name -> policy)."""
         with self._lock:
             return dict(self._device_policies)
+
+    # -- serving objective ----------------------------------------------------
+    def set_objective(self, objective: Objective | None) -> None:
+        """Install (or with ``None``/empty, clear) the serving objective.
+
+        Epoch-bumped like a policy swap: every dispatching thread drops its
+        shape and hook caches on its next selection, so objective-aware
+        selections never serve from (or pollute) the unconstrained cache.
+        The serving engine drives this from its SLO pressure loop; the
+        objective applies runtime-wide — one engine per runtime (the router
+        layout) keeps tenants isolated.
+        """
+        if objective is not None and not objective:
+            objective = None
+        with self._lock:
+            if objective == self._objective:
+                return
+            self._objective = objective
+            self._epoch += 1
+        self.clear_shape_cache()
+
+    def objective(self) -> Objective | None:
+        """The live serving objective (``None`` when unconstrained)."""
+        return self._objective
 
     def active_device(self) -> str | None:
         """Canonical name of the device whose registered policy is live."""
@@ -599,20 +645,26 @@ class KernelRuntime:
             self._selection_log.append((op, problem, cfg))
         return cfg
 
-    @staticmethod
-    def _policy_hook(pol, family: str):
+    def _policy_hook(self, pol, family: str):
         """Resolve the policy's selection callable for ``family``.
 
-        The method name comes from the family's registry-declared
-        ``policy_attr``; a policy may instead expose a generic
-        ``select(family, problem)``.  Returns a ``hook(problem)`` callable,
-        or ``None`` when the policy covers neither (the op runs its default
-        config).  Resolution depends only on (policy, family), so
-        :meth:`select_config` memoizes it per thread — the shape-cache fast
-        path never pays registry lookup or ``getattr``.
+        With a serving :class:`Objective` installed and a policy exposing
+        ``select_for_objective``, the hook routes through it (SLO-aware
+        selection); otherwise the method name comes from the family's
+        registry-declared ``policy_attr``, and a policy may instead expose a
+        generic ``select(family, problem)``.  Returns a ``hook(problem)``
+        callable, or ``None`` when the policy covers none of these (the op
+        runs its default config).  Resolution depends only on (policy,
+        family, objective) — and an objective change bumps the epoch, which
+        drops the per-thread hook cache — so :meth:`select_config` memoizes
+        it per thread and the shape-cache fast path never pays registry
+        lookup or ``getattr``.
         """
         from .families import get_family
 
+        hook = self._objective_hook(pol, family)
+        if hook is not None:
+            return hook
         meth = getattr(pol, get_family(family).policy_attr, None)
         if meth is not None:
             return lambda problem: meth(*problem)
@@ -620,6 +672,16 @@ class KernelRuntime:
         if generic is not None:
             return lambda problem: generic(family, problem)
         return None
+
+    def _objective_hook(self, pol, family: str):
+        """The SLO-aware selection callable, or None when unconstrained."""
+        obj = self._objective
+        if obj is None:
+            return None
+        slo = getattr(pol, "select_for_objective", None)
+        if slo is None:
+            return None
+        return lambda problem: slo(family, problem, obj)
 
     def select_config(self, family: str, problem: tuple):
         """Generic launcher-side selection for any registered family.
@@ -647,6 +709,11 @@ class KernelRuntime:
         pol = self._sync()
         if pol is None:
             return None
+        hook = self._objective_hook(pol, "matmul")
+        if hook is not None:
+            return self._select(
+                "matmul", (m, k, n, batch), pol, lambda: hook((m, k, n, batch))
+            )
         return self._select(
             "matmul", (m, k, n, batch), pol, lambda: pol.select_matmul(m, k, n, batch)
         )
@@ -656,6 +723,11 @@ class KernelRuntime:
         pol = self._sync()
         if pol is None:
             return None
+        hook = self._objective_hook(pol, "attention")
+        if hook is not None:
+            return self._select(
+                "attention", (sq, skv, d), pol, lambda: hook((sq, skv, d))
+            )
         return self._select(
             "attention", (sq, skv, d), pol, lambda: pol.select_attention(sq, skv, d)
         )

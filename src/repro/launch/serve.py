@@ -1,7 +1,8 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Brings up the slot-based serving engine with the tuned kernel deployment and
-runs a batch of synthetic requests through prefill + continuous decode.
+Brings up the paged serving engine with the tuned kernel deployment and
+drives a batch of synthetic requests through the submit/stream API
+(prefill + continuous decode, optional latency targets).
 """
 from __future__ import annotations
 
@@ -16,7 +17,7 @@ from repro.configs import registry
 from repro.core.retune import DEFAULT_DRIFT_THRESHOLD, DEFAULT_MIN_EVENTS
 from repro.core.runtime import KernelRuntime
 from repro.models.model import build_model
-from repro.serve.engine import Request, ServingEngine
+from repro.serve.engine import ServingEngine
 
 
 def main(argv=None) -> None:
@@ -27,6 +28,14 @@ def main(argv=None) -> None:
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=None, metavar="TOKENS",
+                    help="paged KV cache block size (divides --cache-len; "
+                         "default: one dense block per lane)")
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="total KV pool blocks (default: lanes * blocks/lane)")
+    ap.add_argument("--latency-target-ms", type=float, default=None,
+                    help="per-token latency SLO attached to every other "
+                         "request (exercises objective-aware selection)")
     ap.add_argument("--deployment", default=None, help="single-device Deployment json")
     ap.add_argument("--bundle", default=None,
                     help="multi-device DeploymentBundle json (auto-installs for this host)")
@@ -79,6 +88,7 @@ def main(argv=None) -> None:
 
     engine = ServingEngine(
         model, params, max_batch=args.max_batch, cache_len=args.cache_len,
+        block_size=args.block_size, n_blocks=args.n_blocks,
         extra_inputs=extra, bundle=bundle, device=args.serve_device, runtime=rt,
         retune_interval=args.retune_interval, drift_threshold=args.drift_threshold,
         retune_min_events=args.retune_min_events,
@@ -86,17 +96,28 @@ def main(argv=None) -> None:
     if bundle is not None:
         print(f"bundle installed: serving with the {engine.device!r} deployment")
     rng = np.random.default_rng(0)
-    reqs = [
-        Request(uid=i, prompt=rng.integers(0, cfg.vocab, size=8).astype(np.int32),
-                max_new_tokens=args.max_new_tokens)
+    t0 = time.time()
+    tickets = [
+        engine.submit(
+            rng.integers(0, cfg.vocab, size=8).astype(np.int32),
+            max_new_tokens=args.max_new_tokens,
+            latency_target_ms=args.latency_target_ms if i % 2 else None,
+        )
         for i in range(args.requests)
     ]
-    t0 = time.time()
-    status = engine.run(reqs)
+    status = engine.drain()
     dt = time.time() - t0
+    reqs = [t.request for t in tickets]
     toks = sum(len(r.output) for r in reqs)
     print(f"served {len(reqs)} requests, {toks} tokens, {dt:.2f}s "
           f"({toks / max(dt, 1e-9):.1f} tok/s), {engine.steps} decode steps")
+    pool = engine.pool.stats()
+    print(f"kv pool: {pool['n_blocks']} blocks x {pool['block_size']} tokens, "
+          f"{pool['used_blocks']} in use at drain ({pool['utilization']:.0%}), "
+          f"{status.preempted} requests preempted")
+    if engine.slo_events:
+        print(f"slo: {len(engine.slo_events)} mode transitions under "
+              f"latency target {args.latency_target_ms} ms")
     # Dispatch evidence: nonzero counters prove the traces consulted the
     # installed policy (the counters only move when a policy is live).
     stats = rt.shape_cache_stats()

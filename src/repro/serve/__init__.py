@@ -1,0 +1,33 @@
+"""Serving tier: paged KV cache, SLO-aware continuous batching, fleet router.
+
+The serving lifecycle in four lines (DESIGN.md §13)::
+
+    bundle = repro.load_bundle("fleet.json")
+    router = bundle.router(model, params)          # one engine per tuned device
+    ticket = router.submit(prompt, latency_target_ms=8.0)
+    for tok in ticket.tokens(): ...                # streams while the fleet runs
+
+Single-engine serving is ``rt.serve(model, params)`` on a
+:class:`~repro.core.runtime.KernelRuntime`; the :class:`Router` fronts one
+engine per device of a :class:`~repro.core.bundle.DeploymentBundle` with
+least-loaded, health- and SLO-aware dispatch.
+"""
+from repro.core.runtime import Objective
+
+from .engine import EngineStatus, Request, RetuneEvent, ServingEngine, Ticket
+from .kvpool import KVPool
+from .router import Router
+from .scheduler import Scheduler, SchedulerConfig
+
+__all__ = [
+    "EngineStatus",
+    "KVPool",
+    "Objective",
+    "Request",
+    "RetuneEvent",
+    "Router",
+    "Scheduler",
+    "SchedulerConfig",
+    "ServingEngine",
+    "Ticket",
+]

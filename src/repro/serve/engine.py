@@ -1,23 +1,47 @@
-"""Batched serving engine: slot-based continuous batching over a KV cache.
+"""Continuous-batching serving engine over a paged KV cache.
 
-The engine owns a fixed pool of ``max_batch`` cache slots of ``cache_len``
-tokens (static shapes => one compiled prefill fn and one compiled decode fn,
-reused for the whole serving lifetime — the same "few deployed kernels"
-economics as the paper's library setting; the ML-guided matmul selection in
-``repro.kernels.ops`` runs once at trace time for each of the two programs).
+The engine owns ``max_batch`` decode **lanes** backed by a block-allocated
+:class:`~repro.serve.kvpool.KVPool` (cache memory scales with live tokens,
+not slots), a priority/deadline :class:`~repro.serve.scheduler.Scheduler`
+with starvation aging and preemption, and per-width compiled decode programs
+(static shapes => a small set of compiled programs reused for the whole
+serving lifetime — the same "few deployed kernels" economics as the paper's
+library setting; ML-guided kernel selection runs once at trace time per
+program).
 
-Scheduling loop (``run``):
-  1. admit queued requests into free slots (prefill, one request at a time —
-     prefill shapes bucket by padded length);
-  2. one batched decode step advances *all* active slots;
-  3. finished sequences (EOS or max_new_tokens) free their slot.
+Serving surface (new code):
 
-Per-slot position/valid bookkeeping lives in numpy on the host; tokens and
-caches stay on device.
+    ticket = engine.submit(prompt, max_new_tokens=32,
+                           priority=1, latency_target_ms=8.0)
+    for tok in ticket.tokens():   # streams; drives engine.step() as needed
+        ...
+    status = engine.drain()       # run everything submitted to completion
+
+One ``engine.step()`` is one scheduling round: admit waiting requests into
+free lanes (prefill, bucketed by padded length), grow each active lane's
+block table by one block when decode crosses a block boundary (preempting
+the lowest-priority resident back to the wait queue — with block reclaim —
+when the pool runs dry), then one batched decode advances all active lanes
+at the smallest compiled width bucket that fits.
+
+``latency_target_ms`` threads an SLO into kernel selection: when a targeted
+request's recent per-token latency overruns its target, the engine installs
+an :class:`~repro.core.runtime.Objective` on its runtime (selection policies
+answer ``select_for_objective`` — e.g. a lower-latency kernel config instead
+of the throughput pick), caps admission below the current width bucket, and
+invalidates compiled programs so the next trace re-selects; it backs off
+with hysteresis once targeted lanes run comfortably under target.
+
+``engine.run(requests)`` — the seed batch API — remains as a deprecated
+shim over submit/drain with byte-identical outputs.  Per-lane bookkeeping
+lives in numpy on the host; tokens and caches stay on device.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import time
+import warnings
 from collections import deque
 
 import jax
@@ -26,6 +50,9 @@ import numpy as np
 
 from repro.core.retune import DEFAULT_DRIFT_THRESHOLD, DEFAULT_MIN_EVENTS
 
+from .kvpool import KVPool
+from .scheduler import Scheduler, SchedulerConfig
+
 
 @dataclasses.dataclass
 class Request:
@@ -33,12 +60,17 @@ class Request:
     prompt: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int = 16
     eos_id: int | None = None
+    priority: int = 0  # higher admits sooner (scheduler ages waiters up)
+    latency_target_ms: float | None = None  # per-token SLO -> kernel selection
     # filled by the engine
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    state: str = "queued"  # queued | active | done | starved
+    state: str = "queued"  # queued | active | preempted | done | starved
     truncated_tokens: int = 0  # prompt tokens dropped by sliding-window admit
     retries: int = 0  # kernel-fault retries this request survived
+    preemptions: int = 0  # times evicted back to the wait queue
+    token_ms: list[float] = dataclasses.field(default_factory=list)  # per-token latency
+    routed_to: str | None = None  # engine key a Router dispatched this to
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,15 +103,22 @@ class RetuneEvent:
 
 @dataclasses.dataclass(frozen=True)
 class EngineStatus:
-    """What ``ServingEngine.run`` actually finished (and what it didn't).
+    """What a drain/status snapshot finished (and what it didn't).
 
     ``exhausted`` means the step budget ran out with work left: ``in_flight``
-    requests hold slots mid-decode, ``queued`` never got a slot.  Both carry
-    ``done=False`` and a non-``"done"`` per-request ``state`` — checking
-    ``output`` alone cannot distinguish them once prefill has emitted tokens.
-    ``health`` is the engine's final serving-health state (``"healthy"`` /
-    ``"degraded"``): degraded while dispatch incidents are arriving or
-    configs sit in quarantine, healthy again once the window is clean.
+    requests hold lanes mid-decode, ``queued`` never got one (or lost one and
+    were never re-admitted).  Both carry ``done=False`` and a non-``"done"``
+    per-request ``state`` — checking ``output`` alone cannot distinguish them
+    once prefill has emitted tokens.  A request evicted back to the wait
+    queue counts **once**: in live snapshots it moves from ``in_flight`` to
+    ``preempted`` (state ``"preempted"``, excluded from ``queued``) and back
+    on re-admission, so ``completed + in_flight + queued + preempted``
+    partitions the epoch; a drain report instead uses ``preempted`` for how
+    many requests were evicted at least once while it served.  ``health`` is
+    the engine's serving-health
+    state (``"healthy"`` / ``"degraded"``): degraded while dispatch incidents
+    are arriving or configs sit in quarantine, healthy again once the window
+    is clean.
     """
 
     completed: int
@@ -88,6 +127,43 @@ class EngineStatus:
     steps: int
     exhausted: bool
     health: str = "healthy"
+    preempted: int = 0
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Streaming handle for one submitted request.
+
+    ``tokens()`` yields generated tokens as they land, driving
+    ``source.step()`` (the engine or router it was submitted to) whenever it
+    runs out of buffered output; it stops at EOS/completion, starvation, or
+    when the source reports no further progress is possible.
+    """
+
+    request: Request
+    source: object  # anything with .step() -> bool
+
+    @property
+    def done(self) -> bool:
+        return self.request.done
+
+    def tokens(self):
+        sent = 0
+        while True:
+            out = self.request.output
+            while sent < len(out):
+                yield out[sent]
+                sent += 1
+            if self.request.done or self.request.state == "starved":
+                return
+            if not self.source.step():
+                return
+
+    def result(self) -> list[int]:
+        """Block (stepping the source) until done; return the full output."""
+        for _ in self.tokens():
+            pass
+        return list(self.request.output)
 
 
 def _bucket(n: int, buckets: tuple[int, ...]) -> int:
@@ -95,6 +171,13 @@ def _bucket(n: int, buckets: tuple[int, ...]) -> int:
         if n <= b:
             return b
     return buckets[-1]
+
+
+def _recent_ms(req: Request, k: int = 3) -> float | None:
+    if not req.token_ms:
+        return None
+    xs = req.token_ms[-k:]
+    return sum(xs) / len(xs)
 
 
 class ServingEngine:
@@ -110,6 +193,14 @@ class ServingEngine:
         bundle=None,
         device: str | None = None,
         runtime=None,
+        block_size: int | None = None,
+        n_blocks: int | None = None,
+        scheduler: SchedulerConfig | None = None,
+        slo_aware: bool = True,
+        slo_patience: int = 4,
+        clock=None,
+        on_prefill=None,
+        on_decode=None,
         retune_interval: int | None = None,
         drift_threshold: float = DEFAULT_DRIFT_THRESHOLD,
         retune_min_events: int = DEFAULT_MIN_EVENTS,
@@ -142,13 +233,45 @@ class ServingEngine:
         self.prefill_buckets = prefill_buckets
         self.extra_inputs = extra_inputs or {}
 
-        self.cache = model.init_cache(max_batch, cache_len)
+        # Paged KV storage.  block_size=None keeps the dense layout (one
+        # cache_len-sized block per lane) — byte-identical to the seed
+        # engine's init_cache(max_batch, cache_len) pool.
+        self.pool = KVPool(
+            model, lanes=max_batch, cache_len=cache_len,
+            block_size=block_size, n_blocks=n_blocks,
+        )
+        self.scheduler = Scheduler(scheduler)
         self.positions = np.zeros(max_batch, dtype=np.int32)  # next position to write
         self.slots: list[Request | None] = [None] * max_batch
         self.steps = 0
+        self._uid = itertools.count()
+        self._epoch_requests: list[Request] = []
 
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        # Compiled decode programs, one per width bucket (powers of two up
+        # to max_batch): a lone straggler decodes at width 1, a full house
+        # at max_batch, without retracing in between.
+        buckets, w = [], 1
+        while w < max_batch:
+            buckets.append(w)
+            w *= 2
+        buckets.append(max_batch)
+        self._width_buckets = tuple(buckets)
+        self._decode_cache: dict[int, object] = {}
         self._prefill_cache = {}
+
+        # -- SLO-aware selection ---------------------------------------------
+        self.slo_aware = slo_aware
+        self.slo_patience = max(int(slo_patience), 1)
+        self.slo_events: list[tuple[int, str, float | None]] = []
+        self._slo_mode = False
+        self._slo_cap: int | None = None
+        self._slo_ok = 0
+        self._step_ms: deque = deque(maxlen=8)  # recent per-step wall times
+        # Injectable clock + hooks let the serving benchmark drive a
+        # deterministic simulated timeline; production uses the wall clock.
+        self._clock = clock if clock is not None else time.perf_counter
+        self.on_prefill = on_prefill
+        self.on_decode = on_decode
 
         # -- continuous tuning loop (DESIGN.md §8) ---------------------------
         self.retune_interval = retune_interval
@@ -171,10 +294,15 @@ class ServingEngine:
             # included, so the histogram reflects real traffic frequencies).
             self.runtime.set_selection_logging(True)
 
+    @property
+    def cache(self):
+        """Dense read view of all lanes (seed-engine layout), for inspection."""
+        return self.pool.gather(range(self.max_batch))
+
     def dispatch_stats(self) -> dict:
         """Kernel-selection shape-cache counters (convenience passthrough).
 
-        Each prefill bucket and the decode program retrace the model, so
+        Each prefill bucket and decode width bucket retrace the model, so
         repeated admissions re-run trace-time kernel selection; the runtime's
         shape cache (DESIGN.md §6) turns those repeats into dict hits.  Note
         the counters are per *thread within the runtime*: call from the
@@ -183,8 +311,8 @@ class ServingEngine:
         """
         return self.runtime.shape_cache_stats()
 
-    # -- slot admission -------------------------------------------------------
-    def _free_slot(self) -> int | None:
+    # -- lane admission -------------------------------------------------------
+    def _free_lane(self) -> int | None:
         for i, r in enumerate(self.slots):
             if r is None:
                 return i
@@ -196,9 +324,22 @@ class ServingEngine:
             self._prefill_cache[plen] = jax.jit(fn)
         return self._prefill_cache[plen]
 
+    def _seq_tokens(self, req: Request) -> np.ndarray:
+        """Tokens a (re-)admission must prefill: prompt plus anything already
+        generated (a preempted request resumes by re-prefilling both — the
+        last position's argmax is then exactly the next token it needed)."""
+        prompt = np.asarray(req.prompt, dtype=np.int32)
+        if req.output:
+            return np.concatenate([prompt, np.asarray(req.output, dtype=np.int32)])
+        return prompt
+
+    def _fits(self, req: Request) -> bool:
+        plen = _bucket(len(self._seq_tokens(req)), self.prefill_buckets)
+        return self.pool.can_fit(plen)
+
     def _admit(self, req: Request, slot: int) -> None:
-        plen = _bucket(len(req.prompt), self.prefill_buckets)
-        tail = np.asarray(req.prompt, dtype=np.int32)
+        plen = _bucket(len(self._seq_tokens(req)), self.prefill_buckets)
+        tail = self._seq_tokens(req)
         if len(tail) > plen:
             # Sliding-window truncation: a prompt longer than the largest
             # prefill bucket keeps its most recent plen tokens (causal decode
@@ -218,52 +359,224 @@ class ServingEngine:
                 retrace=lambda: self._prefill_cache.pop(plen, None),
                 request=req,
             )
-        # Scatter the single-sequence prefill cache into this slot.
-        self.cache = jax.tree.map(
-            lambda full, one: _scatter_slot(full, one, slot, self.max_batch),
-            self.cache,
-            cache1,
-        )
+        # Back the lane with blocks and scatter the single-sequence prefill
+        # cache into them (the lane's previous tenant, if any, is reclaimed).
+        self.pool.release(slot)
+        if not self.pool.ensure(slot, plen):
+            raise RuntimeError(
+                f"admitted request {req.uid} with no blocks for plen={plen}"
+            )
+        self.pool.admit(slot, cache1)
+        if self.on_prefill is not None:
+            self.on_prefill(plen)
         first = int(jnp.argmax(logits[0, -1]))
         req.output.append(first)
         req.state = "active"
         self.slots[slot] = req
         self.positions[slot] = plen
 
-    # -- decode ---------------------------------------------------------------
-    def _decode_all(self) -> None:
-        tokens = np.zeros((self.max_batch, 1), dtype=np.int32)
-        for i, r in enumerate(self.slots):
-            if r is not None:
-                tokens[i, 0] = r.output[-1]
-        with self.runtime.activate():  # trace-time selections hit OUR runtime
-            logits, self.cache = self._run_program(
-                "engine.decode",
-                lambda: self._decode(
-                    self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.positions)
-                ),
-                retrace=self._rejit_decode,
-            )
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        for i, r in enumerate(self.slots):
-            if r is None:
+    def _preempt(self, lane: int) -> Request:
+        """Evict the lane's resident back to the wait queue, reclaiming its
+        blocks; it keeps its output and re-admits via prompt+output prefill."""
+        req = self.slots[lane]
+        self.slots[lane] = None
+        self.pool.release(lane)
+        req.state = "preempted"
+        req.preemptions += 1
+        self.scheduler.submit(req, step=self.steps)
+        return req
+
+    def _preempt_for_admission(self) -> Request | None:
+        """Admission-time preemption: a waiter that outranks the weakest
+        active resident by the configured gap may take its blocks."""
+        best = self.scheduler.peek_best(self.steps)
+        if best is None:
+            return None
+        running = [r for r in self.slots if r is not None]
+        victim = self.scheduler.pick_victim(running, self.steps)
+        if victim is None:
+            return None
+        gap = self.scheduler.config.preempt_priority_gap
+        if self.scheduler.effective_priority(best, self.steps) < victim.priority + gap:
+            return None
+        self._preempt(self.slots.index(victim))
+        if self._fits(best):
+            self.scheduler.remove(best)
+            return best
+        return None
+
+    def _grow_active(self) -> None:
+        """Every active lane must own the block its next token writes into;
+        under pool pressure the scheduler's victim (lowest priority, most
+        emitted tokens) is preempted until the allocation fits."""
+        for lane, req in enumerate(self.slots):
+            if req is None:
                 continue
-            self.positions[i] += 1
-            tok = int(nxt[i])
+            need = int(self.positions[lane]) + 1
+            while not self.pool.ensure(lane, need):
+                running = [r for r in self.slots if r is not None]
+                victim = self.scheduler.pick_victim(running, self.steps)
+                if victim is None:
+                    break
+                vlane = self.slots.index(victim)
+                self._preempt(vlane)
+                if vlane == lane:
+                    break  # preempted ourselves; the lane is empty now
+
+    # -- decode ---------------------------------------------------------------
+    def _width(self, n_active: int) -> int:
+        for b in self._width_buckets:
+            if n_active <= b:
+                return b
+        return self._width_buckets[-1]
+
+    def _decode_fn(self, width: int):
+        if width not in self._decode_cache:
+            self._decode_cache[width] = jax.jit(
+                self.model.decode_step, donate_argnums=(1,)
+            )
+        return self._decode_cache[width]
+
+    def _decode_active(self) -> list[Request]:
+        """One batched decode over the compacted active lanes, at the
+        smallest compiled width bucket that fits; returns the requests that
+        received a token."""
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return []
+        width = self._width(len(active))
+        # Pad the batch to the bucket with idle lanes (their block tables are
+        # empty or retired, so their writes land in scratch / reclaimed rows
+        # — same as the seed engine decoding its idle slots).
+        idle = [i for i, r in enumerate(self.slots) if r is None]
+        sel = active + idle[: width - len(active)]
+        tokens = np.zeros((width, 1), dtype=np.int32)
+        for row, lane in enumerate(active):
+            tokens[row, 0] = self.slots[lane].output[-1]
+        pos = self.positions[sel]
+        with self.runtime.activate():  # trace-time selections hit OUR runtime
+            logits, new_cache = self._run_program(
+                "engine.decode",
+                lambda: self._decode_fn(width)(
+                    self.params,
+                    self.pool.gather(sel),  # re-gathered on retry: donation-safe
+                    jnp.asarray(tokens),
+                    jnp.asarray(pos),
+                ),
+                retrace=lambda: self._decode_cache.pop(width, None),
+            )
+        self.pool.scatter(sel, new_cache)
+        if self.on_decode is not None:
+            self.on_decode(width)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        got = []
+        for row, lane in enumerate(active):
+            r = self.slots[lane]
+            self.positions[lane] += 1
+            tok = int(nxt[row])
             r.output.append(tok)
+            got.append(r)
             if (
                 len(r.output) >= r.max_new_tokens
                 or (r.eos_id is not None and tok == r.eos_id)
-                or self.positions[i] >= self.cache_len - 1
+                or self.positions[lane] >= self.cache_len - 1
             ):
                 r.done = True
                 r.state = "done"
-                self.slots[i] = None
+                self.slots[lane] = None
+                # Lazy reclaim: blocks stay readable (pool.retire) until a
+                # later admission actually needs them.
+                self.pool.retire(lane)
         self.steps += 1
+        return got
+
+    # -- SLO pressure (objective-aware selection) -----------------------------
+    def _admit_blocked(self) -> bool:
+        if not self._slo_mode or self._slo_cap is None:
+            return False
+        return sum(s is not None for s in self.slots) >= self._slo_cap
+
+    def _enter_slo(self, target: float) -> None:
+        from repro.core.runtime import Objective
+
+        self._slo_mode = True
+        self._slo_ok = 0
+        # Cap admissions below the current width bucket so the batch shrinks
+        # as residents finish instead of refilling.
+        cur = self._width(sum(s is not None for s in self.slots))
+        cap = 1
+        for b in self._width_buckets:
+            if b < cur:
+                cap = b
+        self._slo_cap = cap
+        self.slo_events.append((self.steps, "enter", target))
+        self.runtime.set_objective(Objective(latency_target_ms=float(target)))
+        # Invalidate compiled programs: the next trace re-runs kernel
+        # selection under the objective (select_for_objective).
+        self._prefill_cache.clear()
+        self._decode_cache.clear()
+
+    def _exit_slo(self) -> None:
+        self._slo_mode = False
+        self._slo_cap = None
+        self._slo_ok = 0
+        self.slo_events.append((self.steps, "exit", None))
+        self.runtime.set_objective(None)
+        self._prefill_cache.clear()
+        self._decode_cache.clear()
+
+    def _update_slo(self) -> None:
+        """Hysteresis loop around the latency objective.
+
+        Enter SLO mode when the engine's recent per-step time (or a targeted
+        resident's own recent per-token latency) overruns the target of any
+        latency-targeted request — *resident or queued*: a queued target
+        about to be admitted into an over-budget batch would blow its SLO on
+        its very first token, so the constraint lands before admission, not
+        after the damage.  Exit when no targeted work remains anywhere, or
+        after ``slo_patience`` consecutive comfortable (<0.7x target) steps.
+        """
+        if not self.slo_aware:
+            return
+        resident = [
+            r for r in self.slots if r is not None and r.latency_target_ms is not None
+        ]
+        queued = [
+            r for r in self.scheduler.waiting() if r.latency_target_ms is not None
+        ]
+        if not self._slo_mode:
+            recent = list(self._step_ms)[-3:]
+            step_ms = sum(recent) / len(recent) if recent else None
+            at_risk = [
+                r for r in resident
+                if _recent_ms(r) is not None and _recent_ms(r) > r.latency_target_ms
+            ]
+            if step_ms is not None:
+                at_risk += [
+                    r for r in resident + queued if r.latency_target_ms < step_ms
+                ]
+            if at_risk:
+                self._enter_slo(min(r.latency_target_ms for r in at_risk))
+            return
+        if not resident and not queued:
+            self._exit_slo()
+            return
+        # A targeted request still waiting admission holds the mode: dropping
+        # the cap now would re-widen the batch right before it lands.
+        calm = bool(resident) and all(
+            _recent_ms(r) is None or _recent_ms(r) < 0.7 * r.latency_target_ms
+            for r in resident
+        )
+        if calm:
+            self._slo_ok += 1
+            if self._slo_ok >= self.slo_patience:
+                self._exit_slo()
+        else:
+            self._slo_ok = 0
 
     # -- failure containment (DESIGN.md §11) -----------------------------------
     def _rejit_decode(self) -> None:
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._decode_cache.clear()
 
     def _run_program(self, site: str, fn, *, retrace, request: Request | None = None):
         """Run one compiled program with per-request retry-on-kernel-fault.
@@ -316,7 +629,7 @@ class ServingEngine:
         the most recent pre-swap deployment is reinstalled from the bounded
         swap history (one rollback per swap: the counter re-arms only on the
         next swap).  Compiled programs are invalidated the same way a swap
-        does; in-flight requests keep their slots.
+        does; in-flight requests keep their lanes.
         """
         from repro.core.faults import incident
 
@@ -349,8 +662,8 @@ class ServingEngine:
     def maybe_retune(self, *, force: bool = False, online=None) -> RetuneEvent | None:
         """Telemetry -> drift check -> incremental retune -> policy hot-swap.
 
-        Called between ``run()`` decode steps when ``retune_interval`` is set,
-        or directly from an operator's background hook (the runtime's policy
+        Called between decode steps when ``retune_interval`` is set, or
+        directly from an operator's background hook (the runtime's policy
         registry is lock+epoch protected, so a swap from another thread
         reaches the serving thread atomically — and only threads dispatching
         against *this engine's runtime*; other tenants' runtimes never see
@@ -361,7 +674,7 @@ class ServingEngine:
         measurements ride into the snapshot, and after a swap it adopts the
         retuned deployment as its prior (``set_prior``).
 
-        The hot swap is zero-downtime: KV caches, slots, and in-flight
+        The hot swap is zero-downtime: KV blocks, lanes, and in-flight
         requests are untouched; compiled programs for *already-traced* shapes
         keep their old kernels until natural retrace, while the cleared
         prefill/decode jit wrappers make every subsequent trace consult the
@@ -461,10 +774,10 @@ class ServingEngine:
         rt.clear_selection_log()  # fresh telemetry window for the new policy
         # Invalidate this engine's compiled programs so the next admission /
         # decode trace re-runs kernel selection under the swapped-in policy.
-        # Engine state (cache pool, slots, positions) survives: in-flight
+        # Engine state (block pool, lanes, positions) survives: in-flight
         # requests continue without a drop, paying only a retrace.
         self._prefill_cache.clear()
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._rejit_decode()
         worst_retuned = max((reports[f] for f in to_retune), key=lambda r: r.score)
         ev = RetuneEvent(self.steps, worst_retuned.score, worst_retuned.unseen_fraction,
                          True, any(r.triggered for r in reports.values()),
@@ -474,44 +787,158 @@ class ServingEngine:
         return ev
 
     # -- public ---------------------------------------------------------------
-    def run(self, requests: list[Request], *, max_steps: int = 10_000) -> EngineStatus:
-        """Serve a request list with continuous batching until done or budget.
+    def submit(
+        self,
+        prompt,
+        *,
+        max_new_tokens: int = 16,
+        eos_id: int | None = None,
+        priority: int = 0,
+        latency_target_ms: float | None = None,
+        uid: int | None = None,
+    ) -> Ticket:
+        """Enqueue one prompt; returns a streaming :class:`Ticket`."""
+        req = Request(
+            uid=uid if uid is not None else next(self._uid),
+            prompt=np.asarray(prompt, dtype=np.int32),
+            max_new_tokens=max_new_tokens,
+            eos_id=eos_id,
+            priority=priority,
+            latency_target_ms=latency_target_ms,
+        )
+        return self.submit_request(req)
 
-        Returns an :class:`EngineStatus`.  When the ``max_steps`` budget is
-        exhausted, unfinished requests are NOT silently returned as results:
-        in-flight ones keep ``state="active"`` and queued ones are marked
-        ``state="starved"`` (both stay ``done=False``), so callers can retry
-        or surface them even though partial ``output`` tokens exist.
+    def submit_request(self, req: Request) -> Ticket:
+        """Enqueue a pre-built :class:`Request` (advanced / legacy path)."""
+        self.scheduler.submit(req, step=self.steps)
+        self._epoch_requests.append(req)
+        return Ticket(req, self)
+
+    def pending(self) -> bool:
+        """Work remains: requests waiting or lanes mid-decode."""
+        return bool(len(self.scheduler) or any(s is not None for s in self.slots))
+
+    def step(self) -> bool:
+        """One scheduling round (admit -> grow/preempt -> decode -> watchdogs).
+
+        Returns False when no progress was possible (nothing admitted and no
+        active lane decoded) — callers looping on ``step()`` should stop.
         """
-        queue = list(requests)
-        while (queue or any(s is not None for s in self.slots)) and self.steps < max_steps:
-            while queue:
-                slot = self._free_slot()
-                if slot is None:
+        t0 = self._clock()
+        # SLO check runs BEFORE admission: it sees the same step-time history
+        # it would at the end of the previous step, but entering now means
+        # this step's admissions and traces already run under the cap and the
+        # latency objective (no full-width burst right as a target lands).
+        self._update_slo()
+        emitted: list[Request] = []
+        preempted_once = False
+        while len(self.scheduler):
+            lane = self._free_lane()
+            if lane is None or self._admit_blocked():
+                break
+            req = self.scheduler.pop_next(self.steps, fits=self._fits)
+            if req is None:
+                if preempted_once:
                     break
-                self._admit(queue.pop(0), slot)
-            if any(s is not None for s in self.slots):
-                self._decode_all()
-            self._update_health()
-            self.maybe_rollback()
-            if (
-                self.retune_interval is not None
-                and self.steps - self._last_retune_check >= self.retune_interval
-            ):
-                self._last_retune_check = self.steps
-                self.maybe_retune()
-        exhausted = bool(queue or any(s is not None for s in self.slots))
-        for r in queue:
+                preempted_once = True
+                req = self._preempt_for_admission()
+                if req is None:
+                    break
+                lane = self._free_lane()
+            self._admit(req, lane)
+            emitted.append(req)
+        self._grow_active()
+        decoded = self._decode_active()
+        emitted.extend(decoded)
+        self._update_health()
+        self.maybe_rollback()
+        if (
+            self.retune_interval is not None
+            and self.steps - self._last_retune_check >= self.retune_interval
+        ):
+            self._last_retune_check = self.steps
+            self.maybe_retune()
+        dt_ms = (self._clock() - t0) * 1e3
+        self._step_ms.append(dt_ms)
+        for r in emitted:
+            r.token_ms.append(dt_ms)
+        return bool(emitted)
+
+    def status(self) -> EngineStatus:
+        """Live snapshot over this serving epoch (since the last drain).
+
+        Every outstanding request is counted exactly once:
+        ``completed + in_flight + queued + preempted`` partitions the epoch.
+        Evicted waiters show up in ``preempted`` (state ``"preempted"``), not
+        in ``queued``; once re-admitted they move back to ``in_flight``.
+        """
+        reqs = self._epoch_requests
+        waiting = self.scheduler.waiting()
+        preempted_now = sum(1 for r in waiting if r.state == "preempted")
+        in_flight = sum(s is not None for s in self.slots)
+        return EngineStatus(
+            completed=sum(r.done for r in reqs),
+            in_flight=in_flight,
+            queued=len(waiting) - preempted_now,
+            steps=self.steps,
+            exhausted=bool(waiting or in_flight),
+            health=self.health,
+            preempted=preempted_now,
+        )
+
+    def drain(self, *, max_steps: int = 10_000) -> EngineStatus:
+        """Serve everything submitted until done or the step budget runs out.
+
+        When the ``max_steps`` budget is exhausted, unfinished requests are
+        NOT silently returned as results: in-flight ones keep
+        ``state="active"`` and waiting ones (queued or preempted) are marked
+        ``state="starved"`` and dropped from the queue (both stay
+        ``done=False``), so callers can retry or surface them even though
+        partial ``output`` tokens exist.  Closes the serving epoch: the next
+        drain reports only requests submitted after this one (in-flight
+        survivors carry over).  The terminal ``preempted`` field reports how
+        many of the epoch's requests were evicted at least once (live
+        :meth:`status` snapshots instead count requests *currently* awaiting
+        re-admission).
+        """
+        while self.pending() and self.steps < max_steps:
+            if not self.step():
+                break
+        exhausted = self.pending()
+        starved = self.scheduler.clear()
+        for r in starved:
             r.state = "starved"
         self._update_health()
-        return EngineStatus(
-            completed=sum(r.done for r in requests),
+        reqs = self._epoch_requests
+        status = EngineStatus(
+            completed=sum(r.done for r in reqs),
             in_flight=sum(s is not None for s in self.slots),
-            queued=len(queue),
+            queued=len(starved),
             steps=self.steps,
             exhausted=exhausted,
             health=self.health,
+            preempted=sum(1 for r in reqs if r.preemptions),
         )
+        self._epoch_requests = [r for r in reqs if r.state == "active"]
+        return status
+
+    def run(self, requests: list[Request], *, max_steps: int = 10_000) -> EngineStatus:
+        """Deprecated batch API: submit every request, then drain.
+
+        Byte-identical to the seed engine's loop (admission order, bucketing,
+        decode semantics); new code should use :meth:`submit` / :meth:`step` /
+        :meth:`drain` (or a :class:`repro.serve.Router` across devices).
+        """
+        warnings.warn(
+            "ServingEngine.run(requests) is deprecated; use "
+            "engine.submit(...) -> Ticket plus engine.drain() "
+            "(repro.serve submit/stream API)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        for r in requests:
+            self.submit_request(r)
+        return self.drain(max_steps=max_steps)
 
 
 def _batch_extra(key: str, v) -> jax.Array:
@@ -532,13 +959,17 @@ def _batch_extra(key: str, v) -> jax.Array:
 
 
 def _scatter_slot(full: jax.Array, one: jax.Array, slot: int, max_batch: int) -> jax.Array:
-    """Write a batch-1 cache entry into batch slot ``slot`` of the pool.
+    """Write a batch-1 cache entry into batch slot ``slot`` of a dense pool.
 
     Cache leaves carry batch either at axis 0 (B, ...) or axis 1 (L, B, ...);
     the batch axis is the one sized ``max_batch`` in the pool and 1 in the
     prefill output.  Matching against the *pool size* (not shape inequality)
     keeps the write live when ``max_batch == 1``, where pool and prefill
     shapes coincide and an inequality guard silently drops the cache.
+
+    (The engine itself now scatters through :class:`KVPool`, whose probe
+    classification generalises this axis guessing; kept as the dense
+    reference semantics — tests assert KVPool parity against it.)
     """
     if one.ndim != full.ndim:
         raise ValueError(f"cache rank mismatch {one.shape} vs {full.shape}")

@@ -4,9 +4,10 @@ moves).
 
 The snapshot covers the four entry layers of the redesigned API:
 ``repro`` (the facade), ``repro.core`` (the tuning pipeline),
-``repro.kernels.ops`` (dispatch + the deprecated global shims), and
+``repro.kernels.ops`` (dispatch + the deprecated global shims),
 ``repro.core.faults`` (the failure-containment layer, which also absorbed
-the former ``repro.ft.runtime`` training-side fault-tolerance helpers).
+the former ``repro.ft.runtime`` training-side fault-tolerance helpers), and
+``repro.serve`` (the fleet serving tier: paged KV pool, scheduler, router).
 """
 import importlib
 
@@ -15,11 +16,14 @@ import pytest
 REPRO_ALL = [
     "Deployment",
     "DeploymentBundle",
+    "EngineStatus",
     "FaultPlan",
     "KernelRuntime",
     "Request",
+    "Router",
     "ServingEngine",
     "TelemetrySnapshot",
+    "Ticket",
     "__version__",
     "current_runtime",
     "default_runtime",
@@ -112,6 +116,19 @@ OPS_ALL = [
     "set_shape_cache_cap",
 ]
 
+SERVE_ALL = [
+    "EngineStatus",
+    "KVPool",
+    "Objective",
+    "Request",
+    "RetuneEvent",
+    "Router",
+    "Scheduler",
+    "SchedulerConfig",
+    "ServingEngine",
+    "Ticket",
+]
+
 FAULTS_ALL = [
     "FAULT_KINDS",
     "ElasticPlan",
@@ -137,8 +154,10 @@ FAULTS_ALL = [
         ("repro.core", CORE_ALL),
         ("repro.kernels.ops", OPS_ALL),
         ("repro.core.faults", FAULTS_ALL),
+        ("repro.serve", SERVE_ALL),
     ],
-    ids=["repro", "repro.core", "repro.kernels.ops", "repro.core.faults"],
+    ids=["repro", "repro.core", "repro.kernels.ops", "repro.core.faults",
+         "repro.serve"],
 )
 def test_public_surface_frozen(module, snapshot):
     mod = importlib.import_module(module)
@@ -150,7 +169,7 @@ def test_public_surface_frozen(module, snapshot):
 
 
 @pytest.mark.parametrize(
-    "module", ["repro", "repro.core", "repro.kernels.ops"],
+    "module", ["repro", "repro.core", "repro.kernels.ops", "repro.serve"],
 )
 def test_all_names_resolve(module):
     mod = importlib.import_module(module)

@@ -1,0 +1,176 @@
+"""Fleet router tests: dispatch policy, aggregation, streaming, bundle wiring.
+
+Dispatch is pure (``router.dispatch`` has no side effects), so the policy
+tests poke engine state directly; the end-to-end tests drive real toy-model
+engines and one small two-device tuned bundle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.router import Router
+
+
+class ToyModel:
+    """Echo+1 LM (see test_serve_engine): next token = last + 1 mod vocab."""
+
+    vocab = 17
+
+    def init_cache(self, b, cache_len):
+        return {
+            "k": jnp.zeros((b, cache_len), jnp.float32),
+            "mem": jnp.zeros((2, b, 4), jnp.float32),
+        }
+
+    def prefill(self, params, batch, cache_len):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache = self.init_cache(b, cache_len)
+        cache["k"] = cache["k"].at[:, :s].set(tokens.astype(jnp.float32))
+        logits = jax.nn.one_hot((tokens[:, -1:] + 1) % self.vocab, self.vocab)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, positions):
+        b = tokens.shape[0]
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[jnp.arange(b), positions].set(
+            tokens[:, 0].astype(jnp.float32)
+        )
+        logits = jax.nn.one_hot((tokens + 1) % self.vocab, self.vocab)
+        return logits, cache
+
+
+def _engine(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("cache_len", 32)
+    kw.setdefault("prefill_buckets", (8, 16))
+    return ServingEngine(ToyModel(), params={}, **kw)
+
+
+def _router(n=2):
+    return Router({f"dev{i}": _engine() for i in range(n)}, name="test")
+
+
+def _prompt(n=4, start=3):
+    return np.arange(start, start + n, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# dispatch policy
+# ---------------------------------------------------------------------------
+def test_dispatch_least_loaded_with_name_tiebreak():
+    router = _router()
+    assert router.dispatch() == "dev0"  # tie: lexicographic
+    router.engines["dev0"].submit(_prompt())
+    assert router.dispatch() == "dev1"  # dev0 now has queue occupancy
+    router.engines["dev1"].submit(_prompt())
+    router.engines["dev1"].submit(_prompt())
+    assert router.dispatch() == "dev0"
+
+
+def test_dispatch_avoids_degraded_engines():
+    router = _router()
+    router.engines["dev0"].health = "degraded"
+    assert router.dispatch() == "dev1"
+    # a fully degraded fleet still serves (least-loaded among degraded)
+    router.engines["dev1"].health = "degraded"
+    assert router.dispatch() == "dev0"
+    assert router.status().health == "degraded"
+
+
+def test_dispatch_routes_slo_traffic_away_from_pressured_engines():
+    router = _router()
+    router.engines["dev0"]._slo_mode = True
+    # untargeted traffic still balances on load (dev0 is emptier or tied)
+    assert router.dispatch() == "dev0"
+    # latency-targeted traffic avoids the width-capped engine
+    assert router.dispatch(latency_target_ms=5.0) == "dev1"
+    # unless every engine is under pressure
+    router.engines["dev1"]._slo_mode = True
+    assert router.dispatch(latency_target_ms=5.0) == "dev0"
+
+
+def test_submit_tags_route_and_balances():
+    router = _router()
+    tickets = [router.submit(_prompt(), max_new_tokens=4) for _ in range(4)]
+    routes = [t.request.routed_to for t in tickets]
+    assert set(routes) == {"dev0", "dev1"}  # spread, not piled on one engine
+    status = router.drain()
+    assert status.completed == 4 and not status.exhausted
+    assert all(t.done for t in tickets)
+
+
+# ---------------------------------------------------------------------------
+# serving surface
+# ---------------------------------------------------------------------------
+def test_router_ticket_streams_across_the_fleet():
+    router = _router()
+    # Park work on BOTH engines; streaming one ticket must advance the other
+    # engine too (the ticket steps the router, not a single engine).
+    t0 = router.submit(_prompt(), max_new_tokens=5)
+    t1 = router.submit(_prompt(start=7), max_new_tokens=5)
+    assert t0.request.routed_to != t1.request.routed_to
+    toks = list(t0.tokens())
+    assert len(toks) == 5 and t0.done
+    assert len(t1.request.output) > 0  # fleet progressed while we streamed
+    router.drain()
+    assert t1.done
+
+
+def test_submit_request_respects_slo_dispatch():
+    router = _router()
+    router.engines["dev0"]._slo_mode = True
+    req = Request(uid=99, prompt=_prompt(), max_new_tokens=3,
+                  latency_target_ms=50.0)
+    ticket = router.submit_request(req)
+    assert req.routed_to == "dev1"
+    assert ticket.result() == req.output and req.done
+
+
+def test_drain_aggregates_per_engine_statuses():
+    router = _router()
+    for i in range(5):
+        router.submit(_prompt(start=2 + i), max_new_tokens=3)
+    status = router.drain()
+    assert status.completed == 5
+    assert status.in_flight == 0 and status.queued == 0
+    per_engine = [router.engines[k].steps for k in sorted(router.engines)]
+    assert status.steps == max(per_engine)  # wall-clock analogue, not the sum
+    assert status.health == "healthy"
+    assert router.healths() == {"dev0": "healthy", "dev1": "healthy"}
+
+
+def test_router_rejects_empty_fleet():
+    with pytest.raises(ValueError):
+        Router({})
+
+
+def test_router_from_engine_iterable_keys_by_position():
+    engines = [_engine(), _engine()]
+    router = Router(engines)
+    assert sorted(router.engines) == ["engine0", "engine1"]
+
+
+# ---------------------------------------------------------------------------
+# bundle.router() wiring
+# ---------------------------------------------------------------------------
+def test_bundle_router_builds_isolated_engines():
+    from repro.core.tuner import tune_fleet
+
+    fleet = tune_fleet(["granite-8b"], device_names=("tpu_v5e", "tpu_v4"),
+                       n_kernels=2, max_problems=15)
+    bundle = fleet.bundle
+    router = bundle.router(ToyModel(), params={}, max_batch=2, cache_len=32,
+                           block_size=8, prefill_buckets=(8, 16))
+    assert sorted(router.engines) == ["tpu_v4", "tpu_v5e"]
+    runtimes = {eng.runtime for eng in router.engines.values()}
+    assert len(runtimes) == 2  # one isolated KernelRuntime per device
+    for dev, eng in router.engines.items():
+        assert eng.runtime.active_device() == dev
+    tickets = [router.submit(_prompt(start=1 + i), max_new_tokens=3)
+               for i in range(4)]
+    status = router.drain()
+    assert status.completed == 4
+    assert {t.request.routed_to for t in tickets} == {"tpu_v4", "tpu_v5e"}
