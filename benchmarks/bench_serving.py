@@ -20,6 +20,19 @@ touches the numbers):
     targeted requests must improve (``serving_slo_p99_improvement`` >= 1.0)
     at <= 5% throughput cost (``serving_slo_throughput_ratio`` >= 0.95).
 
+  * **prefix sharing** — a shared-system-prompt workload served with
+    ``prefix_sharing`` on and off at *equal KV memory*.  Aliasing the shared
+    blocks both skips the redundant prefill work and frees the pool to host
+    more concurrent decode lanes, so ``serving_prefix_share_speedup`` must
+    stay >= 1.5x (hard bound).
+
+  * **chunked prefill** — steady decode traffic with occasional very long
+    prompts, served monolithically (the legacy regime) vs in scheduler-
+    budgeted chunks.  The monolithic prefill stalls every decode lane for
+    the whole prompt; chunks interleave, so the decode-token p99 must
+    improve >= 1.3x (``serving_chunked_p99_improvement``) at >= 95% of the
+    monolithic throughput (``serving_chunked_throughput_ratio``).
+
 The cost model is the interesting part: per decode step the engine's
 ``on_decode`` hook *actually queries the runtime's kernel selection* for the
 step's GEMM and advances the clock by that config's cost.  The SLO win is
@@ -111,6 +124,29 @@ class _SimLM:
         return logits, cache
 
 
+class _ChunkSimLM(_SimLM):
+    """Sim LM that also speaks the chunked-prefill protocol, opting the
+    engine into the streaming regime (left-aligned, prefix-shareable)."""
+
+    def supports_chunked_prefill(self):
+        return True
+
+    def prefill_chunk(self, params, cache, tokens, start, last_row=None):
+        cache = dict(cache)
+        pos = start + jnp.arange(tokens.shape[1])
+        cache["k"] = cache["k"].at[:, pos].set(
+            tokens.astype(jnp.float32), mode="drop"
+        )
+        if last_row is None:
+            last = tokens[:, -1:]
+        else:
+            last = jax.lax.dynamic_slice_in_dim(
+                tokens, jnp.asarray(last_row, jnp.int32), 1, axis=1
+            )
+        logits = jax.nn.one_hot((last + 1) % self.vocab, self.vocab)
+        return logits, cache
+
+
 @dataclasses.dataclass
 class _Arrival:
     arrival_s: float
@@ -148,14 +184,15 @@ def make_workload(
     return out
 
 
-def _run_workload(workload, *, label, slo_aware=True, **engine_kwargs):
+def _run_workload(workload, *, label, slo_aware=True, model=None,
+                  prefill_cost=PREFILL_COST_MS, **engine_kwargs):
     """Serve one workload on a fresh engine/runtime/clock; return stats."""
     clock = SimClock()
     rt = KernelRuntime(name=f"bench-serving-{label}")
     rt.install(_BenchPolicy())
 
     def on_prefill(plen):
-        base, per_tok = PREFILL_COST_MS
+        base, per_tok = prefill_cost
         clock.advance(base + per_tok * plen)
 
     def on_decode(width):
@@ -167,7 +204,7 @@ def _run_workload(workload, *, label, slo_aware=True, **engine_kwargs):
         clock.advance(base + slope * width)
 
     eng = ServingEngine(
-        _SimLM(),
+        model if model is not None else _SimLM(),
         params={},
         runtime=rt,
         prefill_buckets=(16,),
@@ -278,9 +315,145 @@ def bench_slo(quick: bool = False) -> dict:
     }
 
 
+def make_prefix_workload(
+    n: int, *, sys_len: int = 96, seed: int = 0
+) -> list[_Arrival]:
+    """Shared-system-prompt traffic: every request opens with the same
+    ``sys_len`` tokens and appends a short unique user tail.  Arrival gaps
+    are wider than ``make_workload`` (mean 3 ms) so the first requests
+    finish registering blocks before most of the fleet looks them up."""
+    rng = np.random.default_rng(seed)
+    system = list(rng.integers(1, 40, size=sys_len))
+    arrivals = np.cumsum(rng.exponential(0.003, size=n))
+    out = []
+    for i in range(n):
+        tail = list(rng.integers(40, 60, size=int(rng.integers(4, 13))))
+        out.append(
+            _Arrival(
+                arrival_s=float(arrivals[i]),
+                prompt=system + tail,
+                max_new_tokens=int(rng.integers(12, 20)),
+                priority=0,
+                latency_target_ms=None,
+            )
+        )
+    return out
+
+
+def bench_prefix_share(quick: bool = False) -> dict:
+    """Equal-KV-memory comparison: prefix sharing on vs off.
+
+    Geometry is deliberately tight (32 blocks of 16 = 512 token-slots for 16
+    lanes of ~110-token sequences): without sharing the pool hosts ~4
+    concurrent residents and re-prefills the 96-token system prompt for every
+    one of them; with sharing the system prompt is cached once and lanes pay
+    only for their tails, so the decode batch runs wider AND prefill work
+    drops.
+    """
+    n = 16 if quick else 48
+    workload = make_prefix_workload(n)
+    kw = dict(
+        max_batch=16, cache_len=256, block_size=16, n_blocks=32,
+        prefill_chunk_tokens=32, slo_aware=False,
+    )
+    unshared = _run_workload(
+        workload, label="no-share", model=_ChunkSimLM(),
+        prefix_sharing=False, **kw,
+    )
+    shared = _run_workload(
+        workload, label="share", model=_ChunkSimLM(),
+        prefix_sharing=True, **kw,
+    )
+    for res in (shared, unshared):
+        assert res["status"].completed == n, (res["label"], res["status"])
+    pool = shared["pool"]
+    assert pool["prefix_hits"] > 0, "sharing run never aliased a prefix"
+    p50, p99 = _percentiles(shared["requests"])
+    return {
+        "n_requests": n,
+        "unshared_tokens_per_s": unshared["tokens_per_s"],
+        "shared_tokens_per_s": shared["tokens_per_s"],
+        "speedup": shared["tokens_per_s"] / unshared["tokens_per_s"],
+        "prefix_hit_rate": pool["prefix_hit_rate"],
+        "prefix_hit_tokens": pool["prefix_hit_tokens"],
+        "shared_p50_ms": p50,
+        "shared_p99_ms": p99,
+        "shared_pool": pool,
+    }
+
+
+def make_mixed_chunk_workload(n: int, *, seed: int = 0) -> list[_Arrival]:
+    """Steady short decode traffic with a very long prompt every 8th request
+    (the monolithic-prefill decode-stall scenario)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(0.002, size=n))
+    out = []
+    for i in range(n):
+        if i and i % 8 == 0:
+            plen, new = 320, 8
+        else:
+            plen, new = int(rng.integers(4, 13)), int(rng.integers(16, 25))
+        out.append(
+            _Arrival(
+                arrival_s=float(arrivals[i]),
+                prompt=list(rng.integers(1, 40, size=plen)),
+                max_new_tokens=new,
+                priority=0,
+                latency_target_ms=None,
+            )
+        )
+    return out
+
+
+# Chunk-stall scenario cost model: prefill compute per token is comparable
+# to a decode lane-step, so a 512-token monolithic prefill stalls decode for
+# many token periods while 32-token chunks barely register.
+CHUNK_PREFILL_COST_MS = (0.2, 0.05)
+
+
+def bench_chunked_prefill(quick: bool = False) -> dict:
+    """Decode-token p99 with monolithic vs chunked prefill of long prompts.
+
+    Sharing is off in both runs so chunking is the only variable; the
+    monolithic run uses the legacy (non-chunk-capable) model, the chunked
+    run budgets 32-token chunks through the scheduler.
+    """
+    n = 24 if quick else 64
+    workload = make_mixed_chunk_workload(n)
+    kw = dict(
+        max_batch=8, cache_len=1024, block_size=16, slo_aware=False,
+        prefill_cost=CHUNK_PREFILL_COST_MS,
+    )
+    mono = _run_workload(workload, label="monolithic", model=_SimLM(), **kw)
+    chunked = _run_workload(
+        workload, label="chunked", model=_ChunkSimLM(),
+        prefill_chunk_tokens=32, prefix_sharing=False, **kw,
+    )
+    for res in (mono, chunked):
+        assert res["status"].completed == n, (res["label"], res["status"])
+
+    def short_reqs(res):
+        return [r for r in res["requests"] if len(r.prompt) < 320]
+
+    _, p99_mono = _percentiles(short_reqs(mono))
+    _, p99_chunked = _percentiles(short_reqs(chunked))
+    return {
+        "n_requests": n,
+        "n_long": sum(1 for w in workload if len(w.prompt) >= 320),
+        "p99_monolithic_ms": p99_mono,
+        "p99_chunked_ms": p99_chunked,
+        "p99_improvement": p99_mono / max(p99_chunked, 1e-9),
+        "monolithic_tokens_per_s": mono["tokens_per_s"],
+        "chunked_tokens_per_s": chunked["tokens_per_s"],
+        "throughput_ratio": chunked["tokens_per_s"] / mono["tokens_per_s"],
+    }
+
+
 def main(quick: bool = False) -> list[tuple[str, float, str]]:
     paged = bench_paged_vs_fixed(quick)
     slo = bench_slo(quick)
+    prefix = bench_prefix_share(quick)
+    chunk = bench_chunked_prefill(quick)
     rows = [
         ("serving_paged_speedup", paged["speedup"],
          f"tokens/s paged vs fixed-slot at equal KV memory ({paged['n_requests']} reqs)"),
@@ -295,11 +468,25 @@ def main(quick: bool = False) -> list[tuple[str, float, str]]:
          f" / aware {slo['p99_aware_ms']:.2f} ms"),
         ("serving_slo_throughput_ratio", slo["throughput_ratio"],
          "SLO-aware tokens/s over SLO-blind (>=0.95 hard)"),
+        ("serving_prefix_share_speedup", prefix["speedup"],
+         f"tokens/s sharing vs no-sharing at equal KV memory"
+         f" ({prefix['n_requests']} reqs, hit rate"
+         f" {prefix['prefix_hit_rate']:.2f}, >=1.5 hard)"),
+        ("serving_prefix_hit_rate", prefix["prefix_hit_rate"],
+         "admissions that aliased at least one cached block"),
+        ("serving_chunked_p99_improvement", chunk["p99_improvement"],
+         f"short-request decode-token p99: monolithic"
+         f" {chunk['p99_monolithic_ms']:.2f} ms / chunked"
+         f" {chunk['p99_chunked_ms']:.2f} ms (>=1.3 hard)"),
+        ("serving_chunked_throughput_ratio", chunk["throughput_ratio"],
+         "chunked tokens/s over monolithic (>=0.95 hard)"),
     ]
     save_json("bench_serving.json", {
         "paged_vs_fixed": paged,
         "slo": {k: v for k, v in slo.items() if k != "slo_events"},
         "slo_events": [list(e) for e in slo["slo_events"]],
+        "prefix_share": {k: v for k, v in prefix.items() if k != "shared_pool"},
+        "chunked_prefill": chunk,
         "quick": quick,
     })
     return rows

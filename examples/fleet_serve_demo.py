@@ -5,11 +5,14 @@ End-to-end DESIGN.md §13 walkthrough on real (reduced) model math:
 1. tune a two-device DeploymentBundle in one run;
 2. ``bundle.router(model, params, ...)`` — one ServingEngine per tuned
    device, each on its own isolated KernelRuntime, behind one front door;
-3. submit a burst of mixed-priority requests, half carrying a per-token
-   latency target, through the streaming submit/stream API over paged KV
-   pools;
+3. submit a burst of mixed-priority requests — all opening with the same
+   16-token system prompt, half carrying a per-token latency target —
+   through the streaming submit/stream API over paged KV pools (chunked
+   prefill + prefix sharing: later requests alias the system prompt's
+   blocks instead of re-prefilling them);
 4. stream one ticket token-by-token while the rest of the fleet serves,
-   then drain and assert the dispatch spread both engines.
+   then drain and assert the dispatch spread both engines and the prefix
+   cache took hits.
 
 Run:  PYTHONPATH=src python -W error::DeprecationWarning examples/fleet_serve_demo.py
 (CI runs exactly that: any engine.run() shim call in this path is a failure.)
@@ -44,10 +47,17 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     n = 8
+    # One block-sized system prompt shared by every request: the first
+    # admission per engine prefills + indexes it, later siblings alias those
+    # blocks (refcounted) and skip that span of prefill work entirely.
+    system_prompt = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
     t0 = time.time()
     tickets = [
         router.submit(
-            rng.integers(0, cfg.vocab, size=int(rng.integers(4, 12))).astype(np.int32),
+            np.concatenate([
+                system_prompt,
+                rng.integers(0, cfg.vocab, size=int(rng.integers(4, 12))).astype(np.int32),
+            ]),
             max_new_tokens=int(rng.integers(4, 9)),
             priority=i % 3,
             # every other request carries a (generous) per-token SLO: the
@@ -72,13 +82,18 @@ def main() -> None:
     for dev in sorted(router.engines):
         pool = router.engines[dev].pool.stats()
         print(f"  {dev}: {pool['used_blocks']}/{pool['n_blocks']} blocks of "
-              f"{pool['block_size']} tokens in use at drain")
+              f"{pool['block_size']} tokens in use at drain, "
+              f"{pool['prefix_hits']}/{pool['prefix_lookups']} prefix hits")
     print(f"fleet health: {router.healths()}")
+    print(f"prefix cache: {status.prefix_hits}/{status.prefix_lookups} "
+          f"admissions aliased the shared system prompt "
+          f"(hit rate {status.prefix_hit_rate:.2f})")
 
     assert status.completed == n and not status.exhausted
     assert all(t.done for t in tickets)
     assert len(routes) == 2, f"dispatch piled everything on {routes}"
     assert status.health == "healthy"
+    assert status.prefix_hits >= 1, "shared system prompt was never aliased"
     print("fleet serving demo OK")
 
 

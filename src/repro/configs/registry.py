@@ -180,4 +180,35 @@ def gemm_problems(arch: str, shape: str) -> list[tuple[int, int, int, int]]:
     if cfg.family == "hybrid":
         gemm(m_tok, d, 2 * d, b)  # mamba in-proj
         gemm(m_tok, d, d, b)  # mamba out-proj
+    if sp.kind == "prefill":
+        # Chunked prefill (repro/serve/engine.py): the serving tier replays
+        # the same projections one lane at a time over scheduler-budgeted
+        # chunk widths from the geometric bucket ladder, so those GEMMs are
+        # harvested on-distribution too — batch=1, m=chunk width.  Train
+        # shapes are untouched (the fig7 dataset is train_4k-only).
+        for c in _chunk_widths(s):
+            if cfg.family == "ssm":
+                for out in (cfg.q_dim, cfg.q_dim, cfg.q_dim, cfg.q_dim, d):
+                    gemm(c, d, out, 1)
+            else:
+                gemm(c, d, cfg.q_dim, 1)  # Q
+                gemm(c, d, cfg.kv_dim, 1)  # K
+                gemm(c, d, cfg.kv_dim, 1)  # V
+                gemm(c, cfg.q_dim, d, 1)  # out proj
+            if cfg.moe is not None:
+                gemm(c, d, cfg.moe.n_experts)  # router on the chunk's tokens
+            else:
+                gemm(c, d, ff, 1)
+                gemm(c, d, ff, 1)
+                gemm(c, ff, d, 1)
     return probs
+
+
+def _chunk_widths(seq_len: int, floor: int = 512) -> list[int]:
+    """Chunk widths the serving ladder would use for ``seq_len`` prompts:
+    geometric rungs from ``floor`` up to (exclusive) the sequence length."""
+    widths, c = [], floor
+    while c < seq_len:
+        widths.append(c)
+        c *= 2
+    return widths

@@ -67,12 +67,21 @@ class Objective:
     (e.g. the analytic-model-fastest deployed config instead of the
     classifier's throughput pick, or pausing online exploration).  Policies
     without ``select_for_objective`` are unaffected.
+
+    ``prefill_chunk_tokens`` is a work-granularity hint set alongside the
+    latency target by SLO-mode serving engines: it caps how many prompt
+    tokens one prefill chunk may cover, so deadline pressure shrinks the
+    unit of prefill work interleaved between decode rounds (DESIGN.md §13).
+    Kernel policies may consult it to prefer configs tuned at the chunk's
+    GEMM shapes; the serving scheduler enforces it as the admission budget.
     """
 
     latency_target_ms: float | None = None
+    prefill_chunk_tokens: int | None = None
 
     def __bool__(self) -> bool:
-        return self.latency_target_ms is not None
+        return (self.latency_target_ms is not None
+                or self.prefill_chunk_tokens is not None)
 
 
 class _RuntimeLocal(threading.local):

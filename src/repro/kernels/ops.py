@@ -89,6 +89,13 @@ class KernelPolicy(Protocol):
     the registry's ``policy_attr``, so a policy implementing only a subset
     keeps working — unimplemented families fall back to their default config
     (unless the policy exposes a generic ``select(family, problem)``).
+
+    A policy may additionally expose ``select_for_objective(family, problem,
+    objective)``; when the runtime carries an active
+    :class:`~repro.core.runtime.Objective` (SLO mode — a latency target
+    and/or a ``prefill_chunk_tokens`` work-granularity hint from the serving
+    tier's chunked prefill), that hook is consulted first so latency-biased
+    configs can override the throughput-tuned default for the same shape.
     """
 
     def select_matmul(self, m: int, k: int, n: int, batch: int) -> MatmulConfig: ...

@@ -161,12 +161,19 @@ def flash_attention_jnp(
     q_chunk: int = 512,
     kv_chunk: int = 1024,
     valid_len: jax.Array | None = None,
+    q_start: jax.Array | int | None = None,
 ) -> jax.Array:
     """Grouped-query online-softmax attention.
 
     q: (B, S, H, hd) with H = KV * G;  k/v: (B, T, KV, hd).
     Memory is bounded by q_chunk x kv_chunk tiles (flash algorithm), which is
     what lets 32k prefill / 4k train fit per device without Pallas.
+
+    ``q_start`` places the queries at absolute positions ``q_start + i``
+    within the KV sequence (chunked prefill: a mid-prompt chunk attends over
+    the whole cache, causally bounded at its own frontier).  Default aligns
+    the causal diagonal to the *end* of KV (``t - s``), the train/prefill
+    convention.  May be a traced scalar.
     """
     b, s, h, hd = q.shape
     t = k.shape[1]
@@ -187,7 +194,9 @@ def flash_attention_jnp(
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, n_k * kc - t), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, n_k * kc - t), (0, 0)))
         valid_len = jnp.asarray(t) if valid_len is None else valid_len
-    diag_off = t - s  # causal diagonal aligned to the end of KV
+    # Causal diagonal: queries sit at q_start..q_start+s-1 (chunked prefill)
+    # or end-aligned (train/prefill default).
+    diag_off = q_start if q_start is not None else t - s
 
     kt_c = kt.reshape(b, kv, n_k, kc, hd).transpose(2, 0, 1, 3, 4)  # (n_k,B,KV,kc,hd)
     vt_c = vt.reshape(b, kv, n_k, kc, hd).transpose(2, 0, 1, 3, 4)
@@ -315,6 +324,7 @@ def attention_layer(
     cache: tuple[jax.Array, jax.Array] | None = None,
     cache_positions: jax.Array | None = None,
     cache_valid: jax.Array | None = None,
+    chunk_start: jax.Array | None = None,
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
     """GQA attention for one layer (params already sliced to this layer).
 
@@ -323,6 +333,10 @@ def attention_layer(
       * cross-attention: kv_input is the memory sequence (no rope/causal).
       * cached decode: cache = (k_cache, v_cache) of shape (B, T, KV, hd),
         cache_positions (B,) current write positions; returns updated cache.
+      * chunk append (chunked prefill): cache set, s > 1, ``chunk_start`` a
+        traced scalar — writes k/v at absolute positions
+        ``[chunk_start, chunk_start + s)`` and attends causally over the
+        whole cache from those positions; returns updated cache.
     """
     b, s, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -348,7 +362,7 @@ def attention_layer(
             k_cache, v_cache, ks_cache, vs_cache = cache
         else:
             k_cache, v_cache = cache
-        if s == 1:  # decode: write one token, attend over cache
+        if s == 1 and chunk_start is None:  # decode: write one token
             bidx = jnp.arange(b)
             if quant:
                 kq, ks = quantize_kv(k[:, 0])
@@ -367,6 +381,23 @@ def attention_layer(
                 v_scale=vs_cache if quant else None,
             )
             new_cache = (k_cache, v_cache, ks_cache, vs_cache) if quant else (k_cache, v_cache)
+        elif chunk_start is not None:  # chunk append: write [start, start+s)
+            if quant:
+                raise NotImplementedError(
+                    "chunked prefill does not support int8 KV caches"
+                )
+            # Scatter with mode="drop" (not dynamic_update_slice, which would
+            # clamp a partially-out-of-range start and corrupt real tokens):
+            # a padded final chunk may extend past cache_len — those writes
+            # must vanish, and pad rows inside range are causally dead.
+            pos = chunk_start + jnp.arange(s)
+            k_cache = k_cache.at[:, pos].set(k, mode="drop")
+            v_cache = v_cache.at[:, pos].set(v, mode="drop")
+            out = flash_attention_jnp(
+                q, k_cache, v_cache, causal=causal, window=window,
+                q_start=chunk_start,
+            )
+            new_cache = (k_cache, v_cache)
         else:  # prefill: write the whole prefix
             t_cache = k_cache.shape[1]
             if quant:

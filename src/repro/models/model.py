@@ -113,7 +113,7 @@ class TransformerLM(BaseModel):
         return params
 
     # -- one transformer block (self-attn + ffn) ---------------------------
-    def _self_block(self, blk: dict, x, positions, *, cache=None, cache_positions=None, window=0):
+    def _self_block(self, blk: dict, x, positions, *, cache=None, cache_positions=None, window=0, chunk_start=None):
         c = self.cfg
         h, new_cache = L.attention_layer(
             blk["attn"],
@@ -123,6 +123,7 @@ class TransformerLM(BaseModel):
             cache=cache,
             cache_positions=cache_positions,
             window=window,
+            chunk_start=chunk_start,
         )
         x = x + h
         xn = L.rms_norm(x, blk["ln2"], c.norm_eps)
@@ -258,6 +259,56 @@ class TransformerLM(BaseModel):
         x = L.rms_norm(x, params["final_norm"], c.norm_eps)
         logits = L.logits_from_hidden(params["emb"], x[:, -1:], c)
         return logits, cache
+
+    def supports_chunked_prefill(self) -> bool:
+        """Chunk-append prefill works on the plain (non-vlm, non-int8) k/v
+        layout; other layouts fall back to monolithic prefill."""
+        return not self.is_vlm and not self.kv_quant
+
+    def prefill_chunk(self, params, cache, tokens, start, last_row=None):
+        """Append a prompt chunk at absolute positions ``[start, start+S)``.
+
+        ``tokens``: (B, S); ``start``: scalar, may be traced — one compiled
+        program per chunk *length* serves every chunk offset, which is what
+        makes scheduler-granular chunked prefill affordable.  Returns
+        ``(logits, cache)`` like :meth:`prefill`; ``last_row`` (scalar, may
+        be traced, defaults to ``S-1``) selects the row whose logits are
+        returned, so a padded final chunk can ask for its last *real* row —
+        the first-token logits — without a separate decode program.  Rows
+        past the real prompt (a padded final chunk) are causally dead; later
+        chunks or decode steps overwrite them.
+        """
+        if not self.supports_chunked_prefill():
+            raise NotImplementedError(
+                f"chunked prefill unsupported for this layout "
+                f"(vlm={self.is_vlm}, kv_quant={self.kv_quant})"
+            )
+        c = self.cfg
+        b, s = tokens.shape
+        start = jnp.asarray(start, jnp.int32)
+        positions = start + self._positions(b, s)
+        x = L.shard_act(L.embed_tokens(params["emb"], tokens).astype(self.dtype))
+        keys = self._cache_keys
+
+        def self_body(x, inp):
+            blk, *kv = inp
+            xc, _, kv = self._self_block(
+                blk, x, positions, cache=tuple(kv), chunk_start=start
+            )
+            return L.shard_act(xc), kv
+
+        x, kv = jax.lax.scan(
+            self_body, x, (params["blocks"], *[cache[k] for k in keys])
+        )
+        cache = dict(cache, **dict(zip(keys, kv)))
+        x = L.rms_norm(x, params["final_norm"], c.norm_eps)
+        if last_row is None:
+            x_last = x[:, -1:]
+        else:
+            x_last = jax.lax.dynamic_slice_in_dim(
+                x, jnp.asarray(last_row, jnp.int32), 1, axis=1
+            )
+        return L.logits_from_hidden(params["emb"], x_last, c), cache
 
     def decode_step(self, params, cache, tokens, positions):
         """tokens: (B, 1); positions: (B,) — index of the new token."""

@@ -35,6 +35,21 @@ with hysteresis once targeted lanes run comfortably under target.
 ``engine.run(requests)`` — the seed batch API — remains as a deprecated
 shim over submit/drain with byte-identical outputs.  Per-lane bookkeeping
 lives in numpy on the host; tokens and caches stay on device.
+
+**Streaming admission (prefix sharing + chunked prefill, DESIGN.md §13).**
+When the pool is paged and the model supports ``prefill_chunk``, admission
+switches from the legacy regime (left-padded monolithic prefill, first token
+from the prefill's last-position logits) to a *streaming* regime: the
+sequence is left-aligned so block content is position-stable, the prompt
+body is prefilled in scheduler-budgeted chunks (``prefill_chunk_tokens`` /
+``SchedulerConfig.prefill_token_budget``) that interleave with decode
+rounds, and the final chunk also covers the last prompt token so its
+logits at the last real row yield the first output token (no separate
+first-token program).  Left alignment is what makes prefix sharing possible: a new
+request whose prompt starts with tokens another lane already cached aliases
+those blocks (refcounted, copy-on-write at the first partial block) and
+skips prefill for the shared span.  Dense pools (``block_size=None``)
+without an explicit chunk budget keep the legacy regime bit-for-bit.
 """
 from __future__ import annotations
 
@@ -128,6 +143,16 @@ class EngineStatus:
     exhausted: bool
     health: str = "healthy"
     preempted: int = 0
+    # -- pool health (observability for the paged/prefix-reuse path) --------
+    pool_utilization: float = 0.0  # used / total blocks
+    pool_fragmentation: float = 0.0  # 1 - used token slots / allocated slots
+    shared_blocks: int = 0  # blocks aliased by more than one lane
+    prefix_hits: int = 0  # admissions that reused a cached prefix
+    prefix_lookups: int = 0  # admissions that probed the prefix index
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / self.prefix_lookups if self.prefix_lookups else 0.0
 
 
 @dataclasses.dataclass
@@ -173,6 +198,23 @@ def _bucket(n: int, buckets: tuple[int, ...]) -> int:
     return buckets[-1]
 
 
+def _extend_ladder(buckets: tuple[int, ...], cache_len: int) -> tuple[int, ...]:
+    """Extend the prefill bucket ladder geometrically, capped below cache_len.
+
+    A prompt longer than the largest configured bucket used to truncate to
+    that bucket even when the cache had room; doubling the ladder up to (but
+    excluding) ``cache_len`` keeps long prompts intact while bounding the
+    number of compiled prefill programs at O(log cache_len).  ``cache_len``
+    itself is excluded so an admitted prompt always leaves decode room.
+    """
+    out = [int(b) for b in buckets]
+    last = out[-1]
+    while last * 2 < cache_len:
+        last *= 2
+        out.append(last)
+    return tuple(out)
+
+
 def _recent_ms(req: Request, k: int = 3) -> float | None:
     if not req.token_ms:
         return None
@@ -196,6 +238,8 @@ class ServingEngine:
         block_size: int | None = None,
         n_blocks: int | None = None,
         scheduler: SchedulerConfig | None = None,
+        prefill_chunk_tokens: int | None = None,
+        prefix_sharing: bool = True,
         slo_aware: bool = True,
         slo_patience: int = 4,
         clock=None,
@@ -231,6 +275,10 @@ class ServingEngine:
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.prefill_buckets = prefill_buckets
+        # Geometric ladder extension (satellite fix): prompts longer than the
+        # largest configured bucket bucket into doubled sizes up to cache_len
+        # instead of truncating while cache room remains.
+        self._ladder = _extend_ladder(tuple(prefill_buckets), cache_len)
         self.extra_inputs = extra_inputs or {}
 
         # Paged KV storage.  block_size=None keeps the dense layout (one
@@ -240,6 +288,31 @@ class ServingEngine:
             model, lanes=max_batch, cache_len=cache_len,
             block_size=block_size, n_blocks=n_blocks,
         )
+        # Streaming admission regime (chunked prefill + prefix sharing):
+        # requires a chunk-capable model, no extra prefill inputs, and either
+        # an explicit chunk budget or a paged pool with sharing enabled.
+        # Everything else keeps the legacy (byte-identical) admission path.
+        chunk_capable = (
+            hasattr(model, "prefill_chunk")
+            and getattr(model, "supports_chunked_prefill", lambda: True)()
+            and not self.extra_inputs
+        )
+        paged = self.pool.block_size < self.cache_len
+        self.prefill_chunk_tokens = prefill_chunk_tokens
+        self._sharing = bool(prefix_sharing) and paged and chunk_capable
+        self._streaming = chunk_capable and (
+            prefill_chunk_tokens is not None or self._sharing
+        )
+        if (
+            self._streaming
+            and prefill_chunk_tokens is not None
+            and (scheduler is None or scheduler.prefill_token_budget is None)
+        ):
+            # The chunk cap doubles as the default per-step prefill budget.
+            scheduler = dataclasses.replace(
+                scheduler or SchedulerConfig(),
+                prefill_token_budget=int(prefill_chunk_tokens),
+            )
         self.scheduler = Scheduler(scheduler)
         self.positions = np.zeros(max_batch, dtype=np.int32)  # next position to write
         self.slots: list[Request | None] = [None] * max_batch
@@ -258,10 +331,12 @@ class ServingEngine:
         self._width_buckets = tuple(buckets)
         self._decode_cache: dict[int, object] = {}
         self._prefill_cache = {}
+        self._chunk_cache: dict[int, object] = {}  # chunk width -> jitted program
 
         # -- SLO-aware selection ---------------------------------------------
         self.slo_aware = slo_aware
         self.slo_patience = max(int(slo_patience), 1)
+        self._prefix_reused_tokens = 0  # prefill tokens skipped via aliasing
         self.slo_events: list[tuple[int, str, float | None]] = []
         self._slo_mode = False
         self._slo_cap: int | None = None
@@ -334,11 +409,21 @@ class ServingEngine:
         return prompt
 
     def _fits(self, req: Request) -> bool:
-        plen = _bucket(len(self._seq_tokens(req)), self.prefill_buckets)
+        if self._streaming:
+            kept = min(len(self._seq_tokens(req)), self._ladder[-1])
+            return self.pool.can_fit(kept)
+        plen = _bucket(len(self._seq_tokens(req)), self._ladder)
         return self.pool.can_fit(plen)
 
-    def _admit(self, req: Request, slot: int) -> None:
-        plen = _bucket(len(self._seq_tokens(req)), self.prefill_buckets)
+    def _admit(self, req: Request, slot: int) -> bool:
+        """Admit ``req`` into ``slot``; True if a first token was emitted
+        (legacy monolithic prefill), False if the lane entered the
+        ``"prefilling"`` state (streaming regime — chunks run via
+        :meth:`_advance_prefills` under the scheduler's budget)."""
+        if self._streaming:
+            self._admit_streaming(req, slot)
+            return False
+        plen = _bucket(len(self._seq_tokens(req)), self._ladder)
         tail = self._seq_tokens(req)
         if len(tail) > plen:
             # Sliding-window truncation: a prompt longer than the largest
@@ -367,6 +452,7 @@ class ServingEngine:
                 f"admitted request {req.uid} with no blocks for plen={plen}"
             )
         self.pool.admit(slot, cache1)
+        self.pool.note_tokens(slot, min(len(tail), plen))
         if self.on_prefill is not None:
             self.on_prefill(plen)
         first = int(jnp.argmax(logits[0, -1]))
@@ -374,6 +460,165 @@ class ServingEngine:
         req.state = "active"
         self.slots[slot] = req
         self.positions[slot] = plen
+        return True
+
+    # -- streaming admission (chunked prefill + prefix sharing) ---------------
+    def _chunk_cap(self) -> int:
+        """Largest chunk width one prefill program may cover right now.
+
+        The base cap is the biggest ladder value at or under
+        ``prefill_chunk_tokens`` (whole ladder if unset); SLO mode shrinks it
+        one ladder rung so deadline pressure reduces the unit of prefill work
+        interleaved between decode rounds.
+        """
+        limit = self.prefill_chunk_tokens
+        cap = self._ladder[0]
+        for b in self._ladder:
+            if limit is None or b <= limit:
+                cap = max(cap, b)
+        if self._slo_mode:
+            below = [b for b in self._ladder if b < cap]
+            cap = max(below) if below else self._ladder[0]
+        return cap
+
+    def _chunk_fn(self, width: int):
+        if width not in self._chunk_cache:
+            self._chunk_cache[width] = jax.jit(
+                self.model.prefill_chunk, donate_argnums=(1,)
+            )
+        return self._chunk_cache[width]
+
+    def _admit_streaming(self, req: Request, slot: int) -> None:
+        """Left-aligned admission: alias any cached prefix, allocate the rest,
+        and queue the sequence for budgeted chunked prefill.
+
+        No model program runs here — chunks run in
+        :meth:`_advance_prefills` (the final chunk emits the first token),
+        so one step's prefill work is bounded by the scheduler's token
+        budget no matter how many admissions land.
+        """
+        seq = self._seq_tokens(req)
+        keep = self._ladder[-1]
+        if len(seq) > keep:
+            # Sliding-window truncation, as in the legacy regime: keep the
+            # most recent tokens (causal decode conditions on the suffix).
+            req.truncated_tokens = len(seq) - keep
+            seq = seq[-keep:]
+        body = seq[:-1]
+        shared_tokens = 0
+        if self._sharing:
+            # Atomic match-then-release: the lane's outgoing tenant may itself
+            # own the matched blocks (same system prompt re-admitted into its
+            # old lane), so the pool reserves them before reclaiming.
+            shared_tokens = self.pool.admit_prefix(slot, body)
+            self._prefix_reused_tokens += shared_tokens
+        else:
+            self.pool.release(slot)  # reclaim the lane's previous tenant
+        # Lane-kind leaves (recurrent state, rings) must start from zeros:
+        # nothing below ever rewrites them wholesale the way pool.admit does.
+        self.pool.reset_lane_state(slot)
+        if not self.pool.ensure(slot, len(seq)):
+            raise RuntimeError(
+                f"admitted request {req.uid} with no blocks for {len(seq)} tokens"
+            )
+        self.pool.note_tokens(slot, len(seq))
+        # Chunks cover the FULL sequence: the final chunk's logits at its
+        # last real row predict the first output token (legacy parity — no
+        # separate first-token program).  Sharing still matches/registers on
+        # the body only, so the decode-frontier block stays private (COW).
+        req._chunk_tokens = np.asarray(seq, dtype=np.int32)
+        req._chunk_pos = shared_tokens
+        req._first_logits = None
+        req.state = "prefilling"
+        self.slots[slot] = req
+        self.positions[slot] = len(seq) - 1  # overwritten by the final chunk
+
+    def _run_chunk(self, lane: int, req: Request, width: int) -> None:
+        """One chunk-append prefill program over ``[chunk_pos, chunk_pos+width)``."""
+        toks = req._chunk_tokens
+        s0 = req._chunk_pos
+        chunk = np.zeros(width, dtype=np.int32)
+        real = toks[s0 : s0 + width]
+        chunk[: len(real)] = real
+        with self.runtime.activate():
+            logits, cache = self._run_program(
+                "engine.prefill",
+                lambda: self._chunk_fn(width)(
+                    self.params,
+                    self.pool.gather([lane]),  # re-gathered on retry: donation-safe
+                    jnp.asarray(chunk[None, :]),
+                    jnp.int32(s0),
+                    jnp.int32(len(real) - 1),
+                ),
+                retrace=lambda: self._chunk_cache.pop(width, None),
+                request=req,
+            )
+        self.pool.scatter([lane], cache)
+        if self.on_prefill is not None:
+            self.on_prefill(width)
+        req._chunk_pos = min(s0 + width, len(toks))
+        if req._chunk_pos >= len(toks):
+            # Final chunk: its last real row predicts the first output token.
+            req._first_logits = logits
+        if self._sharing:
+            # Index the blocks this chunk completed right away, so siblings
+            # admitted while a long prompt is still prefilling can alias the
+            # finished span instead of waiting for activation.  Only the
+            # body (all but the last token) is ever indexed — the block
+            # holding the decode frontier stays private (COW rule).
+            self.pool.register_prefix(
+                lane, toks[: min(req._chunk_pos, len(toks) - 1)]
+            )
+
+    def _activate_lane(self, lane: int, req: Request) -> None:
+        """Sequence fully cached: emit the first token from the final
+        chunk's logits and join the batched decode.  No program runs here —
+        activation costs nothing beyond the chunks themselves, matching the
+        legacy prefill's first-token-from-last-position-logits economics."""
+        seq = req._chunk_tokens
+        if self._sharing:
+            # Index the lane's fully-covered body blocks for future reuse.
+            # The block holding the decode frontier is never indexed (COW
+            # rule), so shared content is immutable by construction.
+            self.pool.register_prefix(lane, seq[:-1])
+        first = int(jnp.argmax(req._first_logits[0, -1]))
+        req._first_logits = None  # free the device buffer
+        req.output.append(first)
+        req.state = "active"
+        self.positions[lane] = len(seq)
+        self.pool.note_tokens(lane, len(seq))
+
+    def _advance_prefills(self) -> tuple[list[Request], list[Request]]:
+        """Run chunk programs for ``"prefilling"`` lanes within this step's
+        prefill-token budget; activate lanes whose body is done.
+
+        Returns ``(progressed, activated)``: requests that did chunk work and
+        requests whose final chunk landed (first token emitted, lane joins
+        the decode batch).  At least one chunk runs per
+        step when any lane is prefilling (the budget is a soft cap, never a
+        stall), so streaming callers always observe progress.
+        """
+        progressed: list[Request] = []
+        activated: list[Request] = []
+        for lane, req in enumerate(self.slots):
+            if req is None or req.state != "prefilling":
+                continue
+            did = False
+            while req._chunk_pos < len(req._chunk_tokens):
+                remaining = len(req._chunk_tokens) - req._chunk_pos
+                width = min(self._chunk_cap(), _bucket(remaining, self._ladder))
+                left = self.scheduler.prefill_budget_left()
+                if width > left and self.scheduler._prefill_spent > 0:
+                    break  # budget spent; resume next step
+                self._run_chunk(lane, req, width)
+                self.scheduler.charge_prefill(width)
+                did = True
+            if did:
+                progressed.append(req)
+            if req._chunk_pos >= len(req._chunk_tokens):
+                self._activate_lane(lane, req)
+                activated.append(req)
+        return progressed, activated
 
     def _preempt(self, lane: int) -> Request:
         """Evict the lane's resident back to the wait queue, reclaiming its
@@ -386,6 +631,24 @@ class ServingEngine:
         self.scheduler.submit(req, step=self.steps)
         return req
 
+    def _pick_victim(self, running: list) -> Request | None:
+        """Victim selection that prefers lanes holding no shared blocks.
+
+        Evicting a refcount>1 holder never corrupts a sibling (release only
+        decrements), but it throws away blocks other lanes ride on — so
+        shared-prefix holders are passed to the scheduler as ``protect``ed
+        and only become candidates when no unprotected victim exists.
+        """
+        protect = [
+            r
+            for lane, r in enumerate(self.slots)
+            if r is not None and self.pool.lane_holds_shared(lane)
+        ]
+        victim = self.scheduler.pick_victim(running, self.steps, protect=protect)
+        if victim is None and protect:
+            victim = self.scheduler.pick_victim(running, self.steps)
+        return victim
+
     def _preempt_for_admission(self) -> Request | None:
         """Admission-time preemption: a waiter that outranks the weakest
         active resident by the configured gap may take its blocks."""
@@ -393,7 +656,7 @@ class ServingEngine:
         if best is None:
             return None
         running = [r for r in self.slots if r is not None]
-        victim = self.scheduler.pick_victim(running, self.steps)
+        victim = self._pick_victim(running)
         if victim is None:
             return None
         gap = self.scheduler.config.preempt_priority_gap
@@ -410,18 +673,20 @@ class ServingEngine:
         under pool pressure the scheduler's victim (lowest priority, most
         emitted tokens) is preempted until the allocation fits."""
         for lane, req in enumerate(self.slots):
-            if req is None:
-                continue
+            if req is None or req.state == "prefilling":
+                continue  # prefilling lanes allocated fully at admission
             need = int(self.positions[lane]) + 1
             while not self.pool.ensure(lane, need):
                 running = [r for r in self.slots if r is not None]
-                victim = self.scheduler.pick_victim(running, self.steps)
+                victim = self._pick_victim(running)
                 if victim is None:
                     break
                 vlane = self.slots.index(victim)
                 self._preempt(vlane)
                 if vlane == lane:
                     break  # preempted ourselves; the lane is empty now
+            else:
+                self.pool.note_tokens(lane, need)
 
     # -- decode ---------------------------------------------------------------
     def _width(self, n_active: int) -> int:
@@ -441,14 +706,27 @@ class ServingEngine:
         """One batched decode over the compacted active lanes, at the
         smallest compiled width bucket that fits; returns the requests that
         received a token."""
-        active = [i for i, r in enumerate(self.slots) if r is not None]
+        active = [
+            i for i, r in enumerate(self.slots)
+            if r is not None and r.state == "active"
+        ]
         if not active:
             return []
         width = self._width(len(active))
         # Pad the batch to the bucket with idle lanes (their block tables are
         # empty or retired, so their writes land in scratch / reclaimed rows
-        # — same as the seed engine decoding its idle slots).
+        # — same as the seed engine decoding its idle slots; a retired lane's
+        # *registered* prefix blocks are safe because the stale write position
+        # is at/beyond the old decode frontier, outside every indexed block).
+        # When mid-prefill lanes leave too few idle lanes, they serve as
+        # padding too: the pad write lands at the last prompt position (at
+        # or past every finished chunk), which the lane's final chunk
+        # overwrites with the real last-token k/v before activation.
         idle = [i for i, r in enumerate(self.slots) if r is None]
+        idle += [
+            i for i, r in enumerate(self.slots)
+            if r is not None and r.state == "prefilling"
+        ]
         sel = active + idle[: width - len(active)]
         tokens = np.zeros((width, 1), dtype=np.int32)
         for row, lane in enumerate(active):
@@ -510,11 +788,19 @@ class ServingEngine:
                 cap = b
         self._slo_cap = cap
         self.slo_events.append((self.steps, "enter", target))
-        self.runtime.set_objective(Objective(latency_target_ms=float(target)))
+        # SLO mode also shrinks the prefill chunk cap one ladder rung (the
+        # _chunk_cap() consults _slo_mode, already set above); publishing it
+        # on the Objective lets selection policies prefer configs tuned at
+        # the chunk's GEMM shapes.
+        self.runtime.set_objective(Objective(
+            latency_target_ms=float(target),
+            prefill_chunk_tokens=self._chunk_cap() if self._streaming else None,
+        ))
         # Invalidate compiled programs: the next trace re-runs kernel
         # selection under the objective (select_for_objective).
         self._prefill_cache.clear()
         self._decode_cache.clear()
+        self._chunk_cache.clear()
 
     def _exit_slo(self) -> None:
         self._slo_mode = False
@@ -524,6 +810,7 @@ class ServingEngine:
         self.runtime.set_objective(None)
         self._prefill_cache.clear()
         self._decode_cache.clear()
+        self._chunk_cache.clear()
 
     def _update_slo(self) -> None:
         """Hysteresis loop around the latency objective.
@@ -577,6 +864,7 @@ class ServingEngine:
     # -- failure containment (DESIGN.md §11) -----------------------------------
     def _rejit_decode(self) -> None:
         self._decode_cache.clear()
+        self._chunk_cache.clear()
 
     def _run_program(self, site: str, fn, *, retrace, request: Request | None = None):
         """Run one compiled program with per-request retry-on-kernel-fault.
@@ -830,6 +1118,7 @@ class ServingEngine:
         # this step's admissions and traces already run under the cap and the
         # latency objective (no full-width burst right as a target lands).
         self._update_slo()
+        self.scheduler.begin_step()  # fresh prefill-token budget
         emitted: list[Request] = []
         preempted_once = False
         while len(self.scheduler):
@@ -845,8 +1134,14 @@ class ServingEngine:
                 if req is None:
                     break
                 lane = self._free_lane()
-            self._admit(req, lane)
-            emitted.append(req)
+            if self._admit(req, lane):
+                emitted.append(req)  # legacy prefill emitted the first token
+        # Budgeted chunk work for prefilling lanes; a lane whose final chunk
+        # landed this step emits its first token here and joins this step's
+        # batched decode below (streaming parity with legacy: a small prompt
+        # admitted this step still answers this step).
+        progressed, activated = self._advance_prefills()
+        emitted.extend(activated)
         self._grow_active()
         decoded = self._decode_active()
         emitted.extend(decoded)
@@ -862,7 +1157,9 @@ class ServingEngine:
         self._step_ms.append(dt_ms)
         for r in emitted:
             r.token_ms.append(dt_ms)
-        return bool(emitted)
+        # Chunk work without a token is still progress: streaming callers
+        # (Ticket.tokens) must keep stepping while a long prompt prefills.
+        return bool(emitted or progressed)
 
     def status(self) -> EngineStatus:
         """Live snapshot over this serving epoch (since the last drain).
@@ -884,7 +1181,29 @@ class ServingEngine:
             exhausted=bool(waiting or in_flight),
             health=self.health,
             preempted=preempted_now,
+            **self._pool_health(),
         )
+
+    def _pool_health(self) -> dict:
+        ps = self.pool.stats()
+        return {
+            "pool_utilization": ps["utilization"],
+            "pool_fragmentation": ps["fragmentation"],
+            "shared_blocks": ps["shared_blocks"],
+            "prefix_hits": ps["prefix_hits"],
+            "prefix_lookups": ps["prefix_lookups"],
+        }
+
+    def prefix_overlap(self, prompt) -> int:
+        """Tokens of ``prompt`` this engine could serve from cached blocks.
+
+        A read-only probe (hit-rate counters untouched) used by the Router's
+        prefix-affinity dispatch; 0 when sharing is inactive here.
+        """
+        if not self._sharing:
+            return 0
+        body = np.asarray(prompt, dtype=np.int32)[:-1]
+        return len(self.pool.match_prefix(body, peek=True)) * self.pool.block_size
 
     def drain(self, *, max_steps: int = 10_000) -> EngineStatus:
         """Serve everything submitted until done or the step budget runs out.
@@ -918,6 +1237,7 @@ class ServingEngine:
             exhausted=exhausted,
             health=self.health,
             preempted=sum(1 for r in reqs if r.preemptions),
+            **self._pool_health(),
         )
         self._epoch_requests = [r for r in reqs if r.state == "active"]
         return status

@@ -38,6 +38,21 @@ indistinguishable from a dense slot's untouched tail.
 ``block_size=None`` degenerates to one ``cache_len``-sized block per lane —
 the dense layout, byte-identical to the seed engine (and the default for the
 ``ServingEngine`` constructor, so existing callers see no change).
+
+**Prefix sharing.**  Blocks are refcounted and indexed by a *chain hash* of
+the token ids they cache: ``h_i = hash((h_{i-1}, tokens[i*bs:(i+1)*bs]))``.
+A lane that finished prefilling a prompt registers its fully-covered blocks
+(:meth:`register_prefix`); a later submit with the same leading tokens finds
+the longest indexed run (:meth:`match_prefix`) and aliases those blocks into
+its own table (:meth:`alias`), skipping prefill for the shared span.  Shared
+blocks are copy-on-write at block granularity: only *full* blocks whose
+content can never be rewritten are ever indexed (the block holding a lane's
+last/decode position stays private), so siblings only ever re-write shared
+blocks with byte-identical content.  ``release`` decrements refcounts and
+reclaims a block only at zero — index entries die with the block, so a
+recycled block id can never serve a stale prefix.  Retired-but-unreclaimed
+lanes keep their blocks indexed, so a popular system prompt survives its
+original request (until block pressure harvests it).
 """
 from __future__ import annotations
 
@@ -168,6 +183,19 @@ class KVPool:
         # reclaimed yet: content stays readable (dense-engine parity for
         # post-run cache inspection) until an allocation actually needs it.
         self._retired: set[int] = set()
+        # Per-block refcounts (index 0 = scratch, never allocated).  A fresh
+        # allocation starts at 1; aliasing a shared prefix increments; release
+        # decrements and only refcount 0 returns a block to the free list.
+        self._rc = [0] * (self.n_blocks + 1)
+        # Tokens actually resident per lane (for fragmentation accounting).
+        self._lane_tokens = [0] * self.lanes
+        # Prefix index: chain hash over block token content -> block id, plus
+        # the reverse map so freeing a block drops its index entry.
+        self._prefix_index: dict[int, int] = {}
+        self._block_hash: dict[int, int] = {}
+        self._prefix_lookups = 0
+        self._prefix_hits = 0
+        self._prefix_hit_tokens = 0
 
     # -- block accounting ---------------------------------------------------
     @property
@@ -187,9 +215,23 @@ class KVPool:
     def blocks_needed(self, n_tokens: int) -> int:
         return max(1, math.ceil(n_tokens / self.block_size))
 
+    def block_refcount(self, blk: int) -> int:
+        return self._rc[blk]
+
+    def lane_holds_shared(self, lane: int) -> bool:
+        """True if any block in ``lane``'s table is aliased by another lane."""
+        return any(self._rc[blk] > 1 for blk in self._tables[lane])
+
     @property
     def retired_blocks(self) -> int:
-        return sum(len(self._tables[lane]) for lane in self._retired)
+        # Only blocks a harvest would actually free: refcount-1 residents of
+        # retired lanes.  Shared blocks survive their retired owner.
+        return sum(
+            1
+            for lane in self._retired
+            for blk in self._tables[lane]
+            if self._rc[blk] == 1
+        )
 
     def retire(self, lane: int) -> None:
         """Mark a finished lane reclaimable without scrubbing it yet."""
@@ -223,21 +265,141 @@ class KVPool:
             return False
         for _ in range(need):
             blk = self._free.pop()
+            self._rc[blk] = 1
             self._zero_block(blk)
             table.append(blk)
         return True
 
+    def note_tokens(self, lane: int, n_tokens: int) -> None:
+        """Record how many token slots ``lane`` actually uses (monotone)."""
+        cap = len(self._tables[lane]) * self.block_size
+        self._lane_tokens[lane] = min(max(self._lane_tokens[lane], n_tokens), cap)
+
     def release(self, lane: int) -> int:
-        """Reclaim every block owned by ``lane`` (finish or preemption)."""
+        """Drop ``lane``'s claim on its blocks (finish or preemption).
+
+        Each block's refcount is decremented; only blocks reaching zero are
+        returned to the free list (a sibling aliasing a shared prefix keeps
+        it alive).  Returns the number of blocks actually freed.
+        """
         self._retired.discard(lane)
         table = self._tables[lane]
-        freed = len(table)
+        dropped = []
+        for blk in table:
+            self._rc[blk] -= 1
+            if self._rc[blk] == 0:
+                dropped.append(blk)
+                h = self._block_hash.pop(blk, None)
+                if h is not None and self._prefix_index.get(h) == blk:
+                    del self._prefix_index[h]
         # Reverse so pop() reuses the lane's lowest block id first.
-        self._free.extend(reversed(table))
+        self._free.extend(reversed(dropped))
         self._tables[lane] = []
-        return freed
+        self._lane_tokens[lane] = 0
+        return len(dropped)
+
+    # -- prefix sharing -----------------------------------------------------
+    def _chain_hashes(self, tokens) -> list[int]:
+        """Chain hash per *fully covered* block of ``tokens`` (token ids)."""
+        bs = self.block_size
+        toks = [int(t) for t in tokens]
+        out: list[int] = []
+        h = 0x9E3779B9  # fixed chain seed
+        for i in range(len(toks) // bs):
+            h = hash((h, tuple(toks[i * bs : (i + 1) * bs])))
+            out.append(h)
+        return out
+
+    def match_prefix(self, tokens, *, peek: bool = False) -> list[int]:
+        """Longest indexed block run caching a prefix of ``tokens``.
+
+        Returns the block ids, in prefix order.  ``peek=True`` skips the
+        hit-rate counters (used by router affinity probes so observability
+        reflects actual admissions only).
+        """
+        run: list[int] = []
+        for h in self._chain_hashes(tokens):
+            blk = self._prefix_index.get(h)
+            if blk is None:
+                break
+            run.append(blk)
+        if not peek:
+            self._prefix_lookups += 1
+            if run:
+                self._prefix_hits += 1
+                self._prefix_hit_tokens += len(run) * self.block_size
+        return run
+
+    def register_prefix(self, lane: int, tokens) -> int:
+        """Index ``lane``'s blocks that fully cover a prefix of ``tokens``.
+
+        Only blocks whose ``block_size`` tokens are all real (never to be
+        rewritten) are indexed — the copy-on-write rule: the block holding
+        the lane's decode frontier stays private.  First registration of a
+        chain hash wins; re-registering identical content is a no-op.
+        Returns the number of shareable blocks.
+        """
+        table = self._tables[lane]
+        n = 0
+        for h, blk in zip(self._chain_hashes(tokens), table):
+            if h not in self._prefix_index:
+                self._prefix_index[h] = blk
+                self._block_hash[blk] = h
+            n += 1
+        return n
+
+    def admit_prefix(self, lane: int, tokens) -> int:
+        """Release ``lane``'s previous tenant and seed it with the longest
+        cached prefix of ``tokens``, atomically.
+
+        The outgoing (retired) tenant may itself own the matched blocks — a
+        follow-up request with the same system prompt admitted into its old
+        lane — so the match is reserved (incref) *before* the release that
+        would otherwise free it.  Returns the number of prefix tokens served
+        from cache.
+        """
+        matched = self.match_prefix(tokens)
+        for blk in matched:
+            self._rc[blk] += 1  # reserve against the release below
+        self.release(lane)
+        self._tables[lane] = list(matched)
+        self._lane_tokens[lane] = len(matched) * self.block_size
+        return len(matched) * self.block_size
+
+    def alias(self, lane: int, blocks) -> None:
+        """Seed a fresh lane's table with shared ``blocks`` (incref each)."""
+        table = self._tables[lane]
+        if table:
+            raise ValueError(f"alias() requires an empty table (lane {lane})")
+        for blk in blocks:
+            if self._rc[blk] < 1:
+                raise ValueError(f"alias() of unallocated block {blk}")
+            self._rc[blk] += 1
+            table.append(blk)
+        self._lane_tokens[lane] = len(table) * self.block_size
+
+    def reset_lane_state(self, lane: int) -> None:
+        """Zero ``lane``'s row of every lane-kind leaf (fresh-cache state).
+
+        Used by aliased admissions: paged content arrives via shared blocks,
+        but recurrent/lane state must start from ``init_cache`` zeros.
+        """
+        for i, spec in enumerate(self.specs):
+            if spec.kind != "lane":
+                continue
+            arr = self._store[i]
+            idx = [slice(None)] * arr.ndim
+            idx[spec.batch_axis] = lane
+            self._store[i] = arr.at[tuple(idx)].set(0)
+
+    @property
+    def shared_blocks(self) -> int:
+        """Blocks currently aliased by more than one lane table."""
+        return sum(1 for blk in range(1, self.n_blocks + 1) if self._rc[blk] > 1)
 
     def stats(self) -> dict:
+        alloc_slots = sum(len(t) for t in self._tables) * self.block_size
+        used_slots = min(sum(self._lane_tokens), alloc_slots)
         return {
             "n_blocks": self.n_blocks,
             "block_size": self.block_size,
@@ -245,6 +407,18 @@ class KVPool:
             "retired_blocks": self.retired_blocks,
             "used_blocks": self.used_blocks,
             "utilization": self.used_blocks / self.n_blocks,
+            "fragmentation": (
+                1.0 - used_slots / alloc_slots if alloc_slots else 0.0
+            ),
+            "shared_blocks": self.shared_blocks,
+            "prefix_lookups": self._prefix_lookups,
+            "prefix_hits": self._prefix_hits,
+            "prefix_hit_tokens": self._prefix_hit_tokens,
+            "prefix_hit_rate": (
+                self._prefix_hits / self._prefix_lookups
+                if self._prefix_lookups
+                else 0.0
+            ),
             "lanes": self.lanes,
             "lanes_used": sum(1 for t in self._tables if t),
         }

@@ -12,8 +12,14 @@ Dispatch policy (deterministic):
 
 * engines reporting ``health == "degraded"`` (the PR 6 incident/quarantine
   state machine) are skipped while any healthy engine exists;
-* among eligible engines, least-loaded wins — load is normalized queue+lane
-  occupancy plus KV-pool block utilization;
+* **prefix affinity**: when the prompt is known, engines are probed with
+  :meth:`~repro.serve.engine.ServingEngine.prefix_overlap` (read-only — the
+  hit-rate counters are untouched) and the ones already holding the longest
+  cached prefix win, provided they hold at least one full block.  Sending a
+  shared-system-prompt request to the engine that cached the prompt turns
+  its prefill into a block-table alias instead of recomputation;
+* among equally-affine engines, least-loaded wins — load is normalized
+  queue+lane occupancy plus KV-pool block utilization;
 * a request carrying ``latency_target_ms`` additionally avoids engines
   currently under SLO pressure (their width is capped — adding latency-
   sensitive traffic there defeats the point);
@@ -60,7 +66,9 @@ class Router:
         stats = eng.pool.stats()
         return occupancy + stats["used_blocks"] / max(stats["n_blocks"], 1)
 
-    def dispatch(self, *, latency_target_ms: float | None = None) -> str:
+    def dispatch(
+        self, *, latency_target_ms: float | None = None, prompt=None
+    ) -> str:
         """The engine key the next submit would pick (pure, no side effects)."""
         keys = sorted(self.engines)
         healthy = [k for k in keys if self.engines[k].health == "healthy"]
@@ -68,6 +76,13 @@ class Router:
         if latency_target_ms is not None:
             calm = [k for k in eligible if not self.engines[k]._slo_mode]
             eligible = calm or eligible
+        if prompt is not None and len(prompt) > 1:
+            # Prefix affinity: prefer engines already holding the longest
+            # cached prefix of this prompt (at least one full block).
+            overlap = {k: self.engines[k].prefix_overlap(prompt) for k in eligible}
+            best = max(overlap.values(), default=0)
+            if best > 0:
+                eligible = [k for k in eligible if overlap[k] == best]
         return min(eligible, key=lambda k: (self._load(self.engines[k]), k))
 
     # -- serving surface ------------------------------------------------------
@@ -84,7 +99,7 @@ class Router:
         """Route one prompt to the best engine; returns a fleet-wide Ticket
         (its streaming iterator steps the whole router, so progress does not
         depend on which engine holds the request)."""
-        key = self.dispatch(latency_target_ms=latency_target_ms)
+        key = self.dispatch(latency_target_ms=latency_target_ms, prompt=prompt)
         ticket = self.engines[key].submit(
             prompt,
             max_new_tokens=max_new_tokens,
@@ -97,7 +112,9 @@ class Router:
         return Ticket(ticket.request, self)
 
     def submit_request(self, req: Request) -> Ticket:
-        key = self.dispatch(latency_target_ms=req.latency_target_ms)
+        key = self.dispatch(
+            latency_target_ms=req.latency_target_ms, prompt=req.prompt
+        )
         self.engines[key].submit_request(req)
         req.routed_to = key
         return Ticket(req, self)
@@ -140,6 +157,7 @@ class Router:
         )
 
     def _aggregate(self, statuses: list[EngineStatus]) -> EngineStatus:
+        n = max(len(statuses), 1)
         return EngineStatus(
             completed=sum(s.completed for s in statuses),
             in_flight=sum(s.in_flight for s in statuses),
@@ -149,6 +167,12 @@ class Router:
             health="degraded" if any(s.health == "degraded" for s in statuses)
             else "healthy",
             preempted=sum(s.preempted for s in statuses),
+            # Pool health: ratios average across the fleet, counters sum.
+            pool_utilization=sum(s.pool_utilization for s in statuses) / n,
+            pool_fragmentation=sum(s.pool_fragmentation for s in statuses) / n,
+            shared_blocks=sum(s.shared_blocks for s in statuses),
+            prefix_hits=sum(s.prefix_hits for s in statuses),
+            prefix_lookups=sum(s.prefix_lookups for s in statuses),
         )
 
     def healths(self) -> dict[str, str]:

@@ -20,7 +20,16 @@ lanes, the block pool, and the decode loop.  Policy:
   over untargeted ones, then the one holding the most emitted tokens (the
   over-budget decode), newest submission last.  Preempted requests come back
   through ``submit`` with state ``"preempted"`` and keep their output; the
-  engine re-admits them by re-prefilling prompt + generated tokens.
+  engine re-admits them by re-prefilling prompt + generated tokens.  The
+  engine passes requests whose lanes hold shared (refcount > 1) prefix
+  blocks via ``protect=`` so siblings keep their cheap aliases; eviction of
+  a protected holder is only a fallback when no other victim exists (and is
+  still safe — release just decrements the refcount).
+* **Prefill budget.**  With ``prefill_token_budget`` set, the engine calls
+  ``begin_step()`` each step and ``charge_prefill(n)`` per admitted prompt
+  chunk; ``prefill_budget_left`` caps how much prefill work one step may
+  interleave with decode, so a 4k-token prompt is spread over many steps
+  instead of stalling every decode lane while it traces.
 """
 from __future__ import annotations
 
@@ -37,6 +46,9 @@ class SchedulerConfig:
     aging_steps: int = 16
     # A waiter must outrank a victim by this much to preempt it for admission.
     preempt_priority_gap: int = 1
+    # Max prefill tokens admitted per engine step (None = unbounded, the
+    # monolithic-prefill behaviour).  Counted in padded chunk widths.
+    prefill_token_budget: int | None = None
 
 
 class Scheduler:
@@ -44,6 +56,21 @@ class Scheduler:
         self.config = config or SchedulerConfig()
         self._wait: list = []
         self._seq = itertools.count()
+        self._prefill_spent = 0
+
+    # -- per-step prefill budget -------------------------------------------
+    def begin_step(self) -> None:
+        """Reset the step's prefill-token spend (call once per engine step)."""
+        self._prefill_spent = 0
+
+    def charge_prefill(self, n_tokens: int) -> None:
+        self._prefill_spent += n_tokens
+
+    def prefill_budget_left(self) -> int | float:
+        budget = self.config.prefill_token_budget
+        if budget is None:
+            return math.inf
+        return max(0, budget - self._prefill_spent)
 
     def __len__(self) -> int:
         return len(self._wait)

@@ -223,6 +223,93 @@ def test_dense_degenerate_mode_matches_seed_layout():
     np.testing.assert_array_equal(np.asarray(pool.gather(range(3))["k"])[1, :2], toks)
 
 
+# ---------------------------------------------------------------------------
+# prefix sharing (refcounts, index lifecycle)
+# ---------------------------------------------------------------------------
+def test_refcount_lifecycle_and_shared_release():
+    pool = _pool(lanes=3, n_blocks=6)  # block_size=8
+    toks = list(range(100, 120))  # 20 tokens: 2 full blocks + a partial third
+    pool.ensure(0, 21)  # 3 blocks
+    assert pool.register_prefix(0, toks) == 2  # only fully-covered blocks
+    matched = pool.match_prefix(toks + [1, 2])
+    assert matched == list(pool.block_table(0))[:2]
+    pool.alias(1, matched)
+    assert pool.block_refcount(matched[0]) == 2
+    assert pool.lane_holds_shared(0) and pool.lane_holds_shared(1)
+    assert pool.shared_blocks == 2
+    # releasing the original owner frees only its private frontier block
+    assert pool.release(0) == 1
+    assert pool.match_prefix(toks) == matched  # index intact: lane 1 holds
+    # last holder gone: blocks free and their index entries die with them
+    assert pool.release(1) == 2
+    assert pool.match_prefix(toks, peek=True) == []
+    assert pool.shared_blocks == 0 and pool.free_blocks == 6
+
+
+def test_match_prefix_stops_at_content_divergence():
+    pool = _pool(lanes=2, n_blocks=6)
+    toks = list(range(24))  # 3 full blocks
+    pool.ensure(0, 24)
+    assert pool.register_prefix(0, toks) == 3
+    diverged = toks[:8] + [99] + toks[9:]
+    assert pool.match_prefix(diverged, peek=True) == [pool.block_table(0)[0]]
+    assert pool.match_prefix([7] + toks[1:], peek=True) == []
+
+
+def test_admit_prefix_survives_reclaiming_its_own_lane():
+    """A follow-up landing in the lane that owns its prefix must keep it:
+    the match is reserved before the lane's previous tenant is released."""
+    pool = _pool(lanes=2, n_blocks=4)
+    toks = list(range(16))
+    pool.ensure(0, 17)  # 2 full-body blocks + the decode frontier
+    pool.register_prefix(0, toks)
+    shared = list(pool.block_table(0))[:2]
+    pool.retire(0)
+    assert pool.admit_prefix(0, toks + [5]) == 16
+    assert list(pool.block_table(0)) == shared
+    assert pool.block_refcount(shared[0]) == 1  # reserved, then released once
+
+
+def test_retired_lane_keeps_prefix_until_harvested():
+    pool = _pool(lanes=2, n_blocks=4)
+    toks = list(range(16))
+    pool.ensure(0, 16)
+    pool.register_prefix(0, toks)
+    pool.retire(0)
+    assert pool.match_prefix(toks, peek=True) == list(pool.block_table(0))
+    # block pressure harvests the retired lane: the cached prefix dies
+    assert pool.ensure(1, 32)
+    assert pool.match_prefix(toks, peek=True) == []
+
+
+def test_alias_rejects_bad_targets():
+    pool = _pool(lanes=2, n_blocks=4)
+    pool.ensure(0, 8)
+    with pytest.raises(ValueError):
+        pool.alias(1, [3])  # unallocated block
+    pool.ensure(1, 8)
+    with pytest.raises(ValueError):
+        pool.alias(1, list(pool.block_table(0)))  # non-empty table
+
+
+def test_stats_track_sharing_and_fragmentation():
+    pool = _pool(lanes=2, n_blocks=6)
+    pool.ensure(0, 9)  # 2 blocks = 16 slots
+    pool.note_tokens(0, 9)
+    st = pool.stats()
+    assert st["fragmentation"] == pytest.approx(1 - 9 / 16)
+    pool.match_prefix(range(8))  # miss
+    toks = list(range(8))
+    pool.register_prefix(0, toks)
+    hit = pool.match_prefix(toks)
+    pool.match_prefix(toks, peek=True)  # router probe: not counted
+    pool.alias(1, hit)
+    st = pool.stats()
+    assert st["prefix_lookups"] == 2 and st["prefix_hits"] == 1
+    assert st["prefix_hit_rate"] == 0.5 and st["prefix_hit_tokens"] == 8
+    assert st["shared_blocks"] == 1
+
+
 def test_replicated_leaf_passes_through_unpooled():
     pool = KVPool(ReplicatedModel(), lanes=2, cache_len=32, block_size=8)
     pool.ensure(0, 8)

@@ -174,3 +174,81 @@ def test_bundle_router_builds_isolated_engines():
     status = router.drain()
     assert status.completed == 4
     assert {t.request.routed_to for t in tickets} == {"tpu_v4", "tpu_v5e"}
+
+
+# ---------------------------------------------------------------------------
+# prefix-affinity dispatch + pool-health aggregation
+# ---------------------------------------------------------------------------
+class ChunkToyModel(ToyModel):
+    """Echo+1 toy that also speaks the chunked-prefill protocol."""
+
+    def supports_chunked_prefill(self):
+        return True
+
+    def prefill_chunk(self, params, cache, tokens, start, last_row=None):
+        cache = dict(cache)
+        pos = start + jnp.arange(tokens.shape[1])
+        cache["k"] = cache["k"].at[:, pos].set(
+            tokens.astype(jnp.float32), mode="drop"
+        )
+        if last_row is None:
+            last = tokens[:, -1:]
+        else:
+            last = jax.lax.dynamic_slice_in_dim(
+                tokens, jnp.asarray(last_row, jnp.int32), 1, axis=1
+            )
+        logits = jax.nn.one_hot((last + 1) % self.vocab, self.vocab)
+        return logits, cache
+
+
+def _sharing_router(n=2):
+    engines = {
+        f"dev{i}": ServingEngine(
+            ChunkToyModel(), params={}, max_batch=2, cache_len=64,
+            block_size=8, prefill_buckets=(8, 16), prefill_chunk_tokens=16,
+        )
+        for i in range(n)
+    }
+    return Router(engines, name="test")
+
+
+def test_dispatch_follows_cached_prefix():
+    router = _sharing_router()
+    sys_prompt = list(range(1, 17))  # two full 8-token blocks once registered
+    t = router.submit(sys_prompt + [3], max_new_tokens=2)
+    assert t.request.routed_to == "dev0"
+    router.drain()
+    # dev0 now caches the system prompt (retired lane keeps it indexed).
+    # Load dev0's queue so plain balancing would pick dev1 ...
+    router.engines["dev0"].submit(list(range(40, 50)), max_new_tokens=4)
+    assert router.dispatch() == "dev1"
+    # ... but a same-prefix prompt must follow the cached blocks to dev0
+    assert router.dispatch(prompt=sys_prompt + [9]) == "dev0"
+    # and the probe is read-only: no lookup/hit counters moved
+    assert router.engines["dev0"].status().prefix_lookups == 1  # admission only
+
+
+def test_affinity_ignores_engines_without_overlap():
+    router = _sharing_router()
+    # nothing cached anywhere: prompt-aware dispatch falls back to load
+    assert router.dispatch(prompt=list(range(1, 17))) == "dev0"
+
+
+def test_status_aggregates_pool_health():
+    router = _sharing_router()
+    sys_prompt = list(range(1, 17))
+    for tail in ([3], [5], [7], [9]):
+        router.submit(sys_prompt + tail, max_new_tokens=2)
+    router.drain()
+    fleet = router.status()
+    per = [router.engines[k].status() for k in sorted(router.engines)]
+    assert fleet.prefix_lookups == sum(s.prefix_lookups for s in per) > 0
+    assert fleet.prefix_hits == sum(s.prefix_hits for s in per)
+    assert fleet.shared_blocks == sum(s.shared_blocks for s in per)
+    assert fleet.pool_utilization == pytest.approx(
+        sum(s.pool_utilization for s in per) / len(per)
+    )
+    assert fleet.pool_fragmentation == pytest.approx(
+        sum(s.pool_fragmentation for s in per) / len(per)
+    )
+    assert 0.0 <= fleet.prefix_hit_rate <= 1.0

@@ -258,3 +258,173 @@ def test_run_shim_is_byte_identical_to_submit_drain():
     np.testing.assert_array_equal(
         np.asarray(new_eng.cache["k"]), np.asarray(legacy_eng.cache["k"])
     )
+
+
+# ---------------------------------------------------------------------------
+# streaming regime: chunked prefill + prefix sharing
+# ---------------------------------------------------------------------------
+class ChunkToyModel(ToyModel):
+    """Echo+1 toy that also speaks the chunked-prefill protocol."""
+
+    def supports_chunked_prefill(self):
+        return True
+
+    def prefill_chunk(self, params, cache, tokens, start, last_row=None):
+        cache = dict(cache)
+        pos = start + jnp.arange(tokens.shape[1])
+        cache["k"] = cache["k"].at[:, pos].set(
+            tokens.astype(jnp.float32), mode="drop"
+        )
+        if last_row is None:
+            last = tokens[:, -1:]
+        else:
+            last = jax.lax.dynamic_slice_in_dim(
+                tokens, jnp.asarray(last_row, jnp.int32), 1, axis=1
+            )
+        logits = jax.nn.one_hot((last + 1) % self.vocab, self.vocab)
+        return logits, cache
+
+
+def _chunk_engine(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("cache_len", 32)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("prefill_buckets", (8, 16))
+    return ServingEngine(ChunkToyModel(), params={}, **kw)
+
+
+def test_chunked_prefill_output_invariant_to_chunk_size():
+    """Echo+1 semantics must hold whatever the chunk granularity."""
+    prompt = list(range(1, 11))
+    want = [(prompt[-1] + 1 + i) % 17 for i in range(4)]
+    for chunk in (8, 16, None):
+        eng = _chunk_engine(prefill_chunk_tokens=chunk)
+        assert eng._streaming
+        t = eng.submit(prompt, max_new_tokens=4)
+        status = eng.drain()
+        assert status.completed == 1 and t.request.output == want
+        # cache records the whole sequence, left-aligned (no pad offset)
+        k = np.asarray(eng.pool.gather([0])["k"])[0]
+        np.testing.assert_array_equal(k[: len(prompt)], prompt)
+
+
+def test_prefill_budget_spreads_chunks_over_steps():
+    eng = _chunk_engine(prefill_chunk_tokens=8, cache_len=64, max_batch=1)
+    widths = []
+    eng.on_prefill = widths.append
+    t = eng.submit(list(range(1, 34)), max_new_tokens=2)  # 32-token body
+    eng.step()
+    assert widths == [8]  # one budgeted chunk per step, not the whole body
+    assert t.request.state == "prefilling"
+    eng.drain()
+    assert t.done and sum(widths) == 32
+
+
+def test_prefix_sharing_aliases_blocks_and_counts_hits():
+    eng = _chunk_engine(prefill_chunk_tokens=16, cache_len=64)
+    sys_prompt = list(range(1, 17))  # two full 8-token blocks once admitted
+    t1 = eng.submit(sys_prompt + [3], max_new_tokens=2)
+    eng.drain()
+    assert eng.status().prefix_lookups == 1 and eng.status().prefix_hits == 0
+    t2 = eng.submit(sys_prompt + [5], max_new_tokens=2)
+    eng.drain()
+    st = eng.status()
+    assert st.prefix_hits == 1 and st.prefix_lookups == 2
+    assert st.prefix_hit_rate == 0.5
+    assert eng._prefix_reused_tokens == 16  # both shared blocks skipped prefill
+    assert t1.request.output == [4, 5] and t2.request.output == [6, 7]
+
+
+def test_prefix_sharing_disabled_is_inert():
+    eng = _chunk_engine(prefill_chunk_tokens=16, cache_len=64,
+                        prefix_sharing=False)
+    sys_prompt = list(range(1, 17))
+    for tail in ([3], [5]):
+        eng.submit(sys_prompt + tail, max_new_tokens=2)
+    eng.drain()
+    st = eng.status()
+    assert st.prefix_lookups == 0 and st.shared_blocks == 0
+    assert eng.prefix_overlap(sys_prompt + [9]) == 0
+
+
+def test_engine_status_reports_pool_health():
+    eng = _chunk_engine(prefill_chunk_tokens=16, cache_len=64)
+    sys_prompt = list(range(1, 17))
+    eng.submit(sys_prompt + [3], max_new_tokens=8)
+    eng.step()  # first request activates and registers its prefix
+    eng.submit(sys_prompt + [5], max_new_tokens=8)
+    eng.step()  # sibling aliases the live lane's blocks: refcount > 1
+    st = eng.status()
+    assert 0.0 < st.pool_utilization <= 1.0
+    assert 0.0 <= st.pool_fragmentation < 1.0
+    assert st.shared_blocks == 2 and st.prefix_hits == 1
+
+
+def test_pick_victim_protects_shared_prefix_holders():
+    eng = _chunk_engine(max_batch=3, cache_len=64, prefill_chunk_tokens=16,
+                        n_blocks=12)
+    sys_prompt = list(range(1, 18))  # body = 16 tokens = 2 shareable blocks
+    a = eng.submit(sys_prompt + [3], max_new_tokens=12).request
+    eng.step()  # a activates and registers its prefix
+    b = eng.submit(sys_prompt + [5], max_new_tokens=12).request
+    c = eng.submit(list(range(60, 70)), max_new_tokens=12).request
+    while b.state != "active" or c.state != "active":
+        assert eng.step()
+    lanes = {r.uid: lane for lane, r in enumerate(eng.slots) if r is not None}
+    assert eng.pool.lane_holds_shared(lanes[a.uid])
+    assert eng.pool.lane_holds_shared(lanes[b.uid])
+    assert not eng.pool.lane_holds_shared(lanes[c.uid])
+    # a has emitted most (admitted earliest) so unprotected ranking would
+    # pick it; protection must steer eviction to the private lane instead
+    running = [r for r in eng.slots if r is not None]
+    assert eng._pick_victim(running) is c
+    # with only shared holders running, the fallback still yields a victim
+    assert eng._pick_victim([b]) is b
+
+
+def test_preempted_shared_prefix_request_readmits():
+    """Preemption of a lane whose prefix blocks are aliased by a live sibling
+    must re-admit cleanly (refcounts make the release safe), and the evicted
+    request's output must stay a seamless continuation."""
+    eng = _chunk_engine(max_batch=2, cache_len=64, prefill_chunk_tokens=16,
+                        n_blocks=8)
+    sys_prompt = list(range(1, 18))  # 2 shared blocks once registered
+    a = eng.submit(sys_prompt + [3], max_new_tokens=30, priority=0).request
+    eng.step()  # a activates and registers its prefix
+    b = eng.submit(sys_prompt + [5], max_new_tokens=30, priority=0).request
+    while b.state != "active":
+        assert eng.step()
+    assert eng.pool.shared_blocks == 2  # b rides on a's blocks
+    # Both decodes grow past what 8 blocks can hold.  Every lane holds shared
+    # blocks, so the protected pick falls back and evicts one holder anyway —
+    # release just drops the refcount, the sibling's alias stays intact.
+    status = eng.drain()
+    assert a.done and b.done and not status.exhausted
+    assert status.preempted >= 1 and a.preemptions + b.preemptions >= 1
+    # echo+1 ramps survive eviction + re-admission unbroken
+    assert a.output == [(4 + i) % 17 for i in range(30)]
+    assert b.output == [(6 + i) % 17 for i in range(30)]
+
+
+# ---------------------------------------------------------------------------
+# geometric bucket ladder (prompts longer than the largest configured bucket)
+# ---------------------------------------------------------------------------
+def test_extend_ladder_doubles_to_cache_len():
+    from repro.serve.engine import _extend_ladder
+
+    assert _extend_ladder((8, 16), 256) == (8, 16, 32, 64, 128)
+    assert _extend_ladder((8, 16), 32) == (8, 16)  # seed geometry: unchanged
+    assert _extend_ladder((8,), 64) == (8, 16, 32)
+
+
+def test_long_prompts_share_one_extended_bucket():
+    """Prompts past the configured ladder must not truncate, and near-length
+    prompts must share one extended bucket (one retrace, not one per length)."""
+    eng, _ = _engine(max_batch=2, cache_len=256)
+    t1 = eng.submit(list(range(1, 101)), max_new_tokens=2)
+    t2 = eng.submit(list(range(1, 121)), max_new_tokens=2)
+    eng.drain()
+    assert t1.request.truncated_tokens == 0
+    assert t2.request.truncated_tokens == 0
+    assert t1.done and t2.done
+    assert list(eng._prefill_cache) == [128]  # both hit the same 128 bucket
