@@ -1,0 +1,163 @@
+"""Control-plane microbenchmark: job overhead, fetch, federation, push.
+
+The control plane (DESIGN.md §14) wraps the tuning pipeline in an HTTP
+service; this benchmark measures what that wrapper *costs* so the answer to
+"why not just call ``tune_fleet`` in-process?" stays quantified:
+
+  * **job overhead** — wall time of submit -> succeeded over HTTP minus the
+    same tuner invoked inline: queueing, JSON transport, registry publish,
+    and policy announcement.  Should be a few ms against tunes that take
+    seconds.
+  * **artifact fetch** — ``repro.load_bundle("registry://...")`` end to end
+    (HTTP GET + envelope unwrap + bundle parse + checksum verify), and the
+    idempotent republish (content-hash hit) rate.
+  * **telemetry federation** — serialized snapshot posts merged per second,
+    each one drift-checked against the live artifact's provenance.
+  * **policy push** — announce-to-delivery latency of the long-poll board:
+    the time from a retune's publish to a parked subscriber waking with the
+    new version.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only control
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.control import ControlPlane, ControlPlaneClient
+from repro.core import retune
+from repro.core.bundle import DeploymentBundle
+from repro.core.dataset import build_model_dataset, synthetic_problems
+from repro.core.tuner import tune
+
+from .common import save_json
+
+DEVICE = "tpu_v5e"
+
+
+def _median_of(fn, reps: int) -> float:
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _snapshot(rng, n: int) -> retune.TelemetrySnapshot:
+    snap = retune.TelemetrySnapshot()
+    for _ in range(n):
+        p = (int(rng.choice([1, 2, 4])), int(rng.choice([8192, 16384])),
+             int(rng.choice([1024, 2048])), 1)
+        b = retune.shape_bucket(p)
+        snap.matmul_counts[b] = snap.matmul_counts.get(b, 0) + 1
+        snap.problems[b] = p
+        snap.n_events += 1
+    return snap
+
+
+def main(quick: bool = False) -> list[tuple[str, float, str]]:
+    n_problems = 40 if quick else 120
+    reps = 3 if quick else 7
+    n_posts = 20 if quick else 100
+
+    ds = build_model_dataset(synthetic_problems(n_problems), device_name=DEVICE)
+
+    def tuner(spec):
+        return DeploymentBundle({DEVICE: tune(ds, n_kernels=6).deployment})
+
+    t_inline = _median_of(lambda: tuner({}), reps)
+
+    plane = ControlPlane(port=0, min_events=10_000_000, tuner=tuner)
+    plane.start()
+    try:
+        client = ControlPlaneClient(plane.url)
+
+        # -- job overhead ----------------------------------------------------
+        def job_round_trip():
+            job = client.submit({"kind": "tune", "name": "bench"})
+            client.wait_job(job["id"], timeout=120, poll_interval=0.01)
+
+        t_job = _median_of(job_round_trip, reps)
+        overhead_ms = max(0.0, (t_job - t_inline) * 1e3)
+
+        # every publish after the first was a content-hash hit (same spec)
+        versions = len(plane.registry.versions("bench"))
+
+        # -- artifact fetch --------------------------------------------------
+        import repro
+
+        uri = client.registry_uri("bench")
+        t_fetch = _median_of(lambda: repro.load_bundle(uri), max(reps, 5))
+
+        # -- telemetry federation -------------------------------------------
+        rng = np.random.default_rng(0)
+        snaps = [_snapshot(rng, 50).to_json() for _ in range(n_posts)]
+        t0 = time.perf_counter()
+        for i, wire in enumerate(snaps):
+            client.post_telemetry(DEVICE, wire, host=f"h{i % 8}",
+                                  artifact="bench")
+        t_fed = time.perf_counter() - t0
+        posts_per_s = n_posts / t_fed
+        merged = plane._federation[DEVICE].n_events
+
+        # -- policy push latency --------------------------------------------
+        lat: list[float] = []
+
+        def push_once():
+            ent0 = plane.policy_state(DEVICE) or {"seq": 0}
+            woke = {}
+
+            def poll():
+                woke["ent"] = client.policy(DEVICE, after=ent0["seq"], timeout=20.0)
+                woke["t"] = time.perf_counter()
+
+            t = threading.Thread(target=poll)
+            t.start()
+            time.sleep(0.05)  # let the poller park
+            t0 = time.perf_counter()
+            plane._announce([DEVICE], "bench", plane.registry.latest("bench").version,
+                            "bench-push")
+            t.join(timeout=30.0)
+            assert woke["ent"] is not None
+            lat.append(woke["t"] - t0)
+
+        for _ in range(max(reps, 5)):
+            push_once()
+        lat.sort()
+        push_ms = lat[len(lat) // 2] * 1e3
+    finally:
+        plane.stop()
+
+    results = {
+        "inline_tune_s": t_inline,
+        "job_round_trip_s": t_job,
+        "job_overhead_ms": overhead_ms,
+        "artifact_fetch_ms": t_fetch * 1e3,
+        "artifact_versions": versions,
+        "telemetry_posts_per_s": posts_per_s,
+        "federated_events": merged,
+        "policy_push_ms": push_ms,
+        "quick": quick,
+    }
+    save_json("bench_control.json", results)
+    return [
+        ("control_job_overhead_ms", round(overhead_ms, 2),
+         f"HTTP job {t_job * 1e3:.0f} ms vs inline tune {t_inline * 1e3:.0f} ms"),
+        ("control_artifact_fetch_ms", round(t_fetch * 1e3, 2),
+         f"registry:// load incl checksum verify; {versions} version(s) after "
+         f"{reps} identical publishes (content-hash dedup)"),
+        ("control_telemetry_posts_per_s", round(posts_per_s, 1),
+         f"{n_posts} posts from 8 hosts merged to {merged} events, "
+         f"drift-checked each post"),
+        ("control_policy_push_ms", round(push_ms, 2),
+         "announce -> parked long-poller wakes with the new version"),
+    ]
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

@@ -15,6 +15,7 @@ import sys
 import time
 
 from . import (
+    bench_control,
     bench_families,
     bench_serving,
     bench_transfer,
@@ -40,6 +41,7 @@ MODULES = {
     "families": bench_families,  # beyond-paper: wkv/ssm via the family registry
     "transfer": bench_transfer,  # staged pipeline: tune-time-vs-quality frontier
     "serving": bench_serving,  # fleet tier: paged KV + SLO-aware batching
+    "control": bench_control,  # control plane: job/fetch/federation/push costs
 }
 
 

@@ -1,0 +1,176 @@
+"""Tuning control-plane end-to-end demo (the CI control-plane job).
+
+The fleet-wide tune -> publish -> serve -> federate -> retune -> push loop
+of DESIGN.md §14, over real HTTP against a real in-process service:
+
+  1. start a ControlPlane (ephemeral port) and submit a bring-up tune over
+     ``POST /jobs`` — staged transfer tune (donors first) with
+     ``measure_budget="auto"`` sized from donor lineage; assert the job
+     walked queued -> running -> succeeded;
+  2. open the versioned, content-hashed artifact straight from the registry
+     with ``repro.load_bundle("registry://...")``;
+  3. bring up TWO serving hosts on the artifact, each with an attached
+     :class:`repro.control.PolicySubscriber` long-polling the policy board;
+  4. serve a shifted workload (the artifact was tuned for a different
+     architecture's GEMMs) and ``POST /telemetry`` each host's snapshot:
+     host-1 alone stays under the federation's min-events floor — NO
+     retune; host-2's merged aggregate crosses it and the drift verdict
+     schedules an incremental-retune job;
+  5. the retuned child version lands on the policy board, both subscribers
+     deliver it, and each engine hot-swaps it canary-gated at a step
+     boundary — mid-batch, zero dropped requests;
+  6. assert health/job bookkeeping saw all of it.
+
+Run:  PYTHONPATH=src python examples/control_plane_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro
+from repro.configs import registry
+from repro.control import ControlPlaneClient, PolicySubscriber
+from repro.core.retune import TelemetrySnapshot
+
+DEVICE = "tpu_v5e"
+MIN_EVENTS = 24  # one host's window stays below; two hosts' merge crosses
+
+
+def serve_batch(engine, rng, cfg, n_prompts: int, max_new: int = 6):
+    tickets = [
+        engine.submit(
+            rng.integers(0, cfg.vocab, size=int(rng.integers(6, 20))).astype(np.int32),
+            max_new_tokens=max_new,
+        )
+        for _ in range(n_prompts)
+    ]
+    status = engine.drain()
+    return tickets, status
+
+
+def main() -> None:
+    plane = repro.ControlPlane(port=0, min_events=MIN_EVENTS)
+    plane.start()
+    try:
+        run(plane)
+    finally:
+        plane.stop()
+    print("\ncontrol-plane demo: OK")
+
+
+def run(plane) -> None:
+    client = ControlPlaneClient(plane.url)
+    print(f"control plane up at {plane.url}")
+
+    # -- 1. bring-up tune over HTTP: staged transfer, auto-sized budget ------
+    job = client.submit({
+        "kind": "tune",
+        "name": "default",
+        "devices": [DEVICE, "tpu_v4"],
+        "archs": ["qwen2.5-32b"],      # NOT the arch we serve below -> drift
+        "transfer": True,
+        "measure_budget": "auto",
+        "n_kernels": 4,
+        "max_problems": 60,
+    })
+    assert job["state"] == "queued", job
+    done = client.wait_job(job["id"], timeout=600)
+    assert done["state"] == "succeeded", done
+    states = [s for s, _t in done["history"]]
+    assert states == ["queued", "running", "succeeded"], states
+    art = done["artifact"]
+    print(f"{job['id']}: {' -> '.join(states)}; "
+          f"published {art['name']}@{art['version']} for {art['devices']}")
+
+    # -- 2. the serving host opens the artifact by registry URI --------------
+    uri = client.registry_uri(art["name"], art["version"])
+    bundle = repro.load_bundle(uri)
+    assert sorted(bundle.devices) == sorted(art["devices"])
+    recipient, _resolved = bundle.deployment_for("tpu_v4")
+    v4 = (recipient.meta.get("tuning_lineage") or {}).get("matmul", {})
+    assert v4.get("source_device") == DEVICE, v4       # donors tuned first
+    assert 0.0 < v4.get("measured_fraction", 1.0) < 1.0, v4  # auto budget bit
+    print(f"loaded {uri}\n  transfer lineage: tpu_v4 measured "
+          f"{v4['measured_fraction']:.1%} (auto budget from donor "
+          f"model_error={v4.get('model_error')})")
+
+    # -- 3. two serving hosts, each subscribed to the policy board -----------
+    cfg = registry.get("granite-8b").reduced()
+    from repro.models.model import build_model
+
+    model = build_model(cfg, dtype=jnp.float32, param_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+
+    hosts = []
+    for name in ("host-1", "host-2"):
+        rt = bundle.runtime(device=DEVICE, name=name)
+        rt.set_selection_logging(True)
+        engine = rt.serve(model, params, max_batch=2, cache_len=64, block_size=16)
+        sub = PolicySubscriber(client, DEVICE, engine, poll_timeout=5.0).start()
+        hosts.append((name, rt, engine, sub))
+
+    # -- 4. shifted traffic + federation -------------------------------------
+    acks = []
+    for i, (name, rt, engine, _sub) in enumerate(hosts):
+        rng = np.random.default_rng(7 + i)
+        _tickets, status = serve_batch(engine, rng, cfg, n_prompts=4)
+        assert status.completed == 4, status
+        snap = TelemetrySnapshot.from_runtime(rt)
+        assert snap.n_events > 0, f"{name} logged no selections"
+        ack = client.post_telemetry(DEVICE, snap, host=name)
+        acks.append(ack)
+        trig = sorted(f for f, r in ack["drift"].items() if r["triggered"])
+        print(f"{name}: posted {snap.n_events} events -> federated "
+              f"{ack['merged_events']} across {ack['hosts']} host(s); "
+              f"triggered={trig or 'none'} retune_job={ack['retune_job']}")
+
+    # One host alone is under the floor; the merged fleet view is not.
+    assert acks[0]["retune_job"] is None, acks[0]
+    assert acks[0]["merged_events"] < MIN_EVENTS <= acks[1]["merged_events"], acks
+    assert acks[1]["retune_job"] is not None, (
+        "federated aggregate should have triggered a retune", acks[1])
+
+    # -- 5. retune job -> child version -> policy push -> live hot-swap ------
+    retune = client.wait_job(acks[1]["retune_job"], timeout=600)
+    assert retune["state"] == "succeeded", retune
+    child = retune["artifact"]
+    assert child["parent"] == art["version"], child
+    print(f"{retune['id']}: incremental retune of {child['families']} -> "
+          f"{child['name']}@{child['version']} (parent {child['parent']})")
+
+    deadline = time.monotonic() + 30.0
+    while time.monotonic() < deadline and not all(s.updates for *_rest, s in hosts):
+        time.sleep(0.1)
+    for name, _rt, _engine, sub in hosts:
+        assert sub.updates, f"{name} subscriber never saw the policy push"
+        assert sub.updates[-1]["version"] == child["version"], sub.updates
+
+    # The offer adopts at the next step boundary — mid-traffic, zero drops.
+    for i, (name, rt, engine, _sub) in enumerate(hosts):
+        epoch0 = rt.policy_epoch()
+        rng = np.random.default_rng(21 + i)
+        _tickets, status = serve_batch(engine, rng, cfg, n_prompts=4)
+        assert status.completed == 4, (name, status)  # nothing dropped
+        ev = next(e for e in reversed(engine.retune_events)
+                  if e.source == "control-plane")
+        assert ev.swapped, (name, ev)
+        assert rt.policy_epoch() > epoch0
+        print(f"{name}: hot-swapped {child['version']} at step {ev.step} "
+              f"(source={ev.source}), 4/4 requests completed")
+
+    for _name, _rt, _engine, sub in hosts:
+        sub.stop()
+
+    # -- 6. the service's own books ------------------------------------------
+    health = client.healthz()
+    assert health["status"] == "ok"
+    assert health["jobs"].get("succeeded", 0) >= 2, health
+    assert health["artifacts"]["default"] == 2, health  # bring-up + retune
+    assert DEVICE in health["devices"], health
+    print(f"healthz: jobs={health['jobs']} artifacts={health['artifacts']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,14 +26,18 @@ nor the tuning stack until an attribute is touched.
 """
 from __future__ import annotations
 
-__version__ = "0.6.0"
+__version__ = "0.7.0"
 
 __all__ = [
+    "ArtifactRegistry",
+    "ControlPlane",
+    "ControlPlaneClient",
     "Deployment",
     "DeploymentBundle",
     "EngineStatus",
     "FaultPlan",
     "KernelRuntime",
+    "PolicySubscriber",
     "Request",
     "Router",
     "ServingEngine",
@@ -50,11 +54,15 @@ __all__ = [
 
 # name -> (module, attribute): resolved on first access, cached in globals().
 _LAZY = {
+    "ArtifactRegistry": ("repro.control.registry", "ArtifactRegistry"),
+    "ControlPlane": ("repro.control.service", "ControlPlane"),
+    "ControlPlaneClient": ("repro.control.client", "ControlPlaneClient"),
     "Deployment": ("repro.core.dispatch", "Deployment"),
     "DeploymentBundle": ("repro.core.bundle", "DeploymentBundle"),
     "FaultPlan": ("repro.core.faults", "FaultPlan"),
     "KernelRuntime": ("repro.core.runtime", "KernelRuntime"),
     "EngineStatus": ("repro.serve.engine", "EngineStatus"),
+    "PolicySubscriber": ("repro.control.client", "PolicySubscriber"),
     "Request": ("repro.serve.engine", "Request"),
     "Router": ("repro.serve.router", "Router"),
     "ServingEngine": ("repro.serve.engine", "ServingEngine"),
@@ -96,7 +104,10 @@ def load_bundle(path):
 
     ``repro.load_bundle(path).runtime(device=...)`` is the serving-host
     bring-up path; plain v1/v2 single-device deployment files load as
-    degenerate one-entry bundles.
+    degenerate one-entry bundles.  ``path`` may also be a control-plane
+    registry URI (``registry://host:port/name[/version]``) or a plain
+    ``http(s)://`` URL — the artifact is fetched from a running
+    :class:`repro.control.ControlPlane`.
     """
     from repro.core.bundle import DeploymentBundle
 

@@ -100,6 +100,46 @@ class BundleIntegrityError(BundleError):
     """Checksum verification left nothing servable (every device dropped)."""
 
 
+def parse_registry_uri(uri: str) -> tuple[str, str, str]:
+    """Split ``registry://host:port/name[/version]`` into (base_url, name, version).
+
+    ``base_url`` is the plain HTTP root of the control-plane service;
+    ``version`` defaults to ``"latest"``.
+    """
+    rest = uri[len("registry://"):]
+    netloc, _, tail = rest.partition("/")
+    parts = [p for p in tail.split("/") if p]
+    if not netloc or not parts or len(parts) > 2:
+        raise BundleFormatError(
+            f"malformed registry URI {uri!r} "
+            "(expected registry://host:port/name[/version])", section="uri")
+    name = parts[0]
+    version = parts[1] if len(parts) == 2 else "latest"
+    return f"http://{netloc}", name, version
+
+
+def _fetch_uri(uri: str) -> str:
+    """GET a bundle (or registry envelope) over HTTP; registry:// resolves first."""
+    import urllib.error
+    import urllib.request
+
+    if uri.startswith("registry://"):
+        base, name, version = parse_registry_uri(uri)
+        url = f"{base}/artifacts/{name}/{version}"
+    else:
+        url = uri
+    try:
+        with urllib.request.urlopen(url, timeout=30.0) as resp:
+            return resp.read().decode("utf-8")
+    except urllib.error.HTTPError as e:
+        raise BundleFormatError(
+            f"registry fetch of {uri} failed: HTTP {e.code} {e.reason}",
+            section="uri") from e
+    except (urllib.error.URLError, OSError, TimeoutError) as e:
+        raise BundleFormatError(
+            f"registry fetch of {uri} failed: {e}", section="uri") from e
+
+
 def _section_checksum(obj) -> str:
     """CRC32 over the section's canonical JSON, as 8 hex chars."""
     payload = json.dumps(obj, sort_keys=True, separators=(",", ":")).encode()
@@ -382,18 +422,34 @@ class DeploymentBundle:
 
     @staticmethod
     def load(path: str | Path) -> "DeploymentBundle":
-        text = Path(path).read_text()
+        """Load a bundle from a file path — or a control-plane URI.
+
+        ``registry://host:port/name[/version]`` fetches the artifact from a
+        running :class:`repro.control.ControlPlane`'s registry (version
+        defaults to ``latest``); plain ``http(s)://`` URLs fetch whatever
+        bundle (or registry envelope) the endpoint serves.  Fetched text
+        rides the same chaos site (``bundle.load``) and checksum pass as a
+        file read, so a corrupted wire transfer degrades exactly like bit
+        rot on disk.
+        """
+        path_str = str(path)
+        if path_str.startswith(("registry://", "http://", "https://")):
+            text = _fetch_uri(path_str)
+        else:
+            text = Path(path).read_text()
         from .runtime import current_runtime
 
         plan = current_runtime().fault_plan
         if plan is not None:  # chaos site: simulate bit rot on the wire
-            text = plan.corrupt_text("bundle.load", text, key=str(path))
+            text = plan.corrupt_text("bundle.load", text, key=path_str)
         try:
             blob = json.loads(text)
         except json.JSONDecodeError as e:
             raise BundleFormatError(
                 f"bundle file {path} is not valid JSON: {e.msg}", offset=e.pos
             ) from e
+        if isinstance(blob, dict) and blob.get("format") == "artifact" and "blob" in blob:
+            blob = blob["blob"]  # registry envelope: unwrap to the bundle blob
         return DeploymentBundle.from_blob(blob)
 
 

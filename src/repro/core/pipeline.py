@@ -458,6 +458,70 @@ def _lineage_record(
 
 
 # ---------------------------------------------------------------------------
+# measure-budget auto-sizing
+# ---------------------------------------------------------------------------
+AUTO_BUDGET_FLOOR = 0.10
+AUTO_BUDGET_CEIL = 0.75
+AUTO_BUDGET_DEFAULT = 0.35
+
+
+def auto_measure_budget(
+    model_error: float | None,
+    *,
+    floor: float = AUTO_BUDGET_FLOOR,
+    ceil: float = AUTO_BUDGET_CEIL,
+    default: float = AUTO_BUDGET_DEFAULT,
+) -> float:
+    """Size a measurement budget from a donor's recorded model error.
+
+    The staged pipeline stamps each family's transfer-model quality into
+    ``tuning_lineage.model_error`` (mean relative error of the perf model on
+    held-out measured cells).  A low error means the donor's model predicts
+    this device pair well, so few confirmation measurements are needed; a
+    high error means the transfer is unreliable and the budget should grow
+    toward a full harvest.  The mapping is linear — ``0.05 + 3 * error`` —
+    clipped to ``[floor, ceil]``; with no recorded error we fall back to a
+    conservative ``default``.
+    """
+    if model_error is None:
+        return default
+    return min(ceil, max(floor, 0.05 + 3.0 * float(model_error)))
+
+
+def donor_model_error(transfer_from, family: str = "matmul") -> float | None:
+    """Pull ``tuning_lineage[family].model_error`` out of a donor, if stamped."""
+    if transfer_from is None:
+        return None
+    dep = getattr(transfer_from, "deployment", transfer_from)
+    meta = getattr(dep, "meta", None)
+    if not isinstance(meta, dict):
+        return None
+    record = (meta.get("tuning_lineage") or {}).get(family)
+    if not isinstance(record, dict):
+        return None
+    err = record.get("model_error")
+    return float(err) if err is not None else None
+
+
+def resolve_measure_budget(
+    measure_budget, transfer_from=None, *, family: str = "matmul"
+) -> float | None:
+    """Resolve the ``"auto"`` sentinel into a concrete budget fraction.
+
+    Floats and ``None`` pass through untouched.  ``"auto"`` resolves per
+    device pair: with no donor there is nothing to transfer from, so the
+    root of the bring-up order measures in full (``None``); with a donor,
+    the budget is sized by :func:`auto_measure_budget` from the lineage
+    ``model_error`` the donor's own tune recorded for ``family``.
+    """
+    if measure_budget != "auto":
+        return measure_budget
+    if transfer_from is None:
+        return None
+    return auto_measure_budget(donor_model_error(transfer_from, family))
+
+
+# ---------------------------------------------------------------------------
 # stages 5+6: the full per-family pipeline
 # ---------------------------------------------------------------------------
 def run_family_pipeline(
@@ -471,7 +535,7 @@ def run_family_pipeline(
     normalization: str = "standard",
     seed: int = 0,
     prune_ratio: float | None = None,
-    measure_budget: float | None = None,
+    measure_budget: float | str | None = None,
     transfer_from=None,
 ) -> FamilyPipelineResult:
     """All six stages for one registered family (any family, matmul included).
@@ -480,8 +544,11 @@ def run_family_pipeline(
     this reproduces the legacy ``tune_family`` monolith exactly.  The donor
     (``transfer_from``, anything :func:`as_transfer_prior` accepts) supplies
     both the k-means warm start and the measure-only-disagreements plan.
+    ``measure_budget="auto"`` sizes the budget from the donor's recorded
+    lineage via :func:`resolve_measure_budget`.
     """
     fam = family if isinstance(family, KernelFamily) else get_family(family)
+    measure_budget = resolve_measure_budget(measure_budget, transfer_from, family=fam.name)
     cand = generate_candidates(fam, arch_ids, problems=problems, device_name=device_name)
     donor = as_transfer_prior(transfer_from, fam.name)
     need_model = donor is not None or (

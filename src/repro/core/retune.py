@@ -202,18 +202,98 @@ class TelemetrySnapshot:
         return {b: c / total for b, c in fam.items()}
 
     def merge(self, other: "TelemetrySnapshot") -> "TelemetrySnapshot":
-        """Fold ``other`` into this snapshot (windowed collection)."""
+        """Fold ``other`` into this snapshot (windowed or multi-host collection).
+
+        **Commutative**: folding host A's snapshot into host B's produces the
+        same aggregate as folding B into A — a federation service merging
+        per-(device, family) telemetry from many serving hosts must not let
+        arrival order change the drift verdict.  Histogram counts and
+        ``n_events`` add; the representative problem per bucket is the
+        largest shape tuple seen for it (deterministic, and within a bucket
+        any member is an equally valid re-harvest candidate); ``observed``
+        rows and ``incidents`` are kept in a canonical sort (per-host
+        ``seq`` order is preserved inside the incident sort key).
+        """
         for fname, fam in other.counts.items():
             mine = self.counts.setdefault(fname, {})
             for b, c in fam.items():
                 mine[b] = mine.get(b, 0) + c
         for fname, probs in other.family_problems.items():
-            self.family_problems.setdefault(fname, {}).update(probs)
+            mine_p = self.family_problems.setdefault(fname, {})
+            for b, p in probs.items():
+                prev = mine_p.get(b)
+                mine_p[b] = p if prev is None else max(prev, tuple(p))
         for b, rows in other.observed.items():
-            self.observed.setdefault(b, []).extend(rows)
-        self.incidents.extend(other.incidents)
+            merged = self.observed.setdefault(b, [])
+            merged.extend(rows)
+            merged.sort(key=repr)
+        if other.incidents:
+            self.incidents = sorted(
+                self.incidents + list(other.incidents),
+                key=lambda r: (r.get("seq", 0), repr(sorted(r.items(), key=str))),
+            )
         self.n_events += other.n_events
         return self
+
+    # -- wire form (control-plane telemetry federation) ----------------------
+    def to_json(self) -> dict:
+        """JSON-ready wire form for federation (``POST /telemetry``).
+
+        Bucket tuples become the ``bucket_key`` strings of the provenance
+        blobs; observed config objects are flattened to their ``name()``
+        string (the observed table is operator-facing evidence — the drift
+        detector and the incremental retune key off the histograms and
+        representative problems, which round-trip exactly).
+        """
+        def cfg_name(c):
+            if c is None:
+                return None
+            return c.name() if hasattr(c, "name") and callable(c.name) else str(c)
+
+        return {
+            "version": 1,
+            "counts": {
+                fam: {bucket_key(b): int(c) for b, c in sorted(buckets.items())}
+                for fam, buckets in sorted(self.counts.items())
+            },
+            "problems": {
+                fam: {bucket_key(b): [int(v) for v in p] for b, p in sorted(probs.items())}
+                for fam, probs in sorted(self.family_problems.items())
+            },
+            "observed": {
+                bucket_key(b): [
+                    [cfg_name(cfg), float(mean), int(trials)]
+                    for cfg, mean, trials in rows
+                ]
+                for b, rows in sorted(self.observed.items())
+            },
+            "incidents": [dict(r) for r in self.incidents],
+            "n_events": int(self.n_events),
+        }
+
+    @staticmethod
+    def from_json(blob: dict) -> "TelemetrySnapshot":
+        """Parse the :meth:`to_json` wire form back into a snapshot.
+
+        Counts, representative problems, incidents, and ``n_events``
+        round-trip exactly; observed configs come back as their name strings.
+        """
+        snap = TelemetrySnapshot()
+        for fam, buckets in (blob.get("counts") or {}).items():
+            snap.counts[fam] = {
+                parse_bucket_key(k): int(c) for k, c in buckets.items()
+            }
+        for fam, probs in (blob.get("problems") or {}).items():
+            snap.family_problems[fam] = {
+                parse_bucket_key(k): tuple(int(v) for v in p) for k, p in probs.items()
+            }
+        for k, rows in (blob.get("observed") or {}).items():
+            snap.observed[parse_bucket_key(k)] = [
+                (cfg, float(mean), int(trials)) for cfg, mean, trials in rows
+            ]
+        snap.incidents = [dict(r) for r in blob.get("incidents") or []]
+        snap.n_events = int(blob.get("n_events", 0))
+        return snap
 
 
 # ---------------------------------------------------------------------------

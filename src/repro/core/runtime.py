@@ -320,6 +320,31 @@ class KernelRuntime:
         resolved = self.activate_device(requested, strict=strict)
         return bundle.deployments[resolved]
 
+    def apply_policy_update(self, deployment, device: str | None = None) -> str | None:
+        """Adopt a control-plane-pushed deployment (subscription client path).
+
+        The engine-less counterpart of ``ServingEngine.adopt_deployment``: a
+        :class:`repro.control.PolicySubscriber` attached directly to a
+        runtime (a trainer, a batch job — anything dispatching without a
+        serving engine) lands pushed artifacts here.  ``device=None`` targets
+        the currently active device; the update goes through
+        :meth:`install_for_device`, so when the target is live this is the
+        same lock+epoch hot-swap the retune loop uses (every dispatching
+        thread drops its shape cache on its next selection).  With no target
+        device at all the policy installs directly.  Returns the canonical
+        device name the update landed on (``None`` for a direct install).
+        """
+        from .devices import canonical_device_name
+
+        target = canonical_device_name(device) if device is not None else self.active_device()
+        if target is None:
+            self.install(deployment)
+            return None
+        self.install_for_device(target, deployment)
+        if self.active_device() is None:
+            self.activate_device(target)
+        return target
+
     # -- pallas dispatch flags -------------------------------------------------
     def set_pallas_enabled(self, enabled: bool, *, interpret: bool = False) -> None:
         """Route ops through the Pallas kernels (interpret=True on CPU)."""

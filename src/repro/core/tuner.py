@@ -86,7 +86,7 @@ def tune_family(
     device_name: str | None = None,
     problems: list[tuple] | None = None,
     prune_ratio: float | None = None,
-    measure_budget: float | None = None,
+    measure_budget: float | str | None = None,
     transfer_from=None,
 ) -> FamilyTuneResult:
     """Prune + classify one registered kernel family (the paper pipeline).
@@ -203,7 +203,7 @@ def tune_for_archs(
     family_tunings: dict | None = None,
     transfer_from=None,
     prune_ratio: float | None = None,
-    measure_budget: float | None = None,
+    measure_budget: float | str | None = None,
 ) -> TuneResult:
     """Tune against the GEMM shapes the assigned architectures will launch.
 
@@ -213,10 +213,13 @@ def tune_for_archs(
     the matmul table comes from ``pipeline.staged_matmul_dataset`` — pruned,
     measured only where model and donor disagree, model-filled elsewhere —
     and the tuning lineage is stamped into the deployment.  All-defaults is
-    the legacy full-harvest tune, bit-for-bit.
+    the legacy full-harvest tune, bit-for-bit.  ``measure_budget="auto"``
+    sizes the budget from the donor's recorded ``tuning_lineage.model_error``
+    (``pipeline.resolve_measure_budget``): no donor measures in full.
     """
-    from .pipeline import staged_matmul_dataset, tune_dataset
+    from .pipeline import resolve_measure_budget, staged_matmul_dataset, tune_dataset
 
+    measure_budget = resolve_measure_budget(measure_budget, transfer_from)
     problems = harvest_problems(arch_ids, max_problems=max_problems)
     staged = (
         transfer_from is not None
@@ -287,7 +290,7 @@ def tune_fleet(
     families: list[str] | None = None,
     transfer: bool = False,
     prune_ratio: float | None = None,
-    measure_budget: float | None = None,
+    measure_budget: float | str | None = None,
 ) -> FleetTuneResult:
     """Tune every device in one run and pack a :class:`DeploymentBundle`.
 
@@ -304,8 +307,11 @@ def tune_fleet(
     after the first full-tunes only where the model and its nearest tuned
     sibling (``devices.transfer_donor``) disagree; ``prune_ratio`` /
     ``measure_budget`` apply to every staged tune including the shared
-    family tunings.  ``host_cpu`` always measures from scratch (a sibling
-    TPU's tuning says nothing about this host's cache hierarchy).
+    family tunings.  ``measure_budget="auto"`` sizes each device's budget
+    from its donor's recorded lineage ``model_error`` (the bring-up root and
+    donor-less tunes measure in full).  ``host_cpu`` always measures from
+    scratch (a sibling TPU's tuning says nothing about this host's cache
+    hierarchy).
     """
     from .bundle import DeploymentBundle
     from .devices import canonical_device_name, transfer_donor, transfer_order

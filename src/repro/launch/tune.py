@@ -19,8 +19,10 @@ New hardware can be brought up cheaply through the staged pipeline
 sibling's artifact and measures only where model and sibling disagree,
 ``--prune-ratio 0.5`` drops the half of the config space the perf model rules
 out before any measurement, and ``--measure-budget 0.3`` hard-caps measured
-cells at 30% of a full harvest.  Fleet mode chains transfers automatically
-with ``--transfer`` (donors tune first, siblings warm-start off them).
+cells at 30% of a full harvest (``--measure-budget auto`` sizes the cap per
+device from the donor's recorded lineage ``model_error``).  Fleet mode chains
+transfers automatically with ``--transfer`` (donors tune first, siblings
+warm-start off them).
 
 Artifacts are consumed by trainers/servers via ``--deployment`` / ``--bundle``
 launcher flags or ``repro.core.bundle.install_bundle(path)``.
@@ -33,6 +35,23 @@ from repro.configs import registry
 from repro.core.cluster import CLUSTER_METHODS
 from repro.core.normalize import NORMALIZATIONS
 from repro.core.tuner import save_fleet, save_result, tune, tune_fleet, tune_for_archs
+
+
+def _measure_budget(text: str):
+    """argparse type for --measure-budget: a fraction in (0, 1) or 'auto'."""
+    if text.strip().lower() == "auto":
+        return "auto"
+    try:
+        val = float(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected a fraction in (0, 1) or 'auto', got {text!r}"
+        ) from None
+    if not 0.0 < val < 1.0:
+        raise argparse.ArgumentTypeError(
+            f"must be a fraction in (0, 1) or 'auto', got {val}"
+        )
+    return val
 
 
 def main(argv=None) -> None:
@@ -62,18 +81,19 @@ def main(argv=None) -> None:
     ap.add_argument("--prune-ratio", type=float, default=None, metavar="R",
                     help="keep only the top R (0<R<1) of the config space by predicted "
                          "perf before measuring anything")
-    ap.add_argument("--measure-budget", type=float, default=None, metavar="B",
+    ap.add_argument("--measure-budget", type=_measure_budget, default=None, metavar="B",
                     help="measure at most B (0<B<1) of the full harvest's cells; the "
-                         "rest is filled from the perf model")
+                         "rest is filled from the perf model.  'auto' sizes B per "
+                         "device from its donor's recorded lineage model_error "
+                         "(donor-less tunes measure in full)")
     args = ap.parse_args(argv)
 
     if not args.out and not args.bundle:
         ap.error("one of --out / --bundle is required")
     if args.devices and not args.bundle:
         ap.error("--devices selects fleet mode and requires --bundle <path>")
-    for flag, val in (("--prune-ratio", args.prune_ratio), ("--measure-budget", args.measure_budget)):
-        if val is not None and not 0.0 < val < 1.0:
-            ap.error(f"{flag} must be a fraction in (0, 1), got {val}")
+    if args.prune_ratio is not None and not 0.0 < args.prune_ratio < 1.0:
+        ap.error(f"--prune-ratio must be a fraction in (0, 1), got {args.prune_ratio}")
     if args.transfer_from and args.device == "host_cpu":
         ap.error("--transfer-from does not apply to host_cpu (it always measures)")
     transfer_prior = None

@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
 import warnings
 from collections import deque
@@ -101,6 +102,10 @@ class RetuneEvent:
     ``rejected`` names families whose retune candidate failed the canary and
     was never installed; ``rolled_back`` marks the auto-rollback event of a
     previously installed policy that regressed in service (DESIGN.md §11).
+    ``source`` records who produced the swapped-in deployment: ``"drift"``
+    for the engine's own loop, ``"control-plane"`` (or any caller-supplied
+    label) for an externally pushed artifact adopted via
+    :meth:`ServingEngine.adopt_deployment`.
     """
 
     step: int
@@ -114,6 +119,7 @@ class RetuneEvent:
     families: tuple[str, ...] = ()
     rejected: tuple[str, ...] = ()
     rolled_back: bool = False
+    source: str = "drift"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -364,6 +370,11 @@ class ServingEngine:
         # before installing a candidate, the rollback watchdog pops it.
         self._swap_history: deque = deque(maxlen=max(int(swap_history), 1))
         self._incidents_at_swap: int | None = None
+        # Externally offered deployment (control-plane push): staged from any
+        # thread via offer_deployment, adopted at the next step boundary so
+        # the swap never lands mid-decode.
+        self._offer_lock = threading.Lock()
+        self._offered: tuple[object, str] | None = None
         if retune_interval is not None:
             # Telemetry source: the runtime's selection log (cache hits
             # included, so the histogram reflects real traffic frequencies).
@@ -483,8 +494,17 @@ class ServingEngine:
 
     def _chunk_fn(self, width: int):
         if width not in self._chunk_cache:
+            # jit a fresh closure, not the bound method: jax's trace cache
+            # keys on the callable, and equal bound methods would share one
+            # trace across engines (and across pop+re-jit after a hot-swap),
+            # skipping the trace-time kernel selection that must run under
+            # THIS engine's runtime and policy.
+            chunk = self.model.prefill_chunk
             self._chunk_cache[width] = jax.jit(
-                self.model.prefill_chunk, donate_argnums=(1,)
+                lambda params, cache, tokens, start, last: chunk(
+                    params, cache, tokens, start, last
+                ),
+                donate_argnums=(1,),
             )
         return self._chunk_cache[width]
 
@@ -697,8 +717,12 @@ class ServingEngine:
 
     def _decode_fn(self, width: int):
         if width not in self._decode_cache:
+            # Fresh closure per jit — see _chunk_fn for why the bound method
+            # must not be jitted directly.
+            step = self.model.decode_step
             self._decode_cache[width] = jax.jit(
-                self.model.decode_step, donate_argnums=(1,)
+                lambda params, cache, tokens, pos: step(params, cache, tokens, pos),
+                donate_argnums=(1,),
             )
         return self._decode_cache[width]
 
@@ -1074,6 +1098,85 @@ class ServingEngine:
         self.retune_events.append(ev)
         return ev
 
+    # -- control-plane adoption (DESIGN.md §14) --------------------------------
+    def offer_deployment(self, candidate, *, source: str = "control-plane") -> None:
+        """Stage an externally produced deployment for adoption.
+
+        Thread-safe: a :class:`repro.control.PolicySubscriber` (or any other
+        background delivery) calls this from its own thread; the engine
+        adopts the candidate at the top of its next :meth:`step`, so the
+        hot-swap always lands on a step boundary, never mid-decode.  A newer
+        offer replaces an unclaimed older one (last writer wins — the
+        control plane's latest artifact is the one that matters).
+        """
+        with self._offer_lock:
+            self._offered = (candidate, source)
+
+    def _take_offer(self):
+        with self._offer_lock:
+            offer, self._offered = self._offered, None
+        return offer
+
+    def adopt_deployment(
+        self, candidate, *, source: str = "external"
+    ) -> RetuneEvent:
+        """Canary-gate and hot-swap an externally produced deployment.
+
+        The adoption path for artifacts this engine did *not* tune itself —
+        a control-plane retune pushed over the policy long-poll, an operator
+        hand-off, an A/B promotion.  Every family with live traffic in the
+        current telemetry window is canaried (selection quality + numeric
+        ref agreement, exactly the gate :meth:`maybe_retune` applies to its
+        own candidates); one failing family rejects the whole artifact — an
+        external bundle swaps atomically or not at all.  On adoption the
+        incumbent joins the bounded swap history and the rollback watchdog
+        re-arms, so a pushed artifact that regresses in service rolls back
+        the same way a local retune would.  In-flight requests are untouched
+        (compiled programs re-trace lazily under the new policy).
+        """
+        from repro.core.faults import incident
+        from repro.core.retune import canary_deployment
+
+        rt = self.runtime
+        incumbent = self.deployment
+        snap = rt.telemetry()
+        gated: list[str] = []
+        rejected: list[str] = []
+        if self.canary and incumbent is not None:
+            for fam in snap.families():
+                verdict = canary_deployment(
+                    incumbent, candidate, snap, family=fam, runtime=rt
+                )
+                gated.append(fam)
+                if not verdict.ok:
+                    rejected.append(fam)
+                    rt.record_incident(incident(
+                        f"canary.{fam}", fam, None, verdict.reason,
+                        "candidate_rejected", device=rt.active_device()))
+        if rejected:
+            ev = RetuneEvent(self.steps, 0.0, 0.0, False, False,
+                             snap.n_events, len(incumbent.configs),
+                             rt.policy_epoch(), rejected=tuple(rejected),
+                             source=source)
+            self.retune_events.append(ev)
+            return ev
+        if incumbent is not None:
+            self._swap_history.append(incumbent)
+            self._incidents_at_swap = rt.incident_count()
+        if self.device is not None and rt.active_device() == self.device:
+            rt.install_for_device(self.device, candidate)  # registry hot-swap
+        else:
+            rt.install(candidate)
+        self.deployment = candidate
+        rt.clear_selection_log()  # fresh telemetry window for the new policy
+        self._prefill_cache.clear()
+        self._rejit_decode()
+        ev = RetuneEvent(self.steps, 0.0, 0.0, True, True, snap.n_events,
+                         len(candidate.configs) if hasattr(candidate, "configs") else 0,
+                         rt.policy_epoch(), families=tuple(gated), source=source)
+        self.retune_events.append(ev)
+        return ev
+
     # -- public ---------------------------------------------------------------
     def submit(
         self,
@@ -1113,6 +1216,12 @@ class ServingEngine:
         active lane decoded) — callers looping on ``step()`` should stop.
         """
         t0 = self._clock()
+        # A control-plane offer adopts on the step boundary: before any
+        # admission or decode of this round, so the whole step runs under one
+        # policy and no in-flight request straddles the swap mid-trace.
+        offer = self._take_offer()
+        if offer is not None:
+            self.adopt_deployment(offer[0], source=offer[1])
         # SLO check runs BEFORE admission: it sees the same step-time history
         # it would at the end of the previous step, but entering now means
         # this step's admissions and traces already run under the cap and the

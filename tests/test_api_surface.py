@@ -6,19 +6,25 @@ The snapshot covers the four entry layers of the redesigned API:
 ``repro`` (the facade), ``repro.core`` (the tuning pipeline),
 ``repro.kernels.ops`` (dispatch + the deprecated global shims),
 ``repro.core.faults`` (the failure-containment layer, which also absorbed
-the former ``repro.ft.runtime`` training-side fault-tolerance helpers), and
-``repro.serve`` (the fleet serving tier: paged KV pool, scheduler, router).
+the former ``repro.ft.runtime`` training-side fault-tolerance helpers),
+``repro.serve`` (the fleet serving tier: paged KV pool, scheduler, router),
+and ``repro.control`` (the tuning control plane: job service, artifact
+registry, telemetry federation).
 """
 import importlib
 
 import pytest
 
 REPRO_ALL = [
+    "ArtifactRegistry",
+    "ControlPlane",
+    "ControlPlaneClient",
     "Deployment",
     "DeploymentBundle",
     "EngineStatus",
     "FaultPlan",
     "KernelRuntime",
+    "PolicySubscriber",
     "Request",
     "Router",
     "ServingEngine",
@@ -129,6 +135,17 @@ SERVE_ALL = [
     "Ticket",
 ]
 
+CONTROL_ALL = [
+    "ArtifactRegistry",
+    "ArtifactVersion",
+    "ControlPlane",
+    "ControlPlaneClient",
+    "ControlPlaneError",
+    "Job",
+    "PolicySubscriber",
+    "content_version",
+]
+
 FAULTS_ALL = [
     "FAULT_KINDS",
     "ElasticPlan",
@@ -155,9 +172,10 @@ FAULTS_ALL = [
         ("repro.kernels.ops", OPS_ALL),
         ("repro.core.faults", FAULTS_ALL),
         ("repro.serve", SERVE_ALL),
+        ("repro.control", CONTROL_ALL),
     ],
     ids=["repro", "repro.core", "repro.kernels.ops", "repro.core.faults",
-         "repro.serve"],
+         "repro.serve", "repro.control"],
 )
 def test_public_surface_frozen(module, snapshot):
     mod = importlib.import_module(module)
@@ -169,7 +187,8 @@ def test_public_surface_frozen(module, snapshot):
 
 
 @pytest.mark.parametrize(
-    "module", ["repro", "repro.core", "repro.kernels.ops", "repro.serve"],
+    "module", ["repro", "repro.core", "repro.kernels.ops", "repro.serve",
+               "repro.control"],
 )
 def test_all_names_resolve(module):
     mod = importlib.import_module(module)

@@ -1,0 +1,308 @@
+"""Tuning control plane: registry versioning, job lifecycle, federation."""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import retune
+from repro.core.bundle import BundleFormatError, DeploymentBundle, parse_registry_uri
+from repro.core.dataset import build_model_dataset, synthetic_problems
+from repro.core.tuner import tune
+from repro.control import (
+    ArtifactRegistry,
+    ArtifactVersion,
+    ControlPlane,
+    ControlPlaneClient,
+    ControlPlaneError,
+    PolicySubscriber,
+    content_version,
+)
+
+
+@pytest.fixture(scope="module")
+def tuned_bundle():
+    ds = build_model_dataset(synthetic_problems(80), device_name="tpu_v5e")
+    res = tune(ds, n_kernels=6)
+    return DeploymentBundle({"tpu_v5e": res.deployment}, meta={"test": True})
+
+
+@pytest.fixture()
+def plane(tuned_bundle):
+    """A running control plane whose tuner seam returns the tuned bundle."""
+    p = ControlPlane(port=0, min_events=10, tuner=lambda spec: tuned_bundle)
+    p.start()
+    yield p
+    p.stop()
+
+
+def _shifted_snapshot(n: int = 100, seed: int = 1) -> retune.TelemetrySnapshot:
+    """Deep-k decode traffic, disjoint from the synthetic tuning mix."""
+    rng = np.random.default_rng(seed)
+    snap = retune.TelemetrySnapshot()
+    for _ in range(n):
+        p = (int(rng.choice([1, 2, 4])), int(rng.choice([8192, 16384])),
+             int(rng.choice([1024, 2048])), 1)
+        b = retune.shape_bucket(p)
+        snap.matmul_counts[b] = snap.matmul_counts.get(b, 0) + 1
+        snap.problems[b] = p
+        snap.n_events += 1
+    return snap
+
+
+# ---------------------------------------------------------------------------
+# content-hash versioning + the registry
+# ---------------------------------------------------------------------------
+def test_content_version_tracks_content():
+    blob = {"a": 1, "nested": {"x": [1, 2]}}
+    v1 = content_version(blob)
+    assert v1 == content_version({"nested": {"x": [1, 2]}, "a": 1})  # key order
+    assert v1 != content_version({**blob, "a": 2})
+    assert len(v1) == 12 and int(v1, 16) >= 0
+
+
+def test_publish_is_idempotent_on_content(tuned_bundle):
+    reg = ArtifactRegistry()
+    r1 = reg.publish("default", tuned_bundle, spec={"archs": ["a"]})
+    r2 = reg.publish("default", tuned_bundle, spec={"archs": ["a"]})
+    assert r1.version == r2.version and r1.seq == r2.seq == 0
+    assert [r.version for r in reg.versions("default")] == [r1.version]
+
+
+def test_changed_blob_mints_new_version(tuned_bundle):
+    reg = ArtifactRegistry()
+    r1 = reg.publish("default", tuned_bundle)
+    changed = DeploymentBundle(
+        dict(tuned_bundle.deployments), meta={**tuned_bundle.meta, "note": "v2"}
+    )
+    r2 = reg.publish("default", changed, parent=r1.version)
+    assert r2.version != r1.version
+    assert (r1.seq, r2.seq) == (0, 1)
+    assert reg.latest("default").version == r2.version
+    assert r2.lineage["parent"] == r1.version
+    rec, blob = reg.get("default", r1.version)  # older versions stay fetchable
+    assert rec.version == r1.version == content_version(blob)
+
+
+def test_registry_round_trips_through_disk(tmp_path, tuned_bundle):
+    reg = ArtifactRegistry(tmp_path)
+    rec = reg.publish("fleet", tuned_bundle, spec={"devices": ["tpu_v5e"]})
+    reborn = ArtifactRegistry(tmp_path)  # a restarted control plane
+    rec2, blob2 = reborn.get("fleet")
+    assert rec2 == ArtifactVersion.from_json(rec.to_json())
+    assert blob2 == tuned_bundle.to_blob()
+    assert reborn.get_bundle("fleet").provenance() == tuned_bundle.provenance()
+
+
+def test_unknown_artifact_and_version_raise(tuned_bundle):
+    reg = ArtifactRegistry()
+    with pytest.raises(KeyError):
+        reg.get("nope")
+    reg.publish("default", tuned_bundle)
+    with pytest.raises(KeyError):
+        reg.get("default", "cafecafecafe")
+
+
+# ---------------------------------------------------------------------------
+# registry URIs
+# ---------------------------------------------------------------------------
+def test_parse_registry_uri():
+    assert parse_registry_uri("registry://h:80/fleet/abc123") == (
+        "http://h:80", "fleet", "abc123")
+    assert parse_registry_uri("registry://h:80/fleet") == (
+        "http://h:80", "fleet", "latest")
+    for bad in ("registry://h:80", "registry:///fleet", "file:///x"):
+        with pytest.raises(BundleFormatError):
+            parse_registry_uri(bad)
+
+
+def test_load_bundle_opens_registry_uri(plane, tuned_bundle):
+    import repro
+
+    client = ControlPlaneClient(plane.url)
+    job = client.submit({"kind": "tune", "name": "fleet"})
+    client.wait_job(job["id"], timeout=60)
+    uri = client.registry_uri("fleet")
+    assert uri.startswith("registry://") and uri.endswith("/fleet/latest")
+    bundle = repro.load_bundle(uri)
+    assert bundle.to_blob() == tuned_bundle.to_blob()  # byte-identical payload
+    # a plain http:// URL on the artifact route works too
+    ver = plane.registry.latest("fleet").version
+    direct = repro.load_bundle(f"{plane.url}/artifacts/fleet/{ver}")
+    assert direct.to_blob() == tuned_bundle.to_blob()
+
+
+def test_load_bundle_unreachable_registry_raises():
+    with pytest.raises(BundleFormatError):
+        DeploymentBundle.load("registry://127.0.0.1:9/missing/latest")
+
+
+# ---------------------------------------------------------------------------
+# job lifecycle over HTTP
+# ---------------------------------------------------------------------------
+def test_job_walks_queued_running_succeeded(plane):
+    client = ControlPlaneClient(plane.url)
+    job = client.submit({"kind": "tune", "name": "default"})
+    assert job["state"] == "queued"
+    done = client.wait_job(job["id"], timeout=60)
+    assert done["state"] == "succeeded"
+    assert [s for s, _t in done["history"]] == ["queued", "running", "succeeded"]
+    ts = [t for _s, t in done["history"]]
+    assert ts == sorted(ts)
+    assert done["artifact"]["name"] == "default"
+    assert done["artifact"]["version"] == plane.registry.latest("default").version
+
+
+def test_crashing_tune_becomes_failed_job(tuned_bundle):
+    def tuner(spec):
+        raise RuntimeError("benchmark harness exploded")
+
+    with ControlPlane(port=0, tuner=tuner) as plane:
+        client = ControlPlaneClient(plane.url)
+        job = client.submit({"kind": "tune"})
+        done = client.wait_job(job["id"], timeout=60)
+        assert done["state"] == "failed"
+        assert "RuntimeError" in done["error"]
+        assert "exploded" in done["error"]
+        assert [s for s, _t in done["history"]] == ["queued", "running", "failed"]
+        assert done["artifact"] is None
+
+
+def test_bad_specs_and_unknown_routes(plane):
+    client = ControlPlaneClient(plane.url)
+    with pytest.raises(ControlPlaneError, match="400"):
+        client.submit({"kind": "mystery"})
+    with pytest.raises(ControlPlaneError, match="400"):
+        client.submit({"kind": "retune"})  # no device
+    with pytest.raises(ControlPlaneError, match="404"):
+        client.job("job-9999")
+    with pytest.raises(ControlPlaneError, match="404"):
+        client.artifact("never-published")
+
+
+def test_health_counts_jobs_and_artifacts(plane):
+    client = ControlPlaneClient(plane.url)
+    job = client.submit({"kind": "tune", "name": "default"})
+    client.wait_job(job["id"], timeout=60)
+    health = client.healthz()
+    assert health["status"] == "ok"
+    assert health["jobs"]["succeeded"] >= 1
+    assert health["artifacts"]["default"] == 1
+    assert health["uptime_s"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# telemetry federation -> drift -> retune -> policy push
+# ---------------------------------------------------------------------------
+def test_federation_merges_and_triggers_once_over_min_events(plane):
+    client = ControlPlaneClient(plane.url)
+    job = client.submit({"kind": "tune", "name": "default"})
+    client.wait_job(job["id"], timeout=60)
+
+    ack1 = client.post_telemetry("tpu_v5e", _shifted_snapshot(6, seed=1), host="h1")
+    assert ack1["merged_events"] == 6 and ack1["hosts"] == 1
+    assert ack1["retune_job"] is None  # under the min-events floor
+    assert not any(r["triggered"] for r in ack1["drift"].values())
+
+    ack2 = client.post_telemetry("tpu_v5e", _shifted_snapshot(6, seed=2), host="h2")
+    assert ack2["merged_events"] == 12 and ack2["hosts"] == 2
+    assert ack2["drift"]["matmul"]["triggered"]
+    assert ack2["retune_job"] is not None
+
+    # a third post while the retune is pending does not double-schedule
+    ack3 = client.post_telemetry("tpu_v5e", _shifted_snapshot(6, seed=3), host="h3")
+    done = client.wait_job(ack2["retune_job"], timeout=120)
+    assert ack3["retune_job"] in (None, ack2["retune_job"])
+    assert done["state"] == "succeeded"
+    art = done["artifact"]
+    assert art["parent"] == plane.registry.versions("default")[0].version
+    assert art["families"] == ["matmul"]
+    assert len(plane.registry.versions("default")) == 2
+
+
+def test_retune_without_telemetry_fails(plane):
+    client = ControlPlaneClient(plane.url)
+    job = client.submit({"kind": "tune", "name": "default"})
+    client.wait_job(job["id"], timeout=60)
+    bad = client.submit({"kind": "retune", "device": "tpu_v5e"})
+    done = client.wait_job(bad["id"], timeout=60)
+    assert done["state"] == "failed"
+    assert "telemetry" in done["error"]
+
+
+def test_policy_longpoll_delivers_and_times_out(plane):
+    client = ControlPlaneClient(plane.url)
+    assert client.policy("tpu_v5e", after=0, timeout=0.0) is None  # 204: empty board
+    job = client.submit({"kind": "tune", "name": "default"})
+    client.wait_job(job["id"], timeout=60)
+    ent = client.policy("tpu_v5e", after=0, timeout=5.0)
+    assert ent["seq"] == 1 and ent["job"] == job["id"]
+    assert ent["version"] == plane.registry.latest("default").version
+    assert client.policy("tpu_v5e", after=ent["seq"], timeout=0.0) is None
+
+    # a parked long-poll wakes when the board advances
+    got = {}
+
+    def poll():
+        got["ent"] = client.policy("tpu_v5e", after=ent["seq"], timeout=20.0)
+
+    t = threading.Thread(target=poll)
+    t.start()
+    time.sleep(0.2)
+    client.post_telemetry("tpu_v5e", _shifted_snapshot(40), host="h1")
+    t.join(timeout=30.0)
+    assert not t.is_alive()
+    assert got["ent"] is not None and got["ent"]["seq"] == 2
+
+
+def test_subscriber_applies_policy_to_runtime(plane, tuned_bundle):
+    client = ControlPlaneClient(plane.url)
+    job = client.submit({"kind": "tune", "name": "default"})
+    client.wait_job(job["id"], timeout=60)
+
+    rt = tuned_bundle.runtime(device="tpu_v5e", name="sub-test")
+    epoch0 = rt.policy_epoch()
+    with PolicySubscriber(client, "tpu_v5e", rt, poll_timeout=2.0) as sub:
+        # start_from="current" skips the bring-up announcement...
+        time.sleep(0.3)
+        assert sub.updates == []
+        # ...and delivers the retune announcement that follows
+        ack = client.post_telemetry("tpu_v5e", _shifted_snapshot(40), host="h1")
+        client.wait_job(ack["retune_job"], timeout=120)
+        deadline = time.monotonic() + 20.0
+        while time.monotonic() < deadline and not sub.updates:
+            time.sleep(0.1)
+    assert sub.errors == []
+    assert [u["seq"] for u in sub.updates] == [2]
+    assert sub.updates[0]["version"] == plane.registry.latest("default").version
+    assert rt.policy_epoch() > epoch0  # hot-swapped into the live registry
+
+
+def test_runtime_apply_policy_update_targets_device(tuned_bundle):
+    rt = tuned_bundle.runtime(device="tpu_v5e", name="apply-test")
+    dep, _ = tuned_bundle.deployment_for("tpu_v5e")
+    assert rt.apply_policy_update(dep, "tpu_v5e") == "tpu_v5e"
+    assert rt.active_device() == "tpu_v5e"
+
+
+# ---------------------------------------------------------------------------
+# HTTP edges
+# ---------------------------------------------------------------------------
+def test_telemetry_post_requires_device_and_snapshot(plane):
+    client = ControlPlaneClient(plane.url)
+    with pytest.raises(ControlPlaneError, match="400"):
+        client._request("POST", "/telemetry", {"device": "tpu_v5e"})
+    with pytest.raises(ControlPlaneError, match="400"):
+        client._request("POST", "/telemetry", {"snapshot": {}})
+
+
+def test_artifact_envelope_shape(plane):
+    client = ControlPlaneClient(plane.url)
+    job = client.submit({"kind": "tune", "name": "default"})
+    client.wait_job(job["id"], timeout=60)
+    env = client.artifact("default")
+    assert env["format"] == "artifact"
+    assert env["version"] == content_version(env["blob"])
+    assert json.dumps(env)  # the whole envelope is JSON-serializable
+    assert env["lineage"]["spec"]["name"] == "default"

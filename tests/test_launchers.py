@@ -114,3 +114,56 @@ def test_serve_engine_with_kv_quant():
                     max_new_tokens=4) for i in range(3)]
     eng.run(reqs)
     assert all(r.done and len(r.output) == 4 for r in reqs)
+
+
+def test_tune_cli_measure_budget_type():
+    import argparse
+
+    from repro.launch.tune import _measure_budget
+
+    assert _measure_budget("auto") == "auto"
+    assert _measure_budget("0.4") == 0.4
+    for bad in ("0", "1", "1.5", "-0.2", "most", ""):
+        with pytest.raises(argparse.ArgumentTypeError):
+            _measure_budget(bad)
+
+
+def test_ctl_cli_submit_status_artifacts(capsys):
+    from repro.control import ControlPlane
+    from repro.core.bundle import DeploymentBundle
+    from repro.core.dataset import build_model_dataset, synthetic_problems
+    from repro.core.tuner import tune
+    from repro.launch.ctl import main
+
+    ds = build_model_dataset(synthetic_problems(40), device_name="tpu_v5e")
+    bundle = DeploymentBundle({"tpu_v5e": tune(ds, n_kernels=4).deployment})
+    with ControlPlane(port=0, tuner=lambda spec: bundle) as plane:
+        main(["submit", "--url", plane.url, "--name", "fleet",
+              "--devices", "tpu_v5e", "--measure-budget", "auto", "--wait"])
+        out = capsys.readouterr().out
+        assert "job-0001 queued" in out and "job-0001 succeeded" in out
+        ver = plane.registry.latest("fleet").version
+        assert f"artifact fleet@{ver}" in out
+        assert f"registry://127.0.0.1:{plane.port}/fleet/{ver}" in out
+
+        main(["status", "--url", plane.url])
+        out = capsys.readouterr().out
+        assert '"status": "ok"' in out
+        assert "job-0001 [tune] succeeded -> fleet@" in out
+
+        main(["artifacts", "--url", plane.url])
+        assert f"fleet@{ver} seq=0" in capsys.readouterr().out
+
+
+def test_ctl_cli_submit_failed_job_exits_nonzero(capsys):
+    from repro.control import ControlPlane
+    from repro.launch.ctl import main
+
+    def tuner(spec):
+        raise ValueError("no benchmarks on this host")
+
+    with ControlPlane(port=0, tuner=tuner) as plane:
+        with pytest.raises(SystemExit):
+            main(["submit", "--url", plane.url, "--wait", "--timeout", "30"])
+        out = capsys.readouterr().out
+        assert "failed: ValueError: no benchmarks on this host" in out

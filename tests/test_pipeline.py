@@ -258,3 +258,56 @@ def test_measure_budget_zero_rows_still_yields_artifact():
     staged = tune_family("ssm_scan", transfer_from=full, measure_budget=0.01)
     assert staged.configs and staged.tree is not None
     assert staged.lineage["measured_fraction"] <= 0.01 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# auto-sized measurement budgets (measure_budget="auto")
+# ---------------------------------------------------------------------------
+def test_auto_measure_budget_scales_with_donor_error():
+    assert pl.auto_measure_budget(None) == pl.AUTO_BUDGET_DEFAULT
+    assert pl.auto_measure_budget(0.0) == pl.AUTO_BUDGET_FLOOR  # trusted donor
+    assert pl.auto_measure_budget(10.0) == pl.AUTO_BUDGET_CEIL  # junk donor
+    lo, hi = pl.auto_measure_budget(0.05), pl.auto_measure_budget(0.15)
+    assert pl.AUTO_BUDGET_FLOOR < lo < hi < pl.AUTO_BUDGET_CEIL
+
+
+def test_donor_model_error_reads_lineage():
+    donor = tune_for_archs(ARCHS, device_name="tpu_v5e", max_problems=30, families=[])
+    target = tune_for_archs(
+        ARCHS, device_name="tpu_v4", max_problems=30, families=[],
+        transfer_from=donor, measure_budget=0.4,
+    )
+    # a full-measure root records model_error=None (nothing model-filled)
+    assert pl.donor_model_error(donor) is None
+    err = pl.donor_model_error(target)
+    assert err is not None
+    assert err == target.deployment.meta["tuning_lineage"]["matmul"]["model_error"]
+    assert pl.donor_model_error(None) is None
+    assert pl.donor_model_error(object()) is None  # no lineage: no opinion
+
+
+def test_resolve_measure_budget_auto_semantics():
+    donor = tune_for_archs(ARCHS, device_name="tpu_v5e", max_problems=30, families=[])
+    # numeric and None pass through untouched
+    assert pl.resolve_measure_budget(0.3, donor) == 0.3
+    assert pl.resolve_measure_budget(None, donor) is None
+    # auto without a donor = bring-up root: measure in full
+    assert pl.resolve_measure_budget("auto", None) is None
+    # auto with a donor = sized from its recorded model_error (the root's
+    # identity lineage has none, so the default budget applies)
+    got = pl.resolve_measure_budget("auto", donor)
+    assert got == pl.auto_measure_budget(pl.donor_model_error(donor))
+    assert got == pl.AUTO_BUDGET_DEFAULT
+    assert pl.AUTO_BUDGET_FLOOR <= got <= pl.AUTO_BUDGET_CEIL
+
+
+def test_fleet_auto_budget_stamps_partial_measurement():
+    fleet = tune_fleet(
+        ARCHS, device_names=("tpu_v5e", "tpu_v4"), families=[],
+        transfer=True, measure_budget="auto", max_problems=30,
+    )
+    lin_root = fleet.results["tpu_v5e"].deployment.meta["tuning_lineage"]["matmul"]
+    lin_next = fleet.results["tpu_v4"].deployment.meta["tuning_lineage"]["matmul"]
+    assert lin_root["measured_fraction"] == 1.0  # donor-less root: full measure
+    assert lin_next["source_device"] == "tpu_v5e"
+    assert 0.0 < lin_next["measured_fraction"] < 1.0  # auto budget bit

@@ -524,3 +524,79 @@ def test_benchmark_runner_catches_module_systemexit(monkeypatch, capsys):
     rc = run_mod.main(["--only", "fig2"])
     assert rc == 1
     capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# telemetry wire form + federation merge (control-plane transport)
+# ---------------------------------------------------------------------------
+def _host_snapshot(seed: int) -> retune.TelemetrySnapshot:
+    rng = np.random.default_rng(seed)
+    snap = retune.TelemetrySnapshot()
+    for _ in range(30):
+        fam = str(rng.choice(["matmul", "ssm_scan"]))
+        p = (int(rng.choice([1, 8, 64])), int(rng.choice([512, 4096])),
+             int(rng.choice([512, 2048])), 1)
+        b = retune.shape_bucket(p)
+        counts = snap.counts.setdefault(fam, {})
+        counts[b] = counts.get(b, 0) + 1
+        snap.family_problems.setdefault(fam, {})[b] = p
+        snap.n_events += 1
+    snap.incidents.append({"seq": seed, "kind": "guarded", "site": "test"})
+    snap.observed[(1, 2, 3, 0)] = [(None, 1e-3 * seed, 3)]
+    return snap
+
+
+def test_snapshot_wire_form_round_trips_exactly():
+    snap = _host_snapshot(3)
+    wire = snap.to_json()
+    assert wire["version"] == 1
+    back = retune.TelemetrySnapshot.from_json(json.loads(json.dumps(wire)))
+    assert back.counts == snap.counts
+    assert back.family_problems == snap.family_problems
+    assert back.incidents == snap.incidents
+    assert back.n_events == snap.n_events
+    # a second trip is a fixed point (configs already name-flattened)
+    assert back.to_json() == wire
+
+
+def test_snapshot_merge_is_commutative_across_arrival_orders():
+    import itertools
+
+    hosts = [_host_snapshot(s) for s in (1, 2, 3)]
+    aggregates = []
+    for order in itertools.permutations(range(3)):
+        agg = retune.TelemetrySnapshot()
+        for i in order:
+            agg.merge(retune.TelemetrySnapshot.from_json(hosts[i].to_json()))
+        aggregates.append(agg.to_json())
+    assert all(a == aggregates[0] for a in aggregates[1:])
+    assert aggregates[0]["n_events"] == sum(h.n_events for h in hosts)
+
+
+def test_snapshot_merge_accumulates_counts_and_keeps_max_problem():
+    a, b = retune.TelemetrySnapshot(), retune.TelemetrySnapshot()
+    p_small, p_big = (8, 512, 512, 1), (12, 700, 700, 1)
+    bkt = retune.shape_bucket(p_small)
+    assert bkt == retune.shape_bucket(p_big)  # same bucket, different members
+    a.matmul_counts[bkt] = 2
+    a.problems[bkt] = p_small
+    a.n_events = 2
+    b.matmul_counts[bkt] = 3
+    b.problems[bkt] = p_big
+    b.n_events = 3
+    a.merge(b)
+    assert a.matmul_counts[bkt] == 5 and a.n_events == 5
+    assert a.problems[bkt] == p_big  # deterministic representative
+
+
+def test_drift_verdict_identical_for_any_merge_order(tuned):
+    res, _ = tuned
+    hosts = [_shifted_snapshot(40, seed=s) for s in (1, 2)]
+    ab = retune.TelemetrySnapshot()
+    ab.merge(hosts[0]).merge(hosts[1])
+    ba = retune.TelemetrySnapshot()
+    ba.merge(hosts[1]).merge(hosts[0])
+    ra = retune.detect_drift(ab, res.deployment, min_events=10)
+    rb = retune.detect_drift(ba, res.deployment, min_events=10)
+    assert (ra.score, ra.n_events, ra.triggered) == (rb.score, rb.n_events, rb.triggered)
+    assert ra.triggered
